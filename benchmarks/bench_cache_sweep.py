@@ -1,0 +1,66 @@
+"""Paper Table 6 — dual-format adaptive cache vs single-format baselines
+across cache sizes (0.1%-10% of WSS), trace-driven simulation
+(T_decode=40 ms, T_fetch=140 ms as in §6.5).  Adds the mixed-format
+single-LRU strawman the paper rejects in §4.2 (beyond-paper ablation).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import Rows, Timer, bench_trace, scale
+from repro.core.policies import MixedFormatLRU
+from repro.core.replay import ReplayConfig, replay
+from repro.core.tuner import TunerConfig
+
+IMG_B, LAT_B = 1.4e6, 0.28e6
+T_DEC, T_FETCH = 40.0, 140.0
+
+
+def run() -> Rows:
+    rows = Rows()
+    tr = bench_trace()
+    ids = tr.object_ids[:scale(2_000_000, 10_000_000)]
+    wss = len(np.unique(ids)) * IMG_B
+    window = scale(100_000, 1_000_000)
+
+    for frac in (0.001, 0.005, 0.01, 0.02, 0.05, 0.10):
+        cap = wss * frac
+        variants = {
+            "img_only": ReplayConfig(cache_bytes=cap, alpha0=1.0,
+                                     adaptive=False, admit_on_miss="image"),
+            "latent_only": ReplayConfig(cache_bytes=cap, alpha0=0.0,
+                                        adaptive=False),
+            "adaptive": ReplayConfig(cache_bytes=cap, alpha0=0.5,
+                                     adaptive=True,
+                                     tuner=TunerConfig(window=window)),
+        }
+        for name, cfg in variants.items():
+            with Timer() as t:
+                r = replay(ids, cfg)
+            rows.add(f"sweep.{name}.{frac:g}.mean_ms", t.us / r.n,
+                     round(r.mean_ms, 1))
+        # mixed-format single LRU (the §4.2 strawman)
+        pol = MixedFormatLRU(cap, IMG_B, LAT_B, promote_threshold=8)
+        cost = 0.0
+        for oid in ids:
+            oid = int(oid)
+            fmt = pol.format_of(oid)
+            hit = pol.access(oid)
+            if hit and fmt == "image":
+                pass
+            elif hit:
+                cost += T_DEC
+            else:
+                cost += T_DEC + T_FETCH
+        rows.add(f"sweep.mixed_lru.{frac:g}.mean_ms",
+                 derived=round(cost / len(ids), 1))
+    return rows
+
+
+def main():
+    run().print()
+
+
+if __name__ == "__main__":
+    main()

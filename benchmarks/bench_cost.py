@@ -1,0 +1,39 @@
+"""Paper Fig. 8 + §6.4 — long-term cost projection to 2050, normalized so
+ImgStore at trace end (2026.25) = 1.  Four setups x two price scenarios."""
+
+from __future__ import annotations
+
+from benchmarks.common import Rows
+from repro.core.cost_model import (CostParams, CostScenario,
+                                   normalized_horizons, project)
+
+
+def run() -> Rows:
+    rows = Rows()
+    for tag, sc in (("const", CostScenario()),
+                    ("decline", CostScenario(gpu_price_decline_yr=0.20,
+                                             storage_price_decline_yr=0.10))):
+        curves = project(CostParams(), sc)
+        norm = normalized_horizons(curves)
+        for setup, vals in norm.items():
+            for yr, v in vals.items():
+                rows.add(f"cost.{tag}.{setup}.{yr:g}", derived=round(v, 2))
+        # headline savings
+        ref = norm["imgstore"][2050.0]
+        for setup in ("lb_5090", "lb_h100", "imgstore_glacier"):
+            sav = 100 * (1 - norm[setup][2050.0] / ref)
+            rows.add(f"cost.{tag}.{setup}.saving_2050_pct",
+                     derived=round(sav, 1))
+        sav_vs_glacier = 100 * (1 - norm["lb_5090"][2050.0]
+                                / norm["imgstore_glacier"][2050.0])
+        rows.add(f"cost.{tag}.lb5090_vs_glacier_pct",
+                 derived=round(sav_vs_glacier, 1))
+    return rows
+
+
+def main():
+    run().print()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""Paper Table 1c — decode vs generation cost.
+
+No GPU here, so the per-image decode latency is (a) derived from the v5e
+roofline of our decoder (compute-bound: conv FLOPs / peak) — this is the
+T_decode the cluster simulator uses — and (b) cross-checked by measuring
+the actual jitted decode on CPU at small resolution and verifying the
+compute-bound scaling (latency ~ linear in batch, quadratic in res)."""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import Rows, Timer, scale
+from repro.vae.model import VAE, VAEConfig
+from repro.vae.serve import (decode_ms_estimate, decoder_bytes_per_image,
+                             decoder_flops_per_image)
+
+
+def run() -> Rows:
+    rows = Rows()
+    for res in (512, 1024):
+        est = decode_ms_estimate(res)
+        rows.add(f"decode.v5e.{res}.flops_g", derived=round(est["flops"] / 1e9, 1))
+        rows.add(f"decode.v5e.{res}.compute_ms",
+                 derived=round(est["compute_ms"], 1))
+        rows.add(f"decode.v5e.{res}.memory_ms",
+                 derived=round(est["memory_ms"], 1))
+        rows.add(f"decode.v5e.{res}.decode_ms",
+                 derived=round(est["decode_ms"], 1))
+    # paper-reported GPU decode times for context
+    rows.add("decode.paper.h100_ms", derived=32.6)
+    rows.add("decode.paper.rtx5090_ms", derived=47.3)
+    rows.add("decode.paper.generation_ms", derived=3905)
+    rows.add("decode.ratio_generation_over_decode", derived=round(
+        3905 / decode_ms_estimate(1024)["decode_ms"], 0))
+
+    # CPU cross-check: small decoder, batch scaling ~ linear (compute-bound)
+    cfg = VAEConfig(name="tiny", latent_channels=4,
+                    block_out_channels=(32, 64), layers_per_block=1,
+                    groups=8)
+    vae = VAE(cfg, with_encoder=False)
+    times = {}
+    for b in (1, 2, 4):
+        z = jnp.zeros((b, 16, 16, 4), jnp.float32)
+        vae.decode(z).block_until_ready()
+        with Timer() as t:
+            for _ in range(5):
+                vae.decode(z).block_until_ready()
+        times[b] = t.us / 5
+        rows.add(f"decode.cpu_tiny.b{b}.us", times[b], round(times[b], 0))
+    rows.add("decode.cpu_scaling_b4_over_b1",
+             derived=round(times[4] / times[1], 2))
+    return rows
+
+
+def main():
+    run().print()
+
+
+if __name__ == "__main__":
+    main()

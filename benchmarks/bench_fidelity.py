@@ -1,0 +1,106 @@
+"""Paper Fig. 12 / §6.6 — reconstruction fidelity.
+
+(a) decode determinism: the latent codec is bit-exact (asserted), so
+    fidelity loss can only come from numerics; we emulate the paper's
+    cross-GPU study (H100 vs L4 FMA ordering) by decoding the same latent
+    at fp32 vs bf16 weights and measuring the pixel-delta distribution;
+(b) LatentBox (lossless latent) vs lossy codecs (JPEG-class q50/q95) at
+    comparable sizes: PSNR / SSIM against the original decode.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import Rows, Timer, scale
+from repro.compression.latentcodec import compress_latent, decompress_latent
+from repro.compression.lossy import jpeg_like
+from repro.compression.metrics import psnr, ssim
+from repro.compression.png_proxy import png_like_size
+from repro.vae.model import VAE, VAEConfig, decode
+
+
+def to_u8(img_pm1: np.ndarray) -> np.ndarray:
+    return np.clip((img_pm1 + 1.0) * 127.5, 0, 255).astype(np.uint8)
+
+
+def run() -> Rows:
+    from benchmarks.bench_storage import synth_image
+    rows = Rows()
+    rng = np.random.default_rng(1)
+    res = 256
+    n = scale(4, 10)
+    vae = VAE(seed=0)
+
+    deltas = []
+    ps_lossless, ps_j95, ps_j50 = [], [], []
+    ss_lossless, ss_j95 = [], []
+    sz_j95, sz_j50, sz_png, sz_lat = [], [], [], []
+    for i in range(n):
+        img = synth_image(rng, res)
+        x = jnp.asarray(img, jnp.float32)[None] / 127.5 - 1.0
+        z = np.asarray(vae.encode_mean(x))[0].astype(np.float16)
+
+        blob = compress_latent(z)
+        z2 = decompress_latent(blob)
+        assert np.array_equal(z, z2), "latent codec must be bit-exact"
+        sz_lat.append(len(blob))
+        sz_png.append(png_like_size(img))
+
+        ref = to_u8(np.asarray(vae.decode(jnp.asarray(z2,
+                                                      jnp.float32)[None]))[0])
+        # (a) numerics: decode with bf16 weights (stack-variation proxy)
+        dec_bf16 = jax.tree.map(lambda p: p.astype(jnp.bfloat16), vae.decoder)
+        alt = to_u8(np.asarray(decode(
+            dec_bf16, jnp.asarray(z2, jnp.bfloat16)[None],
+            dataclasses.replace(vae.cfg, dtype=jnp.bfloat16)))[0])
+        deltas.append((alt.astype(int) - ref.astype(int)).ravel())
+        ps_lossless.append(psnr(ref, alt))
+        ss_lossless.append(ssim(ref, alt))
+
+        # (b) lossy codecs on the reference decode
+        s95, r95 = jpeg_like(ref, quality=95)
+        s50, r50 = jpeg_like(ref, quality=50)
+        sz_j95.append(s95)
+        sz_j50.append(s50)
+        ps_j95.append(psnr(ref, r95))
+        ss_j95.append(ssim(ref, r95))
+        ps_j50.append(psnr(ref, r50))
+
+    d = np.concatenate(deltas)
+    rows.add("fidelity.bitexact_latent", derived=1)
+    rows.add("fidelity.pixel_unchanged_frac",
+             derived=round(float(np.mean(d == 0)), 3))
+    rows.add("fidelity.pixel_within_pm3_frac",
+             derived=round(float(np.mean(np.abs(d) <= 3)), 4))
+    rows.add("fidelity.stackvar_psnr_db",
+             derived=round(float(np.mean(ps_lossless)), 1))
+    rows.add("fidelity.stackvar_ssim",
+             derived=round(float(np.mean(ss_lossless)), 4))
+    rows.add("fidelity.jpeg_q95_psnr_db",
+             derived=round(float(np.mean(ps_j95)), 1))
+    rows.add("fidelity.jpeg_q95_ssim", derived=round(float(np.mean(ss_j95)), 4))
+    rows.add("fidelity.jpeg_q50_psnr_db",
+             derived=round(float(np.mean(ps_j50)), 1))
+    rows.add("fidelity.size_latent_kb",
+             derived=round(float(np.mean(sz_lat)) / 1024, 1))
+    rows.add("fidelity.size_jpeg_q95_kb",
+             derived=round(float(np.mean(sz_j95)) / 1024, 1))
+    rows.add("fidelity.size_jpeg_q50_kb",
+             derived=round(float(np.mean(sz_j50)) / 1024, 1))
+    rows.add("fidelity.size_png_kb",
+             derived=round(float(np.mean(sz_png)) / 1024, 1))
+    return rows
+
+
+def main():
+    run().print()
+
+
+if __name__ == "__main__":
+    main()

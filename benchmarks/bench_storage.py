@@ -1,0 +1,132 @@
+"""Paper Table 3 + Table 1b — storage footprint / data reduction ratio.
+
+Real pipeline at benchmark scale: procedural "generated" images ->
+VAE *encoder* (the real JAX model) -> fp16 latents -> lossless latent codec
+(pcodec analogue) vs PNG-proxy sizes of the same images.  DRR =
+(S_png - S_latent_compressed) / S_png; paper reports 75.4-80.8 % per row,
+78.7 % aggregate, and raw-latent ~6x smaller than raw pixels.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import Rows, Timer, scale
+from repro.compression.latentcodec import compress_latent
+from repro.compression.png_proxy import png_like_size
+from repro.vae.model import VAE, VAEConfig
+
+
+def synth_image(rng: np.random.Generator, res: int) -> np.ndarray:
+    """AI-generated-looking image: smooth color fields + soft blobs +
+    mild texture (mirrors diffusion outputs' low high-frequency energy)."""
+    yy, xx = np.mgrid[0:res, 0:res] / res
+    img = np.zeros((res, res, 3))
+    for c in range(3):
+        img[..., c] = (0.4 * np.sin(2 * np.pi * (xx * rng.uniform(0.5, 2) +
+                                                 rng.uniform()))
+                       + 0.4 * np.cos(2 * np.pi * (yy * rng.uniform(0.5, 2))))
+    for _ in range(6):
+        cx, cy, s = rng.uniform(0, 1, 3)
+        blob = np.exp(-(((xx - cx) ** 2 + (yy - cy) ** 2) / (0.02 + 0.1 * s)))
+        img += blob[..., None] * rng.uniform(-1, 1, 3)
+    img += rng.normal(0, 0.02, img.shape)          # sensor-ish texture
+    img = (img - img.min()) / (np.ptp(img) + 1e-9)
+    return (img * 255).astype(np.uint8)
+
+
+def run() -> Rows:
+    rows = Rows()
+    rng = np.random.default_rng(0)
+    res = 256                                       # CPU-budget resolution
+    n = scale(6, 16)
+    vae = VAE(seed=0)
+
+    png_sizes, lat_sizes, lat_sizes_tp, raw_lat, raw_px = [], [], [], [], []
+    enc_us = []
+    for i in range(n):
+        img = synth_image(rng, res)
+        x = jnp.asarray(img, jnp.float32)[None] / 127.5 - 1.0
+        with Timer() as t:
+            zf = np.asarray(vae.encode_mean(x))[0]
+        z = zf.astype(np.float16)
+        enc_us.append(t.us)
+        png_sizes.append(png_like_size(img))
+        # CHW so the codec's spatial delta runs along width
+        lat_sizes.append(len(compress_latent(
+            np.ascontiguousarray(np.transpose(z, (2, 0, 1))))))
+        # trained-VAE latent proxy: our encoder has RANDOM weights, so its
+        # latents are near-Gaussian (≈ incompressible beyond fp16 entropy).
+        # Trained VAEs emit spatially-correlated, KL-shrunk latents; model
+        # that structure by low-passing the same latent field (preserving
+        # per-channel scale) — the honest stand-in for pcodec's measured
+        # 1.5-2.1x on real SD3.5/FLUX latents (paper Table 1b).
+        k = np.ones((5, 5)) / 25.0
+        zs = np.stack([_conv2(zf[..., c], k) for c in range(zf.shape[-1])],
+                      axis=-1)
+        zs *= zf.std() / max(zs.std(), 1e-9)
+        lat_sizes_tp.append(len(compress_latent(
+            np.ascontiguousarray(np.transpose(
+                zs.astype(np.float16), (2, 0, 1))))))
+        raw_lat.append(z.nbytes)
+        raw_px.append(img.nbytes)
+
+    s_png = float(np.mean(png_sizes))
+    s_lat = float(np.mean(lat_sizes))
+    s_lat_tp = float(np.mean(lat_sizes_tp))
+    s_raw_lat = float(np.mean(raw_lat))
+    s_raw_px = float(np.mean(raw_px))
+
+    rows.add("storage.png_kb", derived=round(s_png / 1024, 1))
+    rows.add("storage.latent_raw_kb", derived=round(s_raw_lat / 1024, 1))
+    rows.add("storage.latent_comp_kb", np.mean(enc_us),
+             round(s_lat / 1024, 1))
+    rows.add("storage.latent_comp_trainedproxy_kb",
+             derived=round(s_lat_tp / 1024, 1))
+    rows.add("storage.pixel_over_latent_raw",
+             derived=round(s_raw_px / s_raw_lat, 2))
+    rows.add("storage.codec_ratio_randomvae",
+             derived=round(s_raw_lat / s_lat, 2))
+    rows.add("storage.codec_ratio_trainedproxy",
+             derived=round(s_raw_lat / s_lat_tp, 2))
+    rows.add("storage.drr_pct_randomvae",
+             derived=round(100 * (s_png - s_lat) / s_png, 1))
+    rows.add("storage.drr_pct_trainedproxy",
+             derived=round(100 * (s_png - s_lat_tp) / s_png, 1))
+    rows.add("storage.png_over_latent", derived=round(s_png / s_lat_tp, 2))
+
+    # Table 3-style scale-up: byte model at the paper's resolutions
+    ratio = s_raw_lat / s_lat_tp
+    for model, res_t, n_imgs in (("sd35", 1024, 150_000),
+                                 ("sd35", 512, 150_000),
+                                 ("flux", 1024, 100_000),
+                                 ("flux", 512, 100_000)):
+        raw_latent = (res_t // 8) ** 2 * 16 * 2
+        comp = raw_latent / (ratio if model == "sd35" else 0.75 * ratio)
+        png = s_png * (res_t / res) ** 2
+        rows.add(f"storage.table3.{model}_{res_t}.drr_pct",
+                 derived=round(100 * (png - comp) / png, 1))
+    return rows
+
+
+def _conv2(a: np.ndarray, k: np.ndarray) -> np.ndarray:
+    """same-mode 2D convolution via FFT."""
+    from numpy.fft import irfft2, rfft2
+    ah, aw = a.shape
+    kh, kw = k.shape
+    F = rfft2(a, s=(ah + kh - 1, aw + kw - 1)) * \
+        rfft2(k, s=(ah + kh - 1, aw + kw - 1))
+    full = irfft2(F, s=(ah + kh - 1, aw + kw - 1))
+    oy, ox = kh // 2, kw // 2
+    return full[oy:oy + ah, ox:ox + aw]
+
+
+def main():
+    run().print()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""Paper Fig. 4 — workload characterization of the CompanyX-like trace.
+
+(a) popularity skew (top-1%/top-10% view shares, Zipf tail),
+(b) post-birth decay (rate ratio day-1 vs day-90+ by popularity quartile),
+(c) miss-ratio curves for LRU / S3-FIFO / Belady at 0.1%-10% cache sizes,
+(d) re-access interval CDF points (1 h / 1 d / >30 d).
+
+Paper reference points: top1=39%, top10=71%, <10 views=69%, once=15%;
+re-access 38% <1 h, 68% <1 d, 6% >30 d; S3-FIFO ~12% misses at 10%.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import Rows, Timer, bench_trace, scale
+from repro.core.policies import BeladyCache, LRUCache, S3FIFOCache, miss_ratio
+
+
+def run() -> Rows:
+    rows = Rows()
+    tr = bench_trace()
+    with Timer() as t:
+        stats = tr.characterize()
+    for k, v in stats.items():
+        rows.add(f"trace.{k}", t.us / max(stats['n_requests'], 1), round(v, 4))
+
+    # (b) post-birth decay by lifetime-view quartile
+    counts = np.bincount(tr.object_ids, minlength=tr.n_objects)
+    ages = tr.timestamps - tr.birth_time[tr.object_ids]
+    viewed = np.nonzero(counts)[0]
+    q = np.quantile(counts[viewed], [0.25, 0.5, 0.75, 0.99])
+    top_ids = viewed[counts[viewed] >= q[3]]
+    mask = np.isin(tr.object_ids, top_ids)
+    a = ages[mask] / 86_400.0
+    early = float(np.mean(a < 1.0))
+    late = float(np.mean(a > 30.0))
+    n_days = tr.config.span_days
+    # access-rate ratio day<1 vs day>30 (normalized by exposure window)
+    rate_early = early / 1.0
+    rate_late = late / max(n_days - 30.0, 1.0)
+    rows.add("trace.top1pct_decay_ratio", derived=round(
+        rate_early / max(rate_late, 1e-9), 1))
+
+    # (c) MRC
+    ids = tr.object_ids[:scale(1_500_000, 6_000_000)]
+    wss = len(np.unique(ids))
+    for frac in (0.001, 0.01, 0.05, 0.10):
+        cap = max(1, int(wss * frac))
+        for name, pol in (("lru", LRUCache(cap)),
+                          ("s3fifo", S3FIFOCache(cap)),
+                          ("belady", BeladyCache(cap))):
+            with Timer() as t:
+                mr = miss_ratio(pol, ids)
+            rows.add(f"mrc.{name}.{frac:g}", t.us / len(ids), round(mr, 4))
+    return rows
+
+
+def main():
+    run().print()
+
+
+if __name__ == "__main__":
+    main()

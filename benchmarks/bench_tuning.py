@@ -1,0 +1,85 @@
+"""Paper Fig. 9 (adaptive vs oracle static alpha + trajectory) and
+Fig. 11 (sensitivity to Delta, W, tau, h)."""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from benchmarks.common import Rows, Timer, bench_trace, scale
+from repro.core.replay import ReplayConfig, replay, sweep_static_alpha
+from repro.core.tuner import TunerConfig
+
+IMG_B = 1.4e6
+
+
+def run(sweep: bool = True) -> Rows:
+    rows = Rows()
+    tr = bench_trace()
+    ids = tr.object_ids[:scale(2_000_000, 10_000_000)]
+    wss = len(np.unique(ids)) * IMG_B
+    cap = 0.01 * wss
+    window = scale(100_000, 1_000_000)
+
+    # --- Fig. 9: adaptive vs oracle-picked static
+    stat = sweep_static_alpha(ids, [0.3, 0.4, 0.5, 0.6, 0.7],
+                              ReplayConfig(cache_bytes=cap))
+    best_alpha, best = min(stat.items(), key=lambda kv: kv[1].mean_ms)
+    rows.add("tuning.best_static_alpha", derived=best_alpha)
+    rows.add("tuning.best_static_mean_ms", derived=round(best.mean_ms, 2))
+
+    ad_cfg = ReplayConfig(cache_bytes=cap, adaptive=True,
+                          tuner=TunerConfig(window=window))
+    with Timer() as t:
+        ad = replay(ids, ad_cfg)
+    rows.add("tuning.adaptive_mean_ms", t.us / ad.n, round(ad.mean_ms, 2))
+    rows.add("tuning.adaptive_vs_static_pct", derived=round(
+        100 * (best.mean_ms - ad.mean_ms) / best.mean_ms, 2))
+    # window-win fraction vs the oracle static
+    sb = stat[best_alpha]
+    m = min(len(ad.window_mean_ms), len(sb.window_mean_ms))
+    wins = float(np.mean(ad.window_mean_ms[:m] <= sb.window_mean_ms[:m]))
+    rows.add("tuning.window_win_frac", derived=round(wins, 3))
+    rows.add("tuning.alpha_trajectory", derived="|".join(
+        f"{a:.2f}" for a in ad.window_alpha[:: max(1, len(ad.window_alpha)
+                                                   // 12)]))
+
+    if not sweep:
+        return rows
+
+    # --- Fig. 11: parameter sensitivity
+    base = dict(cache_bytes=cap, adaptive=True)
+
+    def one(name, **tuner_kw):
+        cfg = ReplayConfig(**base, tuner=TunerConfig(window=window,
+                                                     **tuner_kw))
+        r = replay(ids, cfg)
+        rows.add(f"sensitivity.{name}", derived=round(r.mean_ms, 2))
+
+    for step in (0.001, 0.005, 0.02, 0.05):
+        one(f"delta.{step:g}", step=step)
+    for w in (scale(10_000, 10_000), scale(50_000, 200_000),
+              scale(200_000, 2_000_000)):
+        cfg = ReplayConfig(**base, tuner=TunerConfig(window=w))
+        r = replay(ids, cfg)
+        rows.add(f"sensitivity.window.{w}", derived=round(r.mean_ms, 2))
+    for tau in (0.01, 0.05, 0.1, 0.3):
+        cfg = dataclasses.replace(ReplayConfig(**base), tau=tau,
+                                  tuner=TunerConfig(window=window))
+        r = replay(ids, cfg)
+        rows.add(f"sensitivity.tau.{tau:g}", derived=round(r.mean_ms, 2))
+    for h in (1, 4, 8, 32):
+        cfg = dataclasses.replace(ReplayConfig(**base), promote_threshold=h,
+                                  tuner=TunerConfig(window=window))
+        r = replay(ids, cfg)
+        rows.add(f"sensitivity.h.{h}", derived=round(r.mean_ms, 2))
+    return rows
+
+
+def main():
+    run().print()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,73 @@
+"""Shared benchmark plumbing: trace cache, CSV rows, scale control."""
+
+from __future__ import annotations
+
+import os
+import time
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+
+from repro.trace.synth import SyntheticTrace, TraceConfig, generate_trace
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts")
+SCALE = os.environ.get("REPRO_BENCH_SCALE", "small")   # small|full
+
+
+def scale(small, full):
+    return full if SCALE == "full" else small
+
+
+_TRACE_CACHE: Dict[str, SyntheticTrace] = {}
+
+
+def bench_trace(name: str = "main") -> SyntheticTrace:
+    """The CompanyX stand-in trace, cached on disk across benchmark runs."""
+    if name in _TRACE_CACHE:
+        return _TRACE_CACHE[name]
+    cfg = TraceConfig(
+        n_objects=scale(150_000, 600_000),
+        n_requests=scale(3_000_000, 12_000_000),
+        span_days=scale(120.0, 360.0),
+        seed=7)
+    os.makedirs(ART, exist_ok=True)
+    path = os.path.join(ART, f"trace_{name}_{SCALE}.npz")
+    if os.path.exists(path):
+        tr = SyntheticTrace.load(path)
+    else:
+        tr = generate_trace(cfg)
+        tr.save(path)
+    _TRACE_CACHE[name] = tr
+    return tr
+
+
+class Rows:
+    """Collects ``name,us_per_call,derived`` CSV rows."""
+
+    def __init__(self):
+        self.rows: List[str] = []
+
+    def add(self, name: str, us_per_call: float = float("nan"),
+            derived: Any = "") -> None:
+        self.rows.append(f"{name},{us_per_call:.3f},{derived}")
+
+    def extend(self, other: "Rows") -> None:
+        self.rows.extend(other.rows)
+
+    def print(self) -> None:
+        print("name,us_per_call,derived")
+        for r in self.rows:
+            print(r)
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *a):
+        self.s = time.perf_counter() - self.t0
+
+    @property
+    def us(self) -> float:
+        return self.s * 1e6

@@ -1,0 +1,42 @@
+"""Assignment §Roofline — three-term roofline per (arch x shape x mesh)
+from the dry-run artifacts, baseline vs optimized, printed as CSV rows
+plus the human-readable table (EXPERIMENTS.md §Roofline)."""
+
+from __future__ import annotations
+
+import os
+
+from benchmarks.common import Rows
+from repro.launch.roofline import ART_DIR, format_table, full_table
+
+BASE_DIR = os.path.join(os.path.dirname(ART_DIR), "dryrun_baseline")
+
+
+def run(print_tables: bool = False) -> Rows:
+    rows = Rows()
+    for tag, art in (("opt", ART_DIR), ("base", BASE_DIR)):
+        if not os.path.isdir(art):
+            continue
+        for mesh in ("single", "multi") if tag == "opt" else ("single",):
+            table = full_table(mesh, art_dir=art)
+            if print_tables:
+                print(f"\n=== roofline {tag} ({mesh}-pod) ===")
+                print(format_table(table))
+            for r in table:
+                key = f"roofline.{tag}.{r['arch']}.{r['shape']}.{mesh}"
+                if r.get("status") != "ok":
+                    rows.add(f"{key}.status", derived=r.get("status"))
+                    continue
+                rows.add(f"{key}.dominant", derived=r["dominant"])
+                rows.add(f"{key}.fraction", derived=r["roofline_fraction"])
+                rows.add(f"{key}.compute_s", derived=r["compute_s"])
+                rows.add(f"{key}.collective_s", derived=r["collective_s"])
+    return rows
+
+
+def main():
+    run(print_tables=True).print()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""Benchmark harness — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only name ...]
+
+Output: ``name,us_per_call,derived`` CSV (assignment format).  Scale with
+REPRO_BENCH_SCALE=small|full (default small: minutes on 1 CPU).
+
+Paper artifact -> module map (DESIGN.md §7):
+  Fig 4      bench_trace       Table 3/1b  bench_storage
+  Table 4/F7 bench_latency     Table 6     bench_cache_sweep
+  Fig 9/11   bench_tuning      Fig 10      bench_spillover
+  Fig 8      bench_cost        Fig 12      bench_fidelity
+  Table 1c   bench_decode      kernels     bench_kernels
+  §Roofline  roofline_report
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+from benchmarks.common import Rows
+
+MODULES = [
+    "bench_trace", "bench_storage", "bench_decode", "bench_kernels",
+    "bench_cost", "bench_cache_sweep", "bench_tuning", "bench_spillover",
+    "bench_latency", "bench_fidelity", "bench_regen",
+    "roofline_report",
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", nargs="*", default=None)
+    args = ap.parse_args()
+    mods = args.only or MODULES
+
+    all_rows = Rows()
+    failures = 0
+    for name in mods:
+        t0 = time.time()
+        try:
+            mod = __import__(f"benchmarks.{name}", fromlist=["run"])
+            rows = mod.run()
+            all_rows.extend(rows)
+            print(f"# {name}: ok in {time.time() - t0:.1f}s",
+                  file=sys.stderr)
+        except Exception as e:  # noqa: BLE001 — keep the harness running
+            failures += 1
+            all_rows.add(f"{name}.FAILED", derived=type(e).__name__)
+            print(f"# {name}: FAILED {e}", file=sys.stderr)
+            traceback.print_exc()
+    all_rows.print()
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

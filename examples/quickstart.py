@@ -1,0 +1,44 @@
+"""Quickstart: the latent-first storage idea in 40 lines.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Generates an image latent with the VAE encoder, compresses it losslessly
+(pcodec-analogue), stores it, fetches + decodes on demand, and verifies
+the decode is deterministic and the storage footprint ~5x smaller.
+"""
+import numpy as np
+import jax.numpy as jnp
+
+from repro.compression.latentcodec import compress_latent, decompress_latent
+from repro.compression.png_proxy import png_like_size
+from repro.core.latent_store import LatentStore
+from repro.vae.model import VAE, VAEConfig
+
+rng = np.random.default_rng(0)
+vae = VAE(VAEConfig(name="demo", latent_channels=4,
+                    block_out_channels=(16, 32), layers_per_block=1,
+                    groups=4), seed=0)
+
+# 1. "generate" an image and encode it into a latent (model-native state)
+img = jnp.asarray(rng.standard_normal((1, 64, 64, 3)) * 0.3, jnp.float32)
+latent = np.asarray(vae.encode_mean(img)).astype(np.float16)
+
+# 2. latent-first persistence: compress + put in the durable store
+blob = compress_latent(latent)
+store = LatentStore()
+store.put(42, blob)
+img_u8 = np.clip((np.asarray(img)[0] + 1) * 127.5, 0, 255).astype(np.uint8)
+print(f"PNG-class size : {png_like_size(img_u8):6d} B")
+print(f"raw latent     : {latent.nbytes:6d} B")
+print(f"stored latent  : {len(blob):6d} B  (the only durable bytes)")
+
+# 3. read path: fetch -> decompress (bit-exact) -> GPU/TPU decode
+fetched = decompress_latent(store.get(42))
+assert np.array_equal(latent, fetched), "lossless storage"
+decoded = vae.decode(jnp.asarray(fetched, jnp.float32))
+decoded2 = vae.decode(jnp.asarray(fetched, jnp.float32))
+assert np.array_equal(np.asarray(decoded), np.asarray(decoded2)), \
+    "decode is deterministic: same latent -> bit-identical pixels"
+print(f"decoded image  : {tuple(decoded.shape)} finite="
+      f"{bool(jnp.isfinite(decoded).all())}")
+print("latent-first roundtrip OK")

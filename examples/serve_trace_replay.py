@@ -1,0 +1,16 @@
+"""END-TO-END DRIVER (deliverable b): serve a generated-image corpus with
+batched requests through the full LatentBox stack — consistent-hash router,
+dual-format cache, adaptive tuner, spillover — with REAL VAE decodes on
+the read path, replaying a synthetic production trace.
+
+    PYTHONPATH=src python examples/serve_trace_replay.py
+"""
+import subprocess
+import sys
+
+# the launcher is the production entry point; the example pins a scale
+sys.exit(subprocess.call(
+    [sys.executable, "-m", "repro.launch.serve",
+     "--objects", "50", "--requests", "600", "--nodes", "2"],
+    env={**__import__("os").environ,
+         "PYTHONPATH": "src"}))

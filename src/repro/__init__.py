@@ -1,0 +1,16 @@
+"""repro — a latent-first storage/serving framework (LatentBox) in JAX.
+
+Layers:
+  core/         the paper's contribution: dual-format cache, marginal-hit
+                tuner, consistent-hash router with spillover, cluster sim.
+  vae/          SD3.5-style VAE encoder/decoder (the reconstruction engine).
+  compression/  lossless latent codec (pcodec analogue), lossy baselines,
+                PSNR/SSIM.
+  trace/        synthetic production-trace generator + characterization.
+  kernels/      Pallas TPU kernels (+ pure-jnp oracles).
+  models/       LM substrate for the assigned architecture pool.
+  train/ serve/ data/ ckpt/ dist/   framework runtime.
+  configs/ launch/                  per-arch configs, mesh, dry-run, roofline.
+"""
+
+__version__ = "0.1.0"

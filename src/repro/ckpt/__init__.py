@@ -1,0 +1,1 @@
+"""Atomic/async/elastic checkpointing."""

@@ -1,0 +1,4 @@
+from repro.compression.latentcodec import compress_latent, decompress_latent
+from repro.compression.metrics import psnr, ssim
+
+__all__ = ["compress_latent", "decompress_latent", "psnr", "ssim"]

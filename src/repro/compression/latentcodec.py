@@ -1,0 +1,127 @@
+"""Lossless numeric codec for latent tensors (the pcodec role, paper §5).
+
+Diffusion latents are float tensors with spatial smoothness and
+inter-channel correlation that byte-oriented compressors can't exploit.
+The pipeline here mirrors pcodec's structure with numpy primitives:
+
+  1. *total-order map*: reinterpret floats as unsigned ints ordered like the
+     float values (sign-magnitude -> offset-binary), so numeric closeness
+     becomes integer closeness;
+  2. *spatial delta* along the innermost spatial axis (per channel), turning
+     smoothness into small signed residuals;
+  3. *zigzag* map to unsigned;
+  4. *byte-plane split* (shuffle), grouping the near-constant high bytes;
+  5. DEFLATE entropy stage per the shuffled buffer.
+
+Bit-exact roundtrip for fp16/fp32/(u)intN; property-tested in
+``tests/test_compression.py``.  On SD3.5-like latents this reaches the
+paper's ~1.8x regime (512 KB raw fp16 -> ~280 KB), see bench_storage.
+"""
+
+from __future__ import annotations
+
+import struct
+import zlib
+from typing import Tuple
+
+import numpy as np
+
+MAGIC = b"LBC1"
+
+_UINT_OF = {2: np.uint16, 4: np.uint32, 8: np.uint64}
+
+
+def _float_to_ordered_uint(u: np.ndarray) -> np.ndarray:
+    """Map float bit patterns to order-preserving unsigned ints."""
+    bits = 8 * u.itemsize
+    sign = np.uint64(1) << np.uint64(bits - 1)
+    sign = u.dtype.type(sign)
+    return np.where(u & sign != 0, ~u, u | sign)
+
+
+def _ordered_uint_to_float_bits(u: np.ndarray) -> np.ndarray:
+    bits = 8 * u.itemsize
+    sign = u.dtype.type(np.uint64(1) << np.uint64(bits - 1))
+    return np.where(u & sign != 0, u & ~sign, ~u)
+
+
+def _zigzag(d: np.ndarray) -> np.ndarray:
+    """Signed (as two's-complement unsigned) -> small unsigned."""
+    bits = 8 * d.itemsize
+    s = d.astype(_UINT_OF[d.itemsize])
+    sd = d.view(np.dtype(f"int{bits}"))
+    return ((sd << 1) ^ (sd >> (bits - 1))).view(s.dtype)
+
+
+def _unzigzag(z: np.ndarray) -> np.ndarray:
+    half = z >> 1                      # unsigned shift
+    return np.where(z & 1, ~half, half)
+
+
+def compress_latent(arr: np.ndarray, level: int = 6) -> bytes:
+    """Compress a numeric ndarray losslessly.  Layout-aware: delta runs
+    along the last axis (innermost spatial dim for HWC/CHW latents)."""
+    arr = np.ascontiguousarray(arr)
+    dt = arr.dtype
+    if dt.kind == "f":
+        u = arr.view(_UINT_OF[dt.itemsize])
+        u = _float_to_ordered_uint(u)
+    elif dt.kind in "ui":
+        u = arr.view(_UINT_OF[dt.itemsize]) if dt.kind == "i" else arr
+    else:
+        raise TypeError(f"unsupported dtype {dt}")
+
+    flat = u.reshape(-1, arr.shape[-1]) if arr.ndim > 1 else u.reshape(1, -1)
+    delta = flat.copy()
+    delta[:, 1:] = flat[:, 1:] - flat[:, :-1]       # wrap-around uint delta
+    zz = _zigzag(delta)
+
+    # byte-plane shuffle: [n_elems, itemsize] -> itemsize planes
+    raw = zz.reshape(-1).view(np.uint8).reshape(-1, dt.itemsize)
+    shuffled = np.ascontiguousarray(raw.T).tobytes()
+    payload = zlib.compress(shuffled, level)
+
+    dstr = dt.str.encode()                          # e.g. b'<f2'
+    header = MAGIC + struct.pack(
+        "<B B B I", len(dstr), arr.ndim, 0, len(payload)) + dstr + struct.pack(
+        f"<{arr.ndim}q", *arr.shape)
+    return header + payload
+
+
+def decompress_latent(blob: bytes) -> np.ndarray:
+    if blob[:4] != MAGIC:
+        raise ValueError("not an LBC1 blob")
+    dlen, ndim, _pad, plen = struct.unpack_from("<B B B I", blob, 4)
+    off = 4 + 7
+    dt = np.dtype(blob[off:off + dlen].decode())
+    off += dlen
+    shape = struct.unpack_from(f"<{ndim}q", blob, off)
+    off += 8 * ndim
+    payload = zlib.decompress(blob[off:off + plen])
+
+    n_elems = int(np.prod(shape))
+    planes = np.frombuffer(payload, np.uint8).reshape(dt.itemsize, n_elems)
+    zz = np.ascontiguousarray(planes.T).reshape(-1).view(
+        _UINT_OF[dt.itemsize]).copy()
+
+    delta = _unzigzag(zz).reshape(-1, shape[-1] if ndim > 1 else n_elems)
+    u = _cumsum_wrap(delta)
+
+    if dt.kind == "f":
+        u = _ordered_uint_to_float_bits(u)
+        return u.view(dt).reshape(shape)
+    if dt.kind == "i":
+        return u.view(dt).reshape(shape)
+    return u.astype(dt).reshape(shape)
+
+
+def _cumsum_wrap(delta: np.ndarray) -> np.ndarray:
+    """Wrap-around (modular) cumulative sum along axis 1."""
+    # np.cumsum upcasts; do it in the same unsigned dtype via add.accumulate
+    return np.add.accumulate(delta, axis=1, dtype=delta.dtype)
+
+
+def compression_ratio(arr: np.ndarray, level: int = 6) -> Tuple[int, int, float]:
+    blob = compress_latent(arr, level)
+    raw = arr.nbytes
+    return raw, len(blob), raw / len(blob)

@@ -1,0 +1,133 @@
+"""Architecture registry: ``--arch <id>`` resolution, reduced smoke
+configs, input specs (ShapeDtypeStructs for the dry-run), and per-cell
+applicability (long_500k needs sub-quadratic decode state)."""
+
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.shapes import LM_SHAPES, VAE_SHAPES, ShapeSpec
+from repro.models.common import ModelConfig
+
+_ARCH_MODULES = {
+    "whisper-large-v3": "repro.configs.whisper_large_v3",
+    "granite-8b": "repro.configs.granite_8b",
+    "qwen3-14b": "repro.configs.qwen3_14b",
+    "qwen2-7b": "repro.configs.qwen2_7b",
+    "phi4-mini-3.8b": "repro.configs.phi4_mini",
+    "mixtral-8x7b": "repro.configs.mixtral_8x7b",
+    "kimi-k2-1t-a32b": "repro.configs.kimi_k2",
+    "rwkv6-7b": "repro.configs.rwkv6_7b",
+    "qwen2-vl-72b": "repro.configs.qwen2_vl_72b",
+    "zamba2-2.7b": "repro.configs.zamba2_2p7b",
+}
+
+ARCH_IDS = tuple(_ARCH_MODULES)
+VISION_PREFIX = 256      # stub patch-embedding prefix length for [vlm]
+
+
+def get_config(arch: str) -> ModelConfig:
+    if arch not in _ARCH_MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(_ARCH_MODULES)}")
+    return importlib.import_module(_ARCH_MODULES[arch]).CONFIG
+
+
+def reduced_config(cfg: ModelConfig) -> ModelConfig:
+    """Smoke-test scale: same family/topology, tiny dimensions."""
+    subs: Dict[str, Any] = dict(
+        n_layers=4 if cfg.attn_every else 2,
+        d_model=128, d_ff=256, vocab_size=512,
+        n_heads=4, n_kv_heads=max(1, min(cfg.n_kv_heads, 2)),
+        d_head=None, dtype=jnp.float32, remat=False,
+    )
+    if cfg.family == "encdec":
+        subs.update(encoder_layers=2, encoder_seq=16)
+    if cfg.n_experts:
+        # generous capacity at smoke scale so routing never drops tokens
+        # (keeps prefill/decode exactly consistent with the full forward)
+        subs.update(n_experts=4, experts_per_token=2, capacity_factor=8.0)
+    if cfg.ssm_type:
+        subs.update(ssm_head_dim=32, ssm_state=16)
+    if cfg.attn_every:
+        subs.update(attn_every=2)
+    if cfg.sliding_window:
+        subs.update(sliding_window=16)
+    if cfg.mrope_sections:
+        subs.update(mrope_sections=(4, 6, 6))     # sums to head_dim/2 = 16
+    return dataclasses.replace(cfg, **subs)
+
+
+def build_model(cfg: ModelConfig):
+    if cfg.family == "encdec":
+        from repro.models.encdec import EncDecLM
+        return EncDecLM(cfg)
+    from repro.models.lm import CausalLM
+    return CausalLM(cfg)
+
+
+# ---------------------------------------------------------------------------
+# applicability (assignment rules)
+# ---------------------------------------------------------------------------
+
+def cell_applicable(cfg: ModelConfig, shape: ShapeSpec) -> Tuple[bool, str]:
+    if shape.name == "long_500k":
+        if not cfg.subquadratic:
+            return False, ("pure full-attention arch: 500k-token decode "
+                           "needs sub-quadratic attention (DESIGN.md "
+                           "§Arch-applicability)")
+        if cfg.family == "encdec":
+            return False, "enc-dec target length is architecturally bounded"
+    return True, ""
+
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins, no allocation)
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    """Abstract inputs for the step function selected by ``shape.kind``.
+
+    train   -> batch dict for ``loss`` / train_step
+    prefill -> token (+frontend) arrays
+    decode  -> KV cache pytree + one token per sequence
+    """
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+
+    def tok(shp):
+        return jax.ShapeDtypeStruct(shp, i32)
+
+    if shape.kind == "train":
+        if cfg.family == "encdec":
+            return {"frames": jax.ShapeDtypeStruct(
+                        (b, cfg.encoder_seq, cfg.d_model), cfg.dtype),
+                    "tokens": tok((b, s)), "labels": tok((b, s))}
+        if cfg.family == "vlm":
+            return {"vision_embeds": jax.ShapeDtypeStruct(
+                        (b, VISION_PREFIX, cfg.d_model), cfg.dtype),
+                    "tokens": tok((b, s - VISION_PREFIX)),
+                    "labels": tok((b, s - VISION_PREFIX))}
+        return {"tokens": tok((b, s)), "labels": tok((b, s))}
+
+    if shape.kind == "prefill":
+        if cfg.family == "encdec":
+            return {"frames": jax.ShapeDtypeStruct(
+                        (b, cfg.encoder_seq, cfg.d_model), cfg.dtype),
+                    "tokens": tok((b, s))}
+        if cfg.family == "vlm":
+            return {"vision_embeds": jax.ShapeDtypeStruct(
+                        (b, VISION_PREFIX, cfg.d_model), cfg.dtype),
+                    "tokens": tok((b, s - VISION_PREFIX))}
+        return {"tokens": tok((b, s))}
+
+    if shape.kind == "decode":
+        model = build_model(cfg)
+        cache = jax.eval_shape(lambda: model.init_cache(b, s))
+        return {"cache": cache, "tokens": tok((b,))}
+
+    raise ValueError(f"unknown shape kind {shape.kind}")

@@ -1,0 +1,23 @@
+# The paper's primary contribution: latent-first storage with a dual-format
+# adaptive cache, online marginal-hit tuning, and consistent-hash routing
+# with spillover + cache pinning.
+from repro.core.dual_cache import (DualFormatCache, LookupResult, SegmentedLRU,
+                                   WindowStats, IMAGE_HIT, LATENT_HIT,
+                                   FULL_MISS)
+from repro.core.tuner import MarginalHitTuner, TunerConfig, TunerRecord
+from repro.core.router import ConsistentHashRing, Router
+from repro.core.latent_store import LatentStore, StoreLatencyModel
+from repro.core.cluster import ClusterConfig, ClusterSim, replay_cluster
+from repro.core.replay import ReplayConfig, ReplayResult, replay, sweep_static_alpha
+from repro.core import cost_model, metrics, policies
+
+__all__ = [
+    "DualFormatCache", "LookupResult", "SegmentedLRU", "WindowStats",
+    "IMAGE_HIT", "LATENT_HIT", "FULL_MISS",
+    "MarginalHitTuner", "TunerConfig", "TunerRecord",
+    "ConsistentHashRing", "Router",
+    "LatentStore", "StoreLatencyModel",
+    "ClusterConfig", "ClusterSim", "replay_cluster",
+    "ReplayConfig", "ReplayResult", "replay", "sweep_static_alpha",
+    "cost_model", "metrics", "policies",
+]

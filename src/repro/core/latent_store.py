@@ -1,0 +1,82 @@
+"""Durable object store stand-in (paper: AWS S3).
+
+Source of truth for every object.  Stores real payloads when given them
+(the quickstart/e2e examples store actual compressed latents) and models
+fetch latency the way §6.3.3 characterizes it: cold, long-tail objects see
+higher and more variable latency than objects kept warm by the store's own
+internal caching layers (the Decode-All effect).
+
+    fetch_ms = lognormal(base)  +  nbytes / effective_bandwidth
+
+with the lognormal median dropping from ``cold_ms`` to ``warm_ms`` when the
+object was fetched within ``warm_window_s``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class StoreLatencyModel:
+    warm_ms: float = 55.0           # lognormal median, recently-touched object
+    cold_ms: float = 110.0          # lognormal median, cold object
+    sigma: float = 0.35             # lognormal shape (tail heaviness)
+    bandwidth_mb_s: float = 30.0    # effective single-stream S3 throughput
+    warm_window_s: float = 600.0    # store-side warmth horizon
+    first_byte_floor_ms: float = 15.0
+
+
+class LatentStore:
+    """Object store: id -> payload bytes (or just a size for simulation)."""
+
+    def __init__(self, latency: Optional[StoreLatencyModel] = None,
+                 seed: int = 0):
+        self.latency = latency or StoreLatencyModel()
+        self._rng = np.random.default_rng(seed)
+        self._blobs: Dict[int, bytes] = {}
+        self._sizes: Dict[int, float] = {}
+        self._last_fetch_s: Dict[int, float] = {}
+        self.n_fetches = 0
+        self.bytes_fetched = 0.0
+
+    # -- durable writes --------------------------------------------------------
+    def put(self, oid: int, blob: bytes) -> None:
+        self._blobs[oid] = blob
+        self._sizes[oid] = float(len(blob))
+
+    def put_size(self, oid: int, nbytes: float) -> None:
+        """Register an object by size only (simulation mode)."""
+        self._sizes[oid] = float(nbytes)
+
+    def get(self, oid: int) -> Optional[bytes]:
+        return self._blobs.get(oid)
+
+    def size_of(self, oid: int, default: float = 0.28e6) -> float:
+        return self._sizes.get(oid, default)
+
+    @property
+    def total_bytes(self) -> float:
+        return float(sum(self._sizes.values()))
+
+    def __contains__(self, oid: int) -> bool:
+        return oid in self._sizes or oid in self._blobs
+
+    # -- modeled fetch ----------------------------------------------------------
+    def fetch_ms(self, oid: int, now_s: float,
+                 nbytes: Optional[float] = None) -> float:
+        """Sample a fetch latency and record the access (warming the object)."""
+        m = self.latency
+        warm = (now_s - self._last_fetch_s.get(oid, -np.inf)) <= m.warm_window_s
+        median = m.warm_ms if warm else m.cold_ms
+        base = float(self._rng.lognormal(np.log(median), m.sigma))
+        base = max(base, m.first_byte_floor_ms)
+        size = self.size_of(oid) if nbytes is None else float(nbytes)
+        transfer = size / (m.bandwidth_mb_s * 1e6) * 1e3
+        self._last_fetch_s[oid] = now_s
+        self.n_fetches += 1
+        self.bytes_fetched += size
+        return base + transfer

@@ -1,0 +1,87 @@
+"""Latency/hit metrics accumulators shared by the simulator and benchmarks."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import numpy as np
+
+OUTCOME_CODES = {"image_hit": 0, "latent_hit": 1, "full_miss": 2}
+OUTCOME_NAMES = {v: k for k, v in OUTCOME_CODES.items()}
+
+
+@dataclasses.dataclass
+class RequestLog:
+    """Columnar per-request log (numpy-friendly)."""
+
+    arrival_ms: List[float] = dataclasses.field(default_factory=list)
+    latency_ms: List[float] = dataclasses.field(default_factory=list)
+    outcome: List[int] = dataclasses.field(default_factory=list)
+    queue_ms: List[float] = dataclasses.field(default_factory=list)
+    fetch_ms: List[float] = dataclasses.field(default_factory=list)
+    decode_ms: List[float] = dataclasses.field(default_factory=list)
+    net_ms: List[float] = dataclasses.field(default_factory=list)
+    spilled: List[bool] = dataclasses.field(default_factory=list)
+    coalesced: List[bool] = dataclasses.field(default_factory=list)
+    node: List[int] = dataclasses.field(default_factory=list)
+
+    def add(self, arrival_ms: float, latency_ms: float, outcome: str,
+            queue_ms: float = 0.0, fetch_ms: float = 0.0,
+            decode_ms: float = 0.0, net_ms: float = 0.0,
+            spilled: bool = False, coalesced: bool = False,
+            node: int = -1) -> None:
+        self.arrival_ms.append(arrival_ms)
+        self.latency_ms.append(latency_ms)
+        self.outcome.append(OUTCOME_CODES[outcome])
+        self.queue_ms.append(queue_ms)
+        self.fetch_ms.append(fetch_ms)
+        self.decode_ms.append(decode_ms)
+        self.net_ms.append(net_ms)
+        self.spilled.append(spilled)
+        self.coalesced.append(coalesced)
+        self.node.append(node)
+
+    def arrays(self) -> Dict[str, np.ndarray]:
+        return {f.name: np.asarray(getattr(self, f.name))
+                for f in dataclasses.fields(self)}
+
+    def summarize(self) -> Dict[str, float]:
+        lat = np.asarray(self.latency_ms)
+        out = np.asarray(self.outcome)
+        n = len(lat)
+        if n == 0:
+            return {"n": 0}
+        summary = {
+            "n": float(n),
+            "mean_ms": float(lat.mean()),
+            "p50_ms": float(np.percentile(lat, 50)),
+            "p95_ms": float(np.percentile(lat, 95)),
+            "p99_ms": float(np.percentile(lat, 99)),
+            "image_hit_frac": float(np.mean(out == 0)),
+            "latent_hit_frac": float(np.mean(out == 1)),
+            "full_miss_frac": float(np.mean(out == 2)),
+            "spill_frac": float(np.mean(self.spilled)) if self.spilled else 0.0,
+            "coalesced_frac": float(np.mean(self.coalesced)) if self.coalesced else 0.0,
+        }
+        # Fig 7c/d-style breakdowns
+        for code, name in OUTCOME_NAMES.items():
+            mask = out == code
+            if mask.any():
+                for col in ("queue_ms", "fetch_ms", "decode_ms", "net_ms",
+                            "latency_ms"):
+                    v = np.asarray(getattr(self, col))[mask]
+                    summary[f"{name}.{col.replace('_ms', '')}_ms"] = float(v.mean())
+        hit_mask = out != 2
+        if hit_mask.any():
+            summary["hit.queue_ms"] = float(
+                np.asarray(self.queue_ms)[hit_mask].mean())
+        return summary
+
+
+def percentiles(values, ps=(50, 95, 99)) -> Dict[str, float]:
+    arr = np.asarray(values, dtype=np.float64)
+    out = {"mean": float(arr.mean())} if len(arr) else {"mean": float("nan")}
+    for p in ps:
+        out[f"p{p}"] = float(np.percentile(arr, p)) if len(arr) else float("nan")
+    return out

@@ -1,0 +1,116 @@
+"""Beyond-paper extension: the REGENERATION tier (paper §3.1 O1's unused
+design implication — "because the images can be reproduced by the model,
+cold images could be regenerated on demand as long as the model remains
+available").
+
+LatentBox stores *every* latent durably.  But 69 % of images get <10
+lifetime views and 15 % exactly one; for sufficiently cold objects even a
+0.29 MB latent is wasted capacity, because the (prompt, seed, model-id)
+tuple — a few hundred bytes — regenerates the latent bit-exactly on the
+same stack.  This module adds a third durability class:
+
+    image cache (hot)  >  latent store (warm)  >  RECIPE store (cold)
+
+with an age/popularity demotion policy and a cost model that answers when
+demotion pays: storing a latent costs S_lat * P_s3 per month forever;
+regenerating costs ~4 s of GPU per miss.  With the O2 decay fit, an object
+older than `a` months sees lambda(a) views/mo, so demote when
+
+    S_lat * P_s3  >  lambda(a) * t_gen_hr * P_gpu
+
+Evaluated in benchmarks/bench_regen.py: the recipe tier removes most of
+the residual latent footprint at a bounded tail-latency budget.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class RegenPolicy:
+    s_lat_mb: float = 0.29
+    p_s3_gb_mo: float = 0.023
+    t_gen_s: float = 3.905            # full diffusion pipeline (paper 6.3.1)
+    p_gpu_hr: float = 0.69            # RTX-5090-class decode fleet
+    recipe_bytes: float = 512.0       # prompt + seed + model/version ids
+    decay_a0_mo: float = 1.0          # O2 fit (trace-calibrated)
+    decay_beta: float = 1.8
+    views_mo_at_birth: float = 3.0
+
+    def view_rate_per_month(self, age_mo: np.ndarray) -> np.ndarray:
+        return self.views_mo_at_birth * (1.0 + age_mo / self.decay_a0_mo) \
+            ** (-self.decay_beta)
+
+    def regen_cost_per_month(self, age_mo: np.ndarray) -> np.ndarray:
+        return self.view_rate_per_month(age_mo) * (self.t_gen_s / 3600.0) \
+            * self.p_gpu_hr
+
+    def storage_cost_per_month(self) -> float:
+        return self.s_lat_mb / 1024.0 * self.p_s3_gb_mo
+
+    def demotion_age_months(self) -> float:
+        """Break-even age: demote latents older than this (no re-access
+        since) to recipe-only storage."""
+        ages = np.linspace(0.01, 240.0, 4096)
+        regen = self.regen_cost_per_month(ages)
+        idx = np.searchsorted(-regen, -self.storage_cost_per_month())
+        return float(ages[min(idx, len(ages) - 1)])
+
+
+class RegenTierStore:
+    """Latent store wrapper with recipe-only demotion.
+
+    demote(oid): drop the latent blob, keep the recipe (few hundred bytes).
+    fetch on a demoted object reports needs_regen=True; the serving layer
+    routes it to the generation fleet (simulated by the cluster's
+    `generation_ms`) and re-admits the regenerated latent.
+    """
+
+    def __init__(self, policy: Optional[RegenPolicy] = None):
+        self.policy = policy or RegenPolicy()
+        self._latents: Dict[int, float] = {}     # oid -> bytes
+        self._recipes: Dict[int, float] = {}
+        self._last_access_mo: Dict[int, float] = {}
+        self.n_regens = 0
+
+    def put(self, oid: int, latent_bytes: float, now_mo: float = 0.0) -> None:
+        self._latents[oid] = latent_bytes
+        self._recipes[oid] = self.policy.recipe_bytes
+        self._last_access_mo[oid] = now_mo
+
+    def fetch(self, oid: int, now_mo: float) -> Tuple[float, bool]:
+        """Returns (bytes_to_transfer, needs_regen)."""
+        self._last_access_mo[oid] = now_mo
+        if oid in self._latents:
+            return self._latents[oid], False
+        if oid in self._recipes:
+            self.n_regens += 1
+            return self._recipes[oid], True
+        raise KeyError(oid)
+
+    def readmit(self, oid: int, latent_bytes: float, now_mo: float) -> None:
+        """After regeneration the latent is durable again (it just got
+        accessed, so it's warm by definition)."""
+        self._latents[oid] = latent_bytes
+        self._last_access_mo[oid] = now_mo
+
+    def run_demotion(self, now_mo: float) -> int:
+        """Demote every latent idle past the break-even age."""
+        cutoff = self.policy.demotion_age_months()
+        victims = [oid for oid, t in self._last_access_mo.items()
+                   if oid in self._latents and now_mo - t > cutoff]
+        for oid in victims:
+            del self._latents[oid]
+        return len(victims)
+
+    @property
+    def latent_bytes(self) -> float:
+        return float(sum(self._latents.values()))
+
+    @property
+    def recipe_bytes(self) -> float:
+        return float(sum(self._recipes.values()))

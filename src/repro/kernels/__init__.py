@@ -1,0 +1,7 @@
+# Pallas TPU kernels for the compute hot spots of the latent-first read
+# path (VAE decode: conv / groupnorm+silu / mid-block attention) and the
+# LM serving path (flash attention, KV-cache decode attention, RWKV6 scan).
+# Each kernel has a pure-jnp oracle in ref.py; ops.py is the dispatch layer.
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

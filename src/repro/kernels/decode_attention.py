@@ -1,0 +1,99 @@
+"""Single-token KV-cache decode attention Pallas TPU kernel (GQA).
+
+The LM serving hot loop: one query token per sequence against a long KV
+cache.  Decode attention is memory-bound (the whole cache streams once per
+step), so the kernel's job is to keep the streaming tight: each (batch,
+kv-head) program reads its cache exactly once, processes the ``rep``
+grouped q-heads together (one [rep, d] x [d, bkv] MXU op per tile instead
+of rep vector ops), and keeps the online-softmax state in VMEM.
+
+q [n, hq, d]; k_cache/v_cache [n, hkv, S, d]; lengths [n] valid prefixes.
+Grid (n, hkv, S_tiles), kv axis sequential.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _dec_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                scale: float, bkv: int):
+    s_i = pl.program_id(2)
+    nkv = pl.num_programs(2)
+
+    @pl.when(s_i == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32) * scale          # [rep, d]
+    k = k_ref[0, 0].astype(jnp.float32)               # [bkv, d]
+    s = q @ k.T                                       # [rep, bkv]
+
+    length = len_ref[0]
+    pos = s_i * bkv + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    s = jnp.where(pos < length, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * corr + p.sum(axis=1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * corr + p @ v_ref[0, 0].astype(jnp.float32)
+    m_scr[...] = m_new
+
+    @pl.when(s_i == nkv - 1)
+    def _finalize():
+        l = l_scr[...]
+        safe_l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0] = (acc_scr[...] / safe_l).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "block_kv", "interpret"))
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     lengths: jax.Array, scale: Optional[float] = None,
+                     block_kv: int = 256, interpret: bool = False) -> jax.Array:
+    n, hq, d = q.shape
+    _, hkv, s_max, _ = k_cache.shape
+    assert hq % hkv == 0
+    rep = hq // hkv
+    scale = float(d ** -0.5) if scale is None else float(scale)
+
+    bkv = min(block_kv, s_max)
+    while s_max % bkv:
+        bkv //= 2
+
+    qg = q.reshape(n, hkv, rep, d)
+    lengths = lengths.astype(jnp.int32).reshape(n, 1)
+
+    out = pl.pallas_call(
+        functools.partial(_dec_kernel, scale=scale, bkv=bkv),
+        grid=(n, hkv, s_max // bkv),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda b, h, s: (b, 0),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, rep, d), lambda b, h, s: (b * pl.num_programs(1)
+                                                       + h, 0, 0)),
+            pl.BlockSpec((1, 1, bkv, d), lambda b, h, s: (b, h, s, 0)),
+            pl.BlockSpec((1, 1, bkv, d), lambda b, h, s: (b, h, s, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, rep, d), lambda b, h, s: (
+            b * pl.num_programs(1) + h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n * hkv, rep, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((rep, 1), jnp.float32),
+            pltpu.VMEM((rep, 1), jnp.float32),
+            pltpu.VMEM((rep, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(lengths, qg.reshape(n * hkv, rep, d), k_cache, v_cache)
+    return out.reshape(n, hq, d)

@@ -1,0 +1,92 @@
+"""Jitted entry points for the kernel layer with implementation dispatch.
+
+``impl`` is one of
+  'xla'               pure-jnp reference (the oracle; default on CPU)
+  'pallas'            Pallas TPU kernel (Mosaic; requires TPU)
+  'pallas_interpret'  Pallas kernel body interpreted on CPU (correctness)
+
+The default is process-wide (``set_default_impl``) so models never thread
+the flag explicitly; the dry-run/compile paths stay on 'xla' while kernel
+tests pin 'pallas_interpret'.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+
+_DEFAULT_IMPL = "xla"
+_VALID = ("xla", "pallas", "pallas_interpret")
+
+
+def set_default_impl(impl: str) -> None:
+    global _DEFAULT_IMPL
+    if impl not in _VALID:
+        raise ValueError(f"impl must be one of {_VALID}")
+    _DEFAULT_IMPL = impl
+
+
+def get_default_impl() -> str:
+    return _DEFAULT_IMPL
+
+
+def _resolve(impl: Optional[str]) -> str:
+    impl = impl or _DEFAULT_IMPL
+    if impl not in _VALID:
+        raise ValueError(f"impl must be one of {_VALID}")
+    return impl
+
+
+# ---------------------------------------------------------------------------
+
+def group_norm_silu(x, scale, bias, groups: int = 32, eps: float = 1e-6,
+                    impl: Optional[str] = None):
+    impl = _resolve(impl)
+    if impl == "xla":
+        return ref.group_norm_silu_ref(x, scale, bias, groups, eps)
+    from repro.kernels import gn_silu
+    return gn_silu.group_norm_silu(x, scale, bias, groups=groups, eps=eps,
+                                   interpret=impl == "pallas_interpret")
+
+
+def flash_attention(q, k, v, causal: bool = False, scale=None,
+                    window: Optional[int] = None, impl: Optional[str] = None):
+    impl = _resolve(impl)
+    if impl == "xla":
+        return ref.flash_attention_ref(q, k, v, causal=causal, scale=scale,
+                                       window=window)
+    from repro.kernels import flash_attention as fa
+    return fa.flash_attention(q, k, v, causal=causal, scale=scale,
+                              window=window,
+                              interpret=impl == "pallas_interpret")
+
+
+def decode_attention(q, k_cache, v_cache, lengths, scale=None,
+                     impl: Optional[str] = None):
+    impl = _resolve(impl)
+    if impl == "xla":
+        return ref.decode_attention_ref(q, k_cache, v_cache, lengths, scale)
+    from repro.kernels import decode_attention as da
+    return da.decode_attention(q, k_cache, v_cache, lengths, scale=scale,
+                               interpret=impl == "pallas_interpret")
+
+
+def conv3x3(x, w, b=None, impl: Optional[str] = None):
+    impl = _resolve(impl)
+    if impl == "xla":
+        return ref.conv3x3_ref(x, w, b)
+    from repro.kernels import conv3x3 as c3
+    return c3.conv3x3(x, w, b, interpret=impl == "pallas_interpret")
+
+
+def rwkv6_scan(r, k, v, w, u, state=None, impl: Optional[str] = None):
+    impl = _resolve(impl)
+    if impl == "xla":
+        return ref.rwkv6_scan_ref(r, k, v, w, u, state)
+    from repro.kernels import rwkv6_scan as rs
+    return rs.rwkv6_scan(r, k, v, w, u, state,
+                         interpret=impl == "pallas_interpret")

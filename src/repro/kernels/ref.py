@@ -1,0 +1,118 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract).
+
+Each kernel in this package must match its oracle to float tolerance across
+the shape/dtype sweeps in ``tests/test_kernels_*.py``.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def group_norm_silu_ref(x: jax.Array, scale: jax.Array, bias: jax.Array,
+                        groups: int = 32, eps: float = 1e-6) -> jax.Array:
+    """GroupNorm (fp32 stats) + SiLU, NHWC."""
+    n, h, w, c = x.shape
+    xf = x.astype(jnp.float32).reshape(n, h * w, groups, c // groups)
+    mean = xf.mean(axis=(1, 3), keepdims=True)
+    var = xf.var(axis=(1, 3), keepdims=True)
+    xf = (xf - mean) * jax.lax.rsqrt(var + eps)
+    xf = xf.reshape(n, h, w, c) * scale.astype(jnp.float32) + bias.astype(jnp.float32)
+    return (xf * jax.nn.sigmoid(xf)).astype(x.dtype)
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                        causal: bool = False,
+                        scale: Optional[float] = None,
+                        window: Optional[int] = None) -> jax.Array:
+    """Softmax attention.  q: [n, hq, sq, d]; k, v: [n, hkv, skv, d].
+
+    hq must be a multiple of hkv (GQA broadcast).  ``window`` enables
+    sliding-window masking (attend to the last ``window`` positions),
+    assuming q/k positions align at the sequence end (sq == skv for the
+    windowed case)."""
+    n, hq, sq, d = q.shape
+    hkv = k.shape[1]
+    rep = hq // hkv
+    if rep > 1:
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+    scale = (d ** -0.5) if scale is None else scale
+    logits = jnp.einsum("nhqd,nhkd->nhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    skv = k.shape[2]
+    if causal or window is not None:
+        qpos = jnp.arange(sq)[:, None] + (skv - sq)
+        kpos = jnp.arange(skv)[None, :]
+        mask = jnp.ones((sq, skv), dtype=bool)
+        if causal:
+            mask &= kpos <= qpos
+        if window is not None:
+            mask &= kpos > qpos - window
+        logits = jnp.where(mask, logits, -jnp.inf)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("nhqk,nhkd->nhqd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def decode_attention_ref(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                         lengths: jax.Array,
+                         scale: Optional[float] = None) -> jax.Array:
+    """Single-token decode attention against a KV cache.
+
+    q: [n, hq, d]; k_cache/v_cache: [n, hkv, S, d]; lengths: [n] valid
+    prefix lengths.  Returns [n, hq, d]."""
+    n, hq, d = q.shape
+    hkv, s = k_cache.shape[1], k_cache.shape[2]
+    rep = hq // hkv
+    kc = jnp.repeat(k_cache, rep, axis=1) if rep > 1 else k_cache
+    vc = jnp.repeat(v_cache, rep, axis=1) if rep > 1 else v_cache
+    scale = (d ** -0.5) if scale is None else scale
+    logits = jnp.einsum("nhd,nhsd->nhs", q.astype(jnp.float32),
+                        kc.astype(jnp.float32)) * scale
+    mask = jnp.arange(s)[None, None, :] < lengths[:, None, None]
+    logits = jnp.where(mask, logits, -jnp.inf)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("nhs,nhsd->nhd", p, vc.astype(jnp.float32)).astype(q.dtype)
+
+
+def conv3x3_ref(x: jax.Array, w: jax.Array, b: Optional[jax.Array] = None
+                ) -> jax.Array:
+    """3x3 SAME conv, NHWC x HWIO -> NHWC."""
+    y = jax.lax.conv_general_dilated(
+        x, w.astype(x.dtype), window_strides=(1, 1), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    if b is not None:
+        y = y + b.astype(x.dtype)
+    return y
+
+
+def rwkv6_scan_ref(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
+                   u: jax.Array, state: Optional[jax.Array] = None):
+    """RWKV-6 linear-attention recurrence (per head), fp32 state.
+
+    r, k, v, w: [n, h, t, d]; u: [h, d].  State S: [n, h, d, d] with
+        out_t = r_t · (S + u ⊙ (k_t ⊗ v_t))
+        S     = diag(exp(-exp(w_t))) S + k_t ⊗ v_t
+    Returns (out [n, h, t, d], final_state).
+    """
+    n, h, t, d = r.shape
+    if state is None:
+        state = jnp.zeros((n, h, d, d), jnp.float32)
+    rf, kf, vf = (a.astype(jnp.float32) for a in (r, k, v))
+    decay = jnp.exp(-jnp.exp(w.astype(jnp.float32)))          # [n,h,t,d]
+    uf = u.astype(jnp.float32)
+
+    def step(S, inputs):
+        r_t, k_t, v_t, dec_t = inputs                          # [n,h,d]
+        kv = k_t[..., :, None] * v_t[..., None, :]             # [n,h,d,d]
+        out = jnp.einsum("nhd,nhde->nhe", r_t, S + uf[None, :, :, None] * kv)
+        S = dec_t[..., :, None] * S + kv
+        return S, out
+
+    xs = (jnp.moveaxis(rf, 2, 0), jnp.moveaxis(kf, 2, 0),
+          jnp.moveaxis(vf, 2, 0), jnp.moveaxis(decay, 2, 0))
+    final, outs = jax.lax.scan(step, state, xs)
+    return jnp.moveaxis(outs, 0, 2).astype(r.dtype), final

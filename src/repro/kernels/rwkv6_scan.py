@@ -1,0 +1,94 @@
+"""RWKV-6 (Finch) linear-attention recurrence as a Pallas TPU kernel.
+
+    out_t = r_t · (S + u ⊙ (k_t ⊗ v_t));   S ← diag(exp(-exp(w_t))) S + k_t ⊗ v_t
+
+XLA's lax.scan keeps S live across steps but writes each step's output
+through HBM and cannot overlap the tiny per-step ops; the kernel instead
+pins the [d, d] fp32 state in VMEM scratch across a whole sequence-chunk
+grid axis and streams (r, k, v, w) chunk-by-chunk, emitting output tiles.
+Grid (n*h, T/chunk) with the chunk axis sequential — the classic
+"state-resident" linear-attention layout on TPU.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _rwkv_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref, o_ref, sT_ref,
+                 s_scr, *, chunk: int):
+    t_i = pl.program_id(1)
+    nt = pl.num_programs(1)
+
+    @pl.when(t_i == 0)
+    def _init():
+        s_scr[...] = s0_ref[0]
+
+    u = u_ref[0].astype(jnp.float32)                # [1, d] (key dim)
+
+    def step(i, _):
+        r_t = r_ref[0, i].astype(jnp.float32)[None, :]       # [1, d]
+        k_t = k_ref[0, i].astype(jnp.float32)[None, :]
+        v_t = v_ref[0, i].astype(jnp.float32)[None, :]
+        dec = jnp.exp(-jnp.exp(w_ref[0, i].astype(jnp.float32)))[:, None]
+        kv = k_t.T @ v_t                                     # [d, d]
+        s = s_scr[...]
+        out = r_t @ (s + (u.T * kv))                         # [1, d]
+        o_ref[0, i] = out[0].astype(o_ref.dtype)
+        s_scr[...] = dec * s + kv
+        return 0
+
+    jax.lax.fori_loop(0, chunk, step, 0)
+
+    @pl.when(t_i == nt - 1)
+    def _emit_state():
+        sT_ref[0] = s_scr[...]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def rwkv6_scan(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
+               u: jax.Array, state: Optional[jax.Array] = None,
+               chunk: int = 64, interpret: bool = False
+               ) -> Tuple[jax.Array, jax.Array]:
+    """r,k,v,w: [n, h, t, d]; u: [h, d] -> (out [n,h,t,d], state [n,h,d,d])."""
+    n, h, t, d = r.shape
+    if state is None:
+        state = jnp.zeros((n, h, d, d), jnp.float32)
+    chunk = min(chunk, t)
+    while t % chunk:
+        chunk //= 2
+    nt = t // chunk
+
+    def flat(x):
+        return x.reshape(n * h, t, d)
+
+    u_full = jnp.broadcast_to(u[None], (n, h, d)).reshape(n * h, 1, d)
+    s0 = state.reshape(n * h, d, d).astype(jnp.float32)
+
+    seq_spec = pl.BlockSpec((1, chunk, d), lambda b, ti: (b, ti, 0))
+    out, s_final = pl.pallas_call(
+        functools.partial(_rwkv_kernel, chunk=chunk),
+        grid=(n * h, nt),
+        in_specs=[
+            seq_spec, seq_spec, seq_spec, seq_spec,
+            pl.BlockSpec((1, 1, d), lambda b, ti: (b, 0, 0)),
+            pl.BlockSpec((1, d, d), lambda b, ti: (b, 0, 0)),
+        ],
+        out_specs=[
+            seq_spec,
+            pl.BlockSpec((1, d, d), lambda b, ti: (b, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n * h, t, d), r.dtype),
+            jax.ShapeDtypeStruct((n * h, d, d), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((d, d), jnp.float32)],
+        interpret=interpret,
+    )(flat(r), flat(k), flat(v), flat(w), u_full, s0)
+    return out.reshape(n, h, t, d), s_final.reshape(n, h, d, d)

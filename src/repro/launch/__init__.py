@@ -1,0 +1,1 @@
+"""Mesh construction, multi-pod dry-run, roofline, train/serve launchers."""

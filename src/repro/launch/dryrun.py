@@ -1,0 +1,610 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede any jax import: jax locks the device count on first init.
+
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape x
+mesh) cell against the production mesh and extract the roofline terms.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch granite-8b \
+        --shape train_4k --mesh single
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+
+Per cell this produces artifacts/dryrun/<arch>__<shape>__<mesh>.json with
+  flops / bytes from compiled.cost_analysis(),
+  per-device memory from compiled.memory_analysis(),
+  collective wire bytes parsed from the optimized HLO,
+  the compile wall-time and the parallelism plan used.
+"""
+
+import argparse
+import dataclasses
+import json
+import re
+import time
+import traceback
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+import repro.configs as RC
+from repro.configs.shapes import LM_SHAPES, VAE_SHAPES, ShapeSpec
+from repro.dist import sharding as SH
+from repro.launch.mesh import make_production_mesh
+from repro.models.common import ModelConfig
+from repro.train.optim import AdamW, AdamWConfig
+from repro.train.train_step import make_train_step
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                            "artifacts", "dryrun")
+
+
+# ---------------------------------------------------------------------------
+# per-arch parallelism plans (train memory strategy; see DESIGN.md §5)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Plan:
+    microbatches: int = 8
+    fsdp: bool = False               # shard params over 'data' (FSDP)
+    zero1: bool = True               # shard optimizer moments over 'data'
+    moment_dtype: str = "float32"    # 'bfloat16' for the XL archs
+    compress_grads: bool = False
+    grad_dtype: str = "float32"      # accumulator dtype
+    grad_accum: str = "local"        # 'local' | 'sharded' | 'auto' (no pin)
+    gather_once: bool = False        # FSDP: gather weights once per step
+    constraints: bool = True         # in-model sharding constraints
+
+
+# Per-arch memory/communication plans (§Perf iterations; see EXPERIMENTS.md).
+# fsdp only where TP-sharded state doesn't fit 16 GB; gather_once where the
+# unsharded weights transiently fit; bf16 grads/moments for the XL archs.
+PLANS: Dict[str, Plan] = {
+    "whisper-large-v3": Plan(microbatches=4, grad_accum="auto",
+                             constraints=False),
+    "granite-8b": Plan(microbatches=8),
+    "qwen3-14b": Plan(microbatches=8),
+    "qwen2-7b": Plan(microbatches=8),
+    "phi4-mini-3.8b": Plan(microbatches=4),
+    "mixtral-8x7b": Plan(microbatches=8, fsdp=True,
+                         grad_dtype="bfloat16", moment_dtype="bfloat16",
+                         grad_accum="auto", constraints=False),
+    "kimi-k2-1t-a32b": Plan(microbatches=16, fsdp=True,
+                            moment_dtype="bfloat16",
+                            grad_dtype="bfloat16", grad_accum="auto",
+                            constraints=False),
+    "rwkv6-7b": Plan(microbatches=8),
+    "qwen2-vl-72b": Plan(microbatches=16, fsdp=True,
+                         moment_dtype="bfloat16",
+                         grad_dtype="bfloat16", grad_accum="sharded"),
+    "zamba2-2.7b": Plan(microbatches=4),
+}
+
+
+# ---------------------------------------------------------------------------
+# sharding helpers
+# ---------------------------------------------------------------------------
+
+def _shard_last_free_dim(spec: P, ndim: int, axis: str) -> P:
+    parts = list(spec) + [None] * (ndim - len(spec))
+    for i in range(len(parts) - 1, 0, -1):   # skip dim 0 (layer stack)
+        if parts[i] is None:
+            parts[i] = axis
+            return P(*parts)
+    return P(*parts)
+
+
+def fsdp_param_pspecs(param_pspecs, shapes, mesh: Mesh,
+                      dp_name: str = "data") -> Any:
+    """Shard the last free dim of each big tensor over the data axis,
+    keeping divisibility."""
+    size = mesh.shape[dp_name]
+
+    def fix(spec: P, shp) -> P:
+        if np.prod(shp.shape) < (1 << 20):
+            return spec                      # small tensors stay replicated
+        cand = _shard_last_free_dim(spec, len(shp.shape), dp_name)
+        for i, ax in enumerate(cand):
+            if ax == dp_name and shp.shape[i] % size != 0:
+                return spec
+        return cand
+
+    return jax.tree.map(fix, param_pspecs, shapes,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def validate_divisibility(spec_tree, shape_tree, mesh: Mesh):
+    """Drop mesh axes from dims they don't divide (e.g. batch=1 cells)."""
+    def fix(spec: P, shp) -> P:
+        parts = list(spec) + [None] * (len(shp.shape) - len(spec))
+        out = []
+        for dim, ax in zip(shp.shape, parts):
+            if ax is None:
+                out.append(None)
+                continue
+            axes = ax if isinstance(ax, tuple) else (ax,)
+            keep = []
+            prod = 1
+            for a in axes:
+                n = mesh.shape[a]
+                if dim % (prod * n) == 0:
+                    keep.append(a)
+                    prod *= n
+            out.append(tuple(keep) if len(keep) > 1 else
+                       (keep[0] if keep else None))
+        return P(*out)
+
+    return jax.tree.map(fix, spec_tree, shape_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# HLO collective accounting
+# ---------------------------------------------------------------------------
+
+_SHAPE_BYTES = {"f32": 4, "f16": 2, "bf16": 2, "s32": 4, "u32": 4, "s8": 1,
+                "u8": 1, "pred": 1, "s64": 8, "u64": 8, "f64": 8, "s16": 2,
+                "u16": 2, "f8e4m3fn": 1, "f8e5m2": 1}
+
+_COLL_RE = re.compile(
+    r"(\w[\w.\-]*)\s*=\s*(\([^)]*\)|[a-z0-9\[\],{}\s]*?)\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(", re.IGNORECASE)
+
+_TYPE_RE = re.compile(r"(f32|bf16|f16|f8e4m3fn|f8e5m2|s64|u64|f64|s32|u32|"
+                      r"s16|u16|s8|u8|pred)\[([\d,]*)\]")
+
+_GROUPS_RE = re.compile(r"replica_groups=\{([^}]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for m in _TYPE_RE.finditer(text):
+        dt, dims = m.group(1), m.group(2)
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _SHAPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str, total_devices: int) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_RE.search(line)
+    if m and m.group(1):
+        first = m.group(1).split("}")[0].strip("{ ")
+        return max(1, len([x for x in first.split(",") if x.strip() != ""]))
+    return total_devices
+
+
+_COMP_RE = re.compile(r"^\s*(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\{\s*$")
+_WHILE_RE = re.compile(r"while\(.*?\).*?condition=%?([\w.\-]+),\s*"
+                       r"body=%?([\w.\-]+)")
+_CONST_RE = re.compile(r"s32\[\]\s+constant\((\d+)\)")
+_CALLED_RE = re.compile(r"to_apply=%?([\w.\-]+)")
+_BRANCH_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+
+
+def _split_computations(hlo_text: str) -> Dict[str, list]:
+    comps: Dict[str, list] = {}
+    cur: Optional[str] = None
+    for line in hlo_text.splitlines():
+        m = _COMP_RE.match(line)
+        if m and "{" in line:
+            cur = m.group(1)
+            comps[cur] = []
+            continue
+        if cur is not None:
+            if line.strip() == "}":
+                cur = None
+                continue
+            comps[cur].append(line)
+    return comps
+
+
+def _wire_bytes_of_line(line: str, kind: str, total_devices: int) -> float:
+    n = _group_size(line, total_devices)
+    result = line.split("=", 1)[1].split(kind)[0]
+    nbytes = _shape_bytes(result)
+    if nbytes == 0:
+        return 0.0
+    if kind == "all-reduce":
+        return 2.0 * nbytes * (n - 1) / max(n, 1)
+    if kind == "all-gather":
+        return nbytes * (n - 1) / max(n, 1)           # result = full gather
+    if kind == "reduce-scatter":
+        return nbytes * (n - 1)                       # result = one shard
+    if kind == "all-to-all":
+        return nbytes * (n - 1) / max(n, 1)
+    return float(nbytes)                              # collective-permute
+
+
+def collective_stats(hlo_text: str, total_devices: int) -> Dict[str, Any]:
+    """Wire bytes per device per collective kind (ring-algorithm model).
+
+    Loop-aware: XLA prints each while-body computation once, so collectives
+    inside scans (layer stacks, microbatch accumulation) are multiplied by
+    the trip count recovered from the loop-condition constant.  Conditional
+    branches inherit the caller's multiplier (an upper bound for sparsely-
+    taken branches like Zamba2's shared block)."""
+    comps = _split_computations(hlo_text)
+    edges: Dict[str, list] = {c: [] for c in comps}
+    local: Dict[str, Dict[str, float]] = {}
+    counts: Dict[str, int] = {}
+    for name, lines in comps.items():
+        loc: Dict[str, float] = {}
+        for line in lines:
+            wm = _WHILE_RE.search(line)
+            if wm:
+                cond, body = wm.group(1), wm.group(2)
+                trips = 1
+                for cl in comps.get(cond, []):
+                    cm = _CONST_RE.search(cl)
+                    if cm:
+                        trips = max(trips, int(cm.group(1)))
+                edges[name].append((body, float(trips)))
+                edges[name].append((cond, float(trips)))
+                continue
+            if "call(" in line:
+                am = _CALLED_RE.search(line)
+                if am and am.group(1) in comps:
+                    edges[name].append((am.group(1), 1.0))
+            bm = _BRANCH_RE.search(line)
+            if bm:
+                for b in bm.group(1).split(","):
+                    b = b.strip().lstrip("%")
+                    if b in comps:
+                        edges[name].append((b, 1.0))
+            m = _COLL_RE.search(line)
+            if not m or "-done" in line:
+                continue
+            kind = m.group(3).lower()
+            wire = _wire_bytes_of_line(line, kind, total_devices)
+            loc[kind] = loc.get(kind, 0.0) + wire
+            counts[kind] = counts.get(kind, 0) + 1
+        local[name] = loc
+
+    # propagate multipliers down from the root (entry) computations in
+    # topological order (Kahn) — a computation's multiplier must be final
+    # before its callees accumulate it.
+    indeg: Dict[str, int] = {c: 0 for c in comps}
+    for name, subs in edges.items():
+        for b, _ in subs:
+            indeg[b] = indeg.get(b, 0) + 1
+    mult: Dict[str, float] = {c: 0.0 for c in comps}
+    work = [c for c, n in indeg.items() if n == 0]
+    for r in work:
+        mult[r] = 1.0
+    while work:
+        c = work.pop()
+        for b, t in edges.get(c, []):
+            mult[b] = mult.get(b, 0.0) + mult[c] * t
+            indeg[b] -= 1
+            if indeg[b] == 0:
+                work.append(b)
+
+    stats = {"all-reduce": 0.0, "all-gather": 0.0, "reduce-scatter": 0.0,
+             "all-to-all": 0.0, "collective-permute": 0.0}
+    flat = {k: 0.0 for k in stats}
+    for name, loc in local.items():
+        for kind, wire in loc.items():
+            stats[kind] += wire * max(mult.get(name, 1.0), 1.0)
+            flat[kind] += wire
+    return {"wire_bytes": stats, "counts": counts,
+            "wire_bytes_body_once": flat,
+            "total_wire_bytes": float(sum(stats.values())),
+            "total_wire_bytes_body_once": float(sum(flat.values()))}
+
+
+# ---------------------------------------------------------------------------
+# cell construction
+# ---------------------------------------------------------------------------
+
+def abstract_params(model):
+    return jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+
+
+def build_cell(arch: str, shape: ShapeSpec, mesh: Mesh,
+               optimized: bool = True
+               ) -> Tuple[Any, Tuple, Any, Any, Dict[str, Any]]:
+    """Returns (fn, example_args, in_shardings, out_shardings, meta).
+
+    ``optimized`` enables the §Perf levers (explicit attention-layout
+    constraints, pinned grad-accumulator sharding); False reproduces the
+    pre-hillclimb baseline."""
+    use_constraints = optimized and (arch == "sd35_vae"
+                                     or PLANS[arch].constraints)
+    SH.set_constraint_mesh(mesh if use_constraints else None)
+    if arch == "sd35_vae":
+        return build_vae_cell(shape, mesh)
+    cfg = RC.get_config(arch)          # rolled scans: HLO stays depth-
+    model = RC.build_model(cfg)        # independent (CPU compile budget)
+    plan = PLANS[arch]
+    maxis = mesh.shape["model"]
+    specs = RC.input_specs(cfg, shape)
+
+    pspecs = model.param_pspecs(maxis)
+    pshapes = abstract_params(model)
+    if plan.fsdp:
+        pspecs = fsdp_param_pspecs(pspecs, pshapes, mesh)
+    pspecs = validate_divisibility(pspecs, pshapes, mesh)
+    meta: Dict[str, Any] = {"plan": dataclasses.asdict(plan)}
+
+    if shape.kind == "train":
+        opt = AdamW(AdamWConfig(moment_dtype=plan.moment_dtype))
+        ostate_shapes = jax.eval_shape(opt.init, pshapes)
+        ospecs = SH.opt_state_pspecs(pspecs, zero1=plan.zero1)
+        ospecs = jax.tree.map(
+            lambda s, shp: validate_divisibility(s, shp, mesh)
+            if isinstance(s, P) else s, ospecs, ostate_shapes,
+            is_leaf=lambda x: isinstance(x, P))
+        bspecs = SH.batch_pspecs_for(mesh, specs)
+        bspecs = validate_divisibility(bspecs, specs, mesh)
+        def rt_validate(spec_tree, shape_tree):
+            rt = SH.retarget_tree(spec_tree, mesh)
+            return jax.tree.map(
+                lambda sp, shp: validate_divisibility(sp, shp, mesh)
+                if isinstance(sp, P) else sp, rt, shape_tree,
+                is_leaf=lambda x: isinstance(x, P))
+
+        in_sh = (rt_validate(pspecs, pshapes),
+                 rt_validate(ospecs, ostate_shapes), None,
+                 rt_validate(bspecs, specs))
+        grad_sh = None
+        gather_sh = None
+        if optimized:
+            def local_spec(sp: P) -> P:
+                return P(*[None if a in (None, "data", "pod")
+                           or (isinstance(a, tuple)
+                               and set(a) & {"data", "pod"}) else a
+                           for a in sp])
+            if plan.grad_accum == "auto":
+                grad_sh = None
+            elif plan.grad_accum == "local":
+                # accumulate grads locally (dp axes stripped): no per-
+                # microbatch cross-data reduction; one reduce-scatter at the
+                # optimizer boundary (where moments are zero1-sharded)
+                grad_sh = jax.tree.map(
+                    lambda sp: NamedSharding(mesh, local_spec(sp)), in_sh[0],
+                    is_leaf=lambda x: isinstance(x, P))
+            else:
+                grad_sh = jax.tree.map(
+                    lambda sp: NamedSharding(mesh, sp), in_sh[0],
+                    is_leaf=lambda x: isinstance(x, P))
+            if plan.gather_once and plan.fsdp:
+                gather_sh = jax.tree.map(
+                    lambda sp: NamedSharding(mesh, local_spec(sp)), in_sh[0],
+                    is_leaf=lambda x: isinstance(x, P))
+        step_fn = make_train_step(model, opt,
+                                  microbatches=plan.microbatches,
+                                  compress_grads=plan.compress_grads,
+                                  grad_shardings=grad_sh,
+                                  grad_dtype=jnp.dtype(plan.grad_dtype),
+                                  param_gather_shardings=gather_sh)
+        out_sh = (in_sh[0], in_sh[1], None, None)
+        args = (pshapes, ostate_shapes, None, specs)
+        return step_fn, args, in_sh, out_sh, meta
+
+    if shape.kind == "prefill":
+        def prefill_fn(params, batch):
+            if cfg.family == "encdec":
+                return model.prefill(params, batch["tokens"], batch["frames"])
+            if cfg.family == "vlm":
+                return model.prefill(params, batch["tokens"],
+                                     batch["vision_embeds"])
+            return model.prefill(params, batch["tokens"])
+
+        bspecs = SH.batch_pspecs_for(mesh, specs)
+        bspecs = validate_divisibility(bspecs, specs, mesh)
+        cache_shapes = jax.eval_shape(
+            lambda: model.init_cache(shape.global_batch, shape.seq_len))
+        cspecs = validate_divisibility(model.cache_pspecs(), cache_shapes,
+                                       mesh)
+        vshard = "model" if cfg.vocab_size % maxis == 0 else None
+        logits_spec = P(SH.dp_axes(mesh), vshard)
+        b = shape.global_batch
+        if b % np.prod([mesh.shape[a] for a in SH.dp_axes(mesh)]) != 0:
+            logits_spec = P(None, vshard)
+        in_sh = (SH.retarget_tree(pspecs, mesh), SH.retarget_tree(bspecs, mesh))
+        out_sh = (SH.retarget_pspec(logits_spec, mesh),
+                  SH.retarget_tree(cspecs, mesh))
+        return prefill_fn, (pshapes, specs), in_sh, out_sh, meta
+
+    if shape.kind == "decode":
+        def decode_fn(params, cache, tokens):
+            return model.decode_step(params, cache, tokens)
+
+        cache_shapes = specs["cache"]
+        cspecs = validate_divisibility(model.cache_pspecs(), cache_shapes,
+                                       mesh)
+        tok_spec = SH.batch_pspec(mesh, 1)
+        dpn = int(np.prod([mesh.shape[a] for a in SH.dp_axes(mesh)]))
+        if shape.global_batch % dpn != 0:
+            tok_spec = P(None)
+        vshard = "model" if cfg.vocab_size % maxis == 0 else None
+        logits_spec = P(tok_spec[0] if len(tok_spec) else None, vshard)
+        in_sh = (SH.retarget_tree(pspecs, mesh),
+                 SH.retarget_tree(cspecs, mesh),
+                 SH.retarget_pspec(tok_spec, mesh))
+        out_sh = (SH.retarget_pspec(logits_spec, mesh),
+                  SH.retarget_tree(cspecs, mesh))
+        args = (pshapes, cache_shapes, specs["tokens"])
+        return decode_fn, args, in_sh, out_sh, meta
+
+    raise ValueError(shape.kind)
+
+
+def build_vae_cell(shape: ShapeSpec, mesh: Mesh):
+    """The paper's own architecture: the SD3.5 VAE decode fleet — batch
+    data-parallel over every mesh axis (the read path of the store)."""
+    from repro.vae.model import SD35_VAE, decode, init_decoder
+    cfg = dataclasses.replace(SD35_VAE, dtype=jnp.bfloat16)
+    res = shape.seq_len                      # image resolution for VAE cells
+    lat = res // cfg.spatial_factor
+    b = shape.global_batch
+    pshapes = jax.eval_shape(
+        lambda: init_decoder(jax.random.PRNGKey(0), cfg))
+    z = jax.ShapeDtypeStruct((b, lat, lat, cfg.latent_channels), jnp.bfloat16)
+    all_axes = tuple(mesh.axis_names)
+
+    def fn(params, z):
+        return decode(params, z, cfg)
+
+    # batch shards over the largest axis prefix that divides it
+    axes, prod = [], 1
+    for a in all_axes:
+        if b % (prod * mesh.shape[a]) == 0:
+            axes.append(a)
+            prod *= mesh.shape[a]
+    bspec = P(tuple(axes) if len(axes) > 1 else (axes[0] if axes else None),
+              None, None, None)
+    pspec = jax.tree.map(lambda _: P(), pshapes)
+    in_sh = (pspec, bspec)
+    out_sh = bspec
+    return fn, (pshapes, z), in_sh, out_sh, {"plan": {"dp": "all-axes"}}
+
+
+# ---------------------------------------------------------------------------
+# run one cell
+# ---------------------------------------------------------------------------
+
+def run_cell(arch: str, shape: ShapeSpec, mesh_kind: str,
+             out_dir: str = ARTIFACT_DIR, verbose: bool = True,
+             optimized: bool = True) -> Dict[str, Any]:
+    mesh = make_production_mesh(multi_pod=mesh_kind == "multi")
+    n_dev = int(np.prod(list(mesh.shape.values())))
+    cell_id = f"{arch}__{shape.name}__{mesh_kind}"
+    result: Dict[str, Any] = {"arch": arch, "shape": shape.name,
+                              "mesh": mesh_kind, "devices": n_dev,
+                              "status": "ok"}
+    t0 = time.time()
+    try:
+        if arch != "sd35_vae":
+            ok, why = RC.cell_applicable(RC.get_config(arch), shape)
+            if not ok:
+                result.update(status="skipped", reason=why)
+                _save(out_dir, cell_id, result)
+                if verbose:
+                    print(f"[dryrun] {cell_id}: SKIP ({why})")
+                return result
+
+        fn, args, in_sh, out_sh, meta = build_cell(arch, shape, mesh,
+                                                   optimized=optimized)
+        meta.setdefault("plan", {})["optimized"] = optimized
+        result.update(meta)
+
+        def to_sharding(tree):
+            return jax.tree.map(
+                lambda s: NamedSharding(mesh, s) if isinstance(s, P) else s,
+                tree, is_leaf=lambda x: isinstance(x, P) or x is None)
+
+        with mesh:
+            jitted = jax.jit(fn, in_shardings=to_sharding(in_sh),
+                             out_shardings=to_sharding(out_sh))
+            lowered = jitted.lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        result["lower_s"] = round(t_lower, 1)
+        result["compile_s"] = round(t_compile, 1)
+        result["cost_analysis"] = {
+            k: float(v) for k, v in (cost or {}).items()
+            if isinstance(v, (int, float)) and k in
+            ("flops", "bytes accessed", "optimal_seconds",
+             "bytes accessed output", "utilization")}
+        if mem is not None:
+            for attr in ("temp_size_in_bytes", "argument_size_in_bytes",
+                         "output_size_in_bytes", "alias_size_in_bytes",
+                         "generated_code_size_in_bytes",
+                         "peak_memory_in_bytes"):
+                v = getattr(mem, attr, None)
+                if v is not None:
+                    result.setdefault("memory_analysis", {})[attr] = int(v)
+        print(f"[dryrun] {cell_id}: memory_analysis =",
+              result.get("memory_analysis"))
+        print(f"[dryrun] {cell_id}: cost_analysis =",
+              result.get("cost_analysis"))
+
+        hlo = compiled.as_text()
+        result["collectives"] = collective_stats(hlo, n_dev)
+        result["hlo_lines"] = hlo.count("\n")
+    except Exception as e:  # noqa: BLE001 - record and continue the matrix
+        result["status"] = "error"
+        result["error"] = f"{type(e).__name__}: {e}"
+        result["traceback"] = traceback.format_exc()[-4000:]
+        if verbose:
+            print(f"[dryrun] {cell_id}: ERROR {result['error']}")
+    result["wall_s"] = round(time.time() - t0, 1)
+    _save(out_dir, cell_id, result)
+    if verbose and result["status"] == "ok":
+        print(f"[dryrun] {cell_id}: OK "
+              f"(lower {result['lower_s']}s, compile {result['compile_s']}s, "
+              f"collective wire "
+              f"{result['collectives']['total_wire_bytes'] / 1e9:.2f} GB)")
+    return result
+
+
+def _save(out_dir: str, cell_id: str, result: Dict[str, Any]) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    with open(os.path.join(out_dir, cell_id + ".json"), "w") as f:
+        json.dump(result, f, indent=1, default=str)
+
+
+def all_cells():
+    for arch in RC.ARCH_IDS:
+        for shape in LM_SHAPES.values():
+            yield arch, shape
+    for shape in VAE_SHAPES.values():
+        yield "sd35_vae", shape
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=ARTIFACT_DIR)
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--baseline", action="store_true",
+                    help="disable the §Perf sharding levers")
+    args = ap.parse_args()
+
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    if args.all:
+        cells = list(all_cells())
+    else:
+        shapes = VAE_SHAPES if args.arch == "sd35_vae" else LM_SHAPES
+        pick = ([shapes[args.shape]] if args.shape
+                else list(shapes.values()))
+        cells = [(args.arch, s) for s in pick]
+
+    failures = 0
+    for arch, shape in cells:
+        for mk in meshes:
+            path = os.path.join(args.out, f"{arch}__{shape.name}__{mk}.json")
+            if args.skip_existing and os.path.exists(path):
+                with open(path) as f:
+                    if json.load(f).get("status") in ("ok", "skipped"):
+                        continue
+            r = run_cell(arch, shape, mk, out_dir=args.out,
+                         optimized=not args.baseline)
+            failures += r["status"] == "error"
+    print(f"[dryrun] done, {failures} failure(s)")
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

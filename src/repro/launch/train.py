@@ -1,0 +1,63 @@
+"""Training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch granite-8b \
+        --steps 50 --reduced            # CPU-scale smoke
+    PYTHONPATH=src python -m repro.launch.train --arch granite-8b \
+        --mesh single                   # production mesh (on a pod)
+
+On real hardware the mesh path shards params/optimizer exactly like the
+dry-run plans; in this container use --reduced (1 device).
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+import jax
+
+import repro.configs as RC
+from repro.data.synthetic import DataConfig, SyntheticTokens
+from repro.train.optim import AdamW, AdamWConfig
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-8b", choices=RC.ARCH_IDS)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--reduced", action="store_true",
+                    help="smoke-scale config (CPU)")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=25)
+    ap.add_argument("--compress-grads", action="store_true")
+    args = ap.parse_args()
+
+    cfg = RC.get_config(args.arch)
+    if args.reduced:
+        cfg = RC.reduced_config(cfg)
+    if cfg.family in ("encdec", "vlm") and args.reduced:
+        raise SystemExit("use examples/train_tiny_lm.py for frontend archs")
+    model = RC.build_model(cfg)
+    data = SyntheticTokens(DataConfig(vocab_size=cfg.vocab_size,
+                                      seq_len=args.seq,
+                                      global_batch=args.batch))
+    opt = AdamW(AdamWConfig(lr=args.lr, warmup_steps=10,
+                            total_steps=args.steps))
+    trainer = Trainer(model, opt, data, TrainerConfig(
+        steps=args.steps, ckpt_every=args.ckpt_every,
+        ckpt_dir=args.ckpt_dir, microbatches=args.microbatches,
+        compress_grads=args.compress_grads))
+    trainer.install_signal_handlers()
+    params = model.init(jax.random.PRNGKey(0))
+    trainer.run(params)
+    print(f"[train] done; stragglers={trainer.stragglers}, "
+          f"median step {sorted(trainer.step_times)[len(trainer.step_times)//2]:.2f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+"""LM substrate for the assigned architecture pool."""

@@ -1,0 +1,266 @@
+"""Transformer blocks: GQA attention (qk-norm / bias / sliding-window /
+M-RoPE variants), dense MLP, and capacity-based top-k MoE.
+
+Every ``*_init`` has a matching ``*_pspecs`` returning the PartitionSpec
+tree for tensor parallelism on the ``model`` mesh axis (Megatron layout:
+column-parallel in-projections, row-parallel out-projections; experts
+expert-parallel when E divides the axis, otherwise ffn-sharded).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import common as C
+from repro.models.common import ModelConfig
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+def attn_init(key, cfg: ModelConfig) -> Dict[str, Any]:
+    dt = cfg.dtype
+    d, qd, kvd, hd = cfg.d_model, cfg.q_dim, cfg.kv_dim, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": C.dense(ks[0], d, qd, dt),
+        "wk": C.dense(ks[1], d, kvd, dt),
+        "wv": C.dense(ks[2], d, kvd, dt),
+        "wo": C.dense(ks[3], qd, d, dt),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((qd,), dt)
+        p["bk"] = jnp.zeros((kvd,), dt)
+        p["bv"] = jnp.zeros((kvd,), dt)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), dt)
+        p["k_norm"] = jnp.ones((hd,), dt)
+    return p
+
+
+def attn_pspecs(cfg: ModelConfig) -> Dict[str, Any]:
+    p = {"wq": P(None, "model"), "wk": P(None, "model"),
+         "wv": P(None, "model"), "wo": P("model", None)}
+    if cfg.qkv_bias:
+        p.update(bq=P("model"), bk=P("model"), bv=P("model"))
+    if cfg.qk_norm:
+        p.update(q_norm=P(None), k_norm=P(None))
+    return p
+
+
+def _qkv(params, x: jax.Array, cfg: ModelConfig,
+         positions: jax.Array) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """x [B, S, D] -> q [B, S, Hq, dh], k/v [B, S, Hkv, dh], roped."""
+    b, s, _ = x.shape
+    hd = cfg.head_dim
+    q = x @ params["wq"]
+    k = x @ params["wk"]
+    v = x @ params["wv"]
+    if cfg.qkv_bias:
+        q = q + params["bq"].astype(q.dtype)
+        k = k + params["bk"].astype(k.dtype)
+        v = v + params["bv"].astype(v.dtype)
+    q = q.reshape(b, s, cfg.n_heads, hd)
+    k = k.reshape(b, s, cfg.n_kv_heads, hd)
+    v = v.reshape(b, s, cfg.n_kv_heads, hd)
+    if cfg.qk_norm:
+        q = C.rms_norm(q, params["q_norm"], cfg.norm_eps)
+        k = C.rms_norm(k, params["k_norm"], cfg.norm_eps)
+    if cfg.mrope_sections is not None:
+        pos3 = jnp.broadcast_to(positions[None], (3,) + positions.shape)
+        q = C.apply_mrope(q, pos3, cfg.rope_theta, cfg.mrope_sections)
+        k = C.apply_mrope(k, pos3, cfg.rope_theta, cfg.mrope_sections)
+    elif cfg.rope_theta > 0:
+        q = C.apply_rope(q, positions, cfg.rope_theta)
+        k = C.apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def constrain_attention_layout(q: jax.Array, k: jax.Array, v: jax.Array,
+                               cfg: ModelConfig):
+    """Pin the [n, h, s, d] attention layout so XLA never falls back to
+    batch replication (§Perf iteration 1).
+
+    heads % TP == 0  -> Megatron head sharding P(dp, model, None, None);
+    otherwise        -> sequence-parallel scores: q's seq dim carries the
+                        model axis (k/v replicated over model), so the
+                        [B, H, Sq, Skv] score tensor shards on Sq instead
+                        of XLA improvising."""
+    from repro.dist.sharding import constrain, get_constraint_mesh
+    mesh = get_constraint_mesh()
+    if mesh is None:
+        return q, k, v
+    heads_ok = q.shape[1] % mesh.shape["model"] == 0 and \
+        k.shape[1] % mesh.shape["model"] == 0
+    if heads_ok:
+        q = constrain(q, "data", "model", None, None)
+        k = constrain(k, "data", "model", None, None)
+        v = constrain(v, "data", "model", None, None)
+    else:
+        q = constrain(q, "data", None, "model", None)
+        k = constrain(k, "data", None, None, None)
+        v = constrain(v, "data", None, None, None)
+    return q, k, v
+
+
+def attention(params, x: jax.Array, cfg: ModelConfig,
+              positions: jax.Array, causal: bool = True,
+              kv: Optional[Tuple[jax.Array, jax.Array]] = None,
+              impl: Optional[str] = None) -> jax.Array:
+    """Full-sequence attention (train / prefill).  If ``kv`` is given
+    (cross-attention), x only produces queries."""
+    from repro.kernels import ops
+    b, s, _ = x.shape
+    if kv is None:
+        q, k, v = _qkv(params, x, cfg, positions)
+    else:
+        q = (x @ params["wq"]).reshape(b, s, cfg.n_heads, cfg.head_dim)
+        if cfg.qkv_bias:
+            q = q + params["bq"].astype(q.dtype).reshape(cfg.n_heads, cfg.head_dim)
+        k, v = kv
+    qt, kt, vt = constrain_attention_layout(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+        v.transpose(0, 2, 1, 3), cfg)
+    o = ops.flash_attention(
+        qt, kt, vt, causal=causal,
+        window=cfg.sliding_window if kv is None else None, impl=impl)
+    o = o.transpose(0, 2, 1, 3).reshape(b, s, cfg.q_dim)
+    return o @ params["wo"]
+
+
+def attention_decode(params, x1: jax.Array, cfg: ModelConfig,
+                     k_cache: jax.Array, v_cache: jax.Array,
+                     pos: jax.Array, impl: Optional[str] = None
+                     ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """One-token decode.  x1 [B, 1, D]; caches [B, Hkv, S, dh]; pos [B].
+
+    Returns (out [B, 1, D], new_k_cache, new_v_cache).  Sliding windows use
+    ring-buffer indexing (RoPE is applied pre-cache so slot order is free).
+    """
+    from repro.kernels import ops
+    b = x1.shape[0]
+    s_max = k_cache.shape[2]
+    q, k, v = _qkv(params, x1, cfg, pos[:, None])
+    slot = pos % s_max if cfg.sliding_window else jnp.minimum(pos, s_max - 1)
+    bidx = jnp.arange(b)
+    k_cache = k_cache.at[bidx, :, slot].set(k[:, 0].astype(k_cache.dtype))
+    v_cache = v_cache.at[bidx, :, slot].set(v[:, 0].astype(v_cache.dtype))
+    lengths = jnp.minimum(pos + 1, s_max)
+    o = ops.decode_attention(q[:, 0], k_cache, v_cache, lengths, impl=impl)
+    return (o.reshape(b, 1, cfg.q_dim) @ params["wo"]), k_cache, v_cache
+
+
+# ---------------------------------------------------------------------------
+# dense MLP
+# ---------------------------------------------------------------------------
+
+def mlp_init(key, cfg: ModelConfig, d_ff: Optional[int] = None) -> Dict[str, Any]:
+    dt = cfg.dtype
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    if cfg.act == "swiglu":
+        return {"w_gate": C.dense(ks[0], d, f, dt),
+                "w_up": C.dense(ks[1], d, f, dt),
+                "w_down": C.dense(ks[2], f, d, dt)}
+    return {"w_up": C.dense(ks[0], d, f, dt),
+            "b_up": jnp.zeros((f,), dt),
+            "w_down": C.dense(ks[1], f, d, dt),
+            "b_down": jnp.zeros((d,), dt)}
+
+
+def mlp_pspecs(cfg: ModelConfig) -> Dict[str, Any]:
+    if cfg.act == "swiglu":
+        return {"w_gate": P(None, "model"), "w_up": P(None, "model"),
+                "w_down": P("model", None)}
+    return {"w_up": P(None, "model"), "b_up": P("model"),
+            "w_down": P("model", None), "b_down": P(None)}
+
+
+def mlp(params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    if cfg.act == "swiglu":
+        return (jax.nn.silu(x @ params["w_gate"]) * (x @ params["w_up"])) \
+            @ params["w_down"]
+    h = jax.nn.gelu(x @ params["w_up"] + params["b_up"].astype(x.dtype))
+    return h @ params["w_down"] + params["b_down"].astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# mixture of experts (top-k, capacity-based, sort-free dispatch)
+# ---------------------------------------------------------------------------
+
+def moe_init(key, cfg: ModelConfig) -> Dict[str, Any]:
+    dt = cfg.dtype
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    ks = jax.random.split(key, 4)
+
+    def ex(k, cin, cout):
+        return jax.vmap(lambda kk: C.dense(kk, cin, cout, dt))(
+            jax.random.split(k, e))
+
+    return {"router": C.dense(ks[0], d, e, jnp.float32),
+            "w_gate": ex(ks[1], d, f),
+            "w_up": ex(ks[2], d, f),
+            "w_down": ex(ks[3], f, d)}
+
+
+def moe_pspecs(cfg: ModelConfig, model_axis_size: int) -> Dict[str, Any]:
+    if cfg.n_experts % model_axis_size == 0:
+        ex = P("model", None, None)        # expert parallel
+    else:
+        ex = P(None, None, "model")        # ffn-sharded within each expert
+        return {"router": P(None, None), "w_gate": ex, "w_up": ex,
+                "w_down": P(None, "model", None)}
+    return {"router": P(None, None), "w_gate": ex, "w_up": ex, "w_down": ex}
+
+
+def moe(params, x: jax.Array, cfg: ModelConfig,
+        capacity_factor: Optional[float] = None) -> jax.Array:
+    """Capacity-based top-k MoE (Switch-style dropping).
+
+    Tokens are ranked into per-expert slots with a cumsum over the one-hot
+    assignment (no sort); slot tensors [E, Cap, d] shard over the model
+    axis (expert parallel), so dispatch/combine lower to all-to-alls.
+    """
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.experts_per_token
+    capacity_factor = capacity_factor or cfg.capacity_factor
+    t = b * s
+    xt = x.reshape(t, d)
+
+    logits = (xt.astype(jnp.float32) @ params["router"])        # [T, E]
+    gate_all = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(gate_all, k)                     # [T, k]
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+
+    cap = int(max(1, round(t * k / e * capacity_factor)))
+    onehot = jax.nn.one_hot(idx, e, dtype=jnp.int32)            # [T, k, E]
+    flat = onehot.reshape(t * k, e)
+    rank = (jnp.cumsum(flat, axis=0) * flat).sum(-1) - 1        # slot per entry
+    rank = rank.reshape(t, k)                                   # [T, k]
+    expert = idx                                                # [T, k]
+    keep = rank < cap
+
+    # dispatch: scatter tokens into [E, Cap, d]
+    slots = jnp.zeros((e, cap, d), x.dtype)
+    eidx = jnp.where(keep, expert, 0)
+    ridx = jnp.where(keep, rank, cap - 1)
+    xk = jnp.broadcast_to(xt[:, None], (t, k, d))
+    w = jnp.where(keep, 1.0, 0.0).astype(x.dtype)
+    slots = slots.at[eidx.reshape(-1), ridx.reshape(-1)].add(
+        (xk * w[..., None]).reshape(t * k, d), mode="drop")
+
+    # expert computation (batched over E)
+    hg = jnp.einsum("ecd,edf->ecf", slots, params["w_gate"])
+    hu = jnp.einsum("ecd,edf->ecf", slots, params["w_up"])
+    ho = jnp.einsum("ecf,efd->ecd", jax.nn.silu(hg) * hu, params["w_down"])
+
+    # combine: gather back and weight by gate
+    out_k = ho[eidx.reshape(-1), ridx.reshape(-1)].reshape(t, k, d)
+    out = (out_k * (gates * keep).astype(out_k.dtype)[..., None]).sum(axis=1)
+    return out.reshape(b, s, d)

@@ -1,0 +1,208 @@
+"""Shared model substrate: config, norms, rotary embeddings, inits.
+
+One flat ``ModelConfig`` covers the whole assigned architecture pool
+(dense GQA / MoE / RWKV6 / Mamba2-hybrid / enc-dec / VLM); family-specific
+fields are simply unused elsewhere.  Configs for the concrete architectures
+live in ``repro.configs``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                      # dense|moe|ssm|hybrid|encdec|vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    d_head: Optional[int] = None
+    # attention options
+    qk_norm: bool = False
+    qkv_bias: bool = False
+    rope_theta: float = 1e6
+    sliding_window: Optional[int] = None
+    mrope_sections: Optional[Tuple[int, int, int]] = None
+    # mlp
+    act: str = "swiglu"              # swiglu|gelu
+    # moe
+    n_experts: int = 0
+    experts_per_token: int = 0
+    capacity_factor: float = 1.25
+    # ssm
+    ssm_type: Optional[str] = None   # rwkv6|mamba2
+    ssm_state: int = 64
+    ssm_expand: int = 2
+    conv_width: int = 4
+    ssm_head_dim: int = 64
+    # hybrid (zamba2): shared transformer block every ``attn_every`` layers
+    attn_every: int = 0
+    # enc-dec (whisper)
+    encoder_layers: int = 0
+    encoder_seq: int = 0
+    # misc
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = True
+    dtype: Any = jnp.bfloat16
+    frontend: Optional[str] = None   # audio|vision (STUB per assignment)
+    scan_layers: bool = True
+    scan_unroll: bool = False        # full-unroll layer scans (dry-run FLOP
+                                     # accounting: XLA cost_analysis counts
+                                     # rolled loop bodies once)
+    remat: bool = True
+    # long-context capability marker (sub-quadratic decode state)
+    subquadratic: bool = False
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_head if self.d_head else self.d_model // self.n_heads
+
+    @property
+    def q_dim(self) -> int:
+        return self.n_heads * self.head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.n_kv_heads * self.head_dim
+
+    # -- analytic parameter / FLOP accounting (for roofline §Roofline) -------
+    def param_count(self) -> int:
+        d, f, v = self.d_model, self.d_ff, self.vocab_size
+        attn = d * self.q_dim + 2 * d * self.kv_dim + self.q_dim * d
+        if self.family == "moe":
+            mlp = 3 * d * f * self.n_experts + d * self.n_experts  # + router
+        elif self.act == "swiglu":
+            mlp = 3 * d * f
+        else:
+            mlp = 2 * d * f
+        if self.ssm_type == "rwkv6":
+            attn = 5 * d * d                      # r,k,v,g,o projections
+            mlp = 2 * d * f
+        elif self.ssm_type == "mamba2":
+            d_in = self.ssm_expand * d
+            attn = 0
+            mlp = d * (2 * d_in + 2 * self.ssm_state + d_in // self.ssm_head_dim) \
+                + d_in * d
+            if self.family == "hybrid" and self.attn_every:
+                pass                              # shared block added below
+        per_layer = attn + mlp
+        total = self.n_layers * per_layer + v * d
+        if not self.tie_embeddings:
+            total += v * d
+        if self.family == "hybrid" and self.attn_every:
+            d_sh = self.d_model
+            shared = (4 * d_sh * d_sh) + 3 * d_sh * self.d_ff
+            total += shared                        # one shared block, reused
+        if self.family == "encdec":
+            enc = self.encoder_layers * (4 * d * d + 2 * d * f)
+            cross = self.n_layers * (4 * d * d)
+            total += enc + cross
+        return int(total)
+
+    def active_param_count(self) -> int:
+        """Params touched per token (= dense count except for MoE)."""
+        if self.family != "moe":
+            return self.param_count()
+        d, f = self.d_model, self.d_ff
+        dense = self.param_count() - 3 * d * f * self.n_experts * self.n_layers
+        return int(dense + 3 * d * f * self.experts_per_token * self.n_layers)
+
+
+# ---------------------------------------------------------------------------
+# primitives
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    inv = jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return (xf * inv * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def layer_norm(x: jax.Array, scale: jax.Array, bias: jax.Array,
+               eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = xf.mean(axis=-1, keepdims=True)
+    var = xf.var(axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [..., seq, heads, d]; positions: broadcastable to [..., seq]."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                       # [d/2]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [..., seq, d/2]
+    cos = jnp.cos(angles)[..., None, :]                # [..., seq, 1, d/2]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: jax.Array, positions3: jax.Array, theta: float,
+                sections: Tuple[int, int, int]) -> jax.Array:
+    """Qwen2-VL multimodal RoPE.  positions3: [3, ..., seq] (t, h, w ids);
+    frequency space is partitioned into ``sections`` (halves of d/2)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                       # [d/2]
+    # per-frequency-slot section id: first sections[0] slots follow the
+    # temporal stream, then height, then width (Qwen2-VL layout)
+    sec = jnp.concatenate([jnp.full((s,), i, jnp.int32)
+                           for i, s in enumerate(sections)])
+    angles = positions3[..., None].astype(jnp.float32) * freqs  # [3, ..., s, d/2]
+    idx = jnp.broadcast_to(sec, angles.shape[1:])[None]
+    angles = jnp.take_along_axis(angles, idx, axis=0)[0]
+    cos = jnp.cos(angles)[..., None, :]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(length: int, dim: int) -> jax.Array:
+    pos = jnp.arange(length, dtype=jnp.float32)[:, None]
+    div = jnp.exp(jnp.arange(0, dim, 2, jnp.float32) * (-math.log(10000.0) / dim))
+    pe = jnp.zeros((length, dim), jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(pos * div))
+    pe = pe.at[:, 1::2].set(jnp.cos(pos * div))
+    return pe
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+def dense(key, cin: int, cout: int, dtype, std: Optional[float] = None):
+    std = (1.0 / math.sqrt(cin)) if std is None else std
+    return jax.random.normal(key, (cin, cout), dtype) * jnp.asarray(std, dtype)
+
+
+def stacked_init(init_fn, key, n: int):
+    """vmap an init function over a leading layer axis (scan-ready stack)."""
+    return jax.vmap(init_fn)(jax.random.split(key, n))
+
+
+def cross_entropy_loss(logits: jax.Array, labels: jax.Array,
+                       ignore_id: int = -1) -> jax.Array:
+    """Mean token NLL with ignore mask; logits fp32-softmaxed."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(
+        logits, jnp.maximum(labels, 0)[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    mask = (labels != ignore_id).astype(jnp.float32)
+    return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)

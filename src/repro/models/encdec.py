@@ -1,0 +1,278 @@
+"""Encoder-decoder LM (Whisper-style) — the [audio] entry of the pool.
+
+The conv frontend is a STUB per the assignment: ``input_specs`` provides
+precomputed frame embeddings [B, encoder_seq, d] (what Whisper's two conv
+layers would produce from the mel spectrogram).  Backbone: bidirectional
+encoder (sinusoidal positions) + causal decoder with cross-attention
+(learned positions), LayerNorm with bias, GELU MLPs, no RoPE.
+
+Serving: the cross-attention K/V are computed once at prefill and reused
+every decode step (they never change), so a decode step touches only the
+decoder self-attention cache.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import blocks as B
+from repro.models import common as C
+from repro.models.common import ModelConfig
+
+
+def _ln_init(d, dtype):
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+_LN_SPEC = {"scale": P(None), "bias": P(None)}
+
+
+class EncDecLM:
+    def __init__(self, cfg: ModelConfig, max_target_positions: int = 32768):
+        assert cfg.family == "encdec"
+        self.cfg = cfg
+        self.max_pos = max_target_positions
+
+    # ------------------------------------------------------------------ init
+    def _enc_layer_init(self, key):
+        cfg = self.cfg
+        k1, k2 = jax.random.split(key)
+        return {"ln1": _ln_init(cfg.d_model, cfg.dtype),
+                "attn": B.attn_init(k1, cfg),
+                "ln2": _ln_init(cfg.d_model, cfg.dtype),
+                "mlp": B.mlp_init(k2, cfg)}
+
+    def _dec_layer_init(self, key):
+        cfg = self.cfg
+        k1, k2, k3 = jax.random.split(key, 3)
+        return {"ln1": _ln_init(cfg.d_model, cfg.dtype),
+                "self_attn": B.attn_init(k1, cfg),
+                "lnx": _ln_init(cfg.d_model, cfg.dtype),
+                "cross_attn": B.attn_init(k2, cfg),
+                "ln2": _ln_init(cfg.d_model, cfg.dtype),
+                "mlp": B.mlp_init(k3, cfg)}
+
+    def init(self, key) -> Dict[str, Any]:
+        cfg = self.cfg
+        ks = jax.random.split(key, 5)
+        return {
+            "embed": jax.random.normal(
+                ks[0], (cfg.vocab_size, cfg.d_model), cfg.dtype) * 0.02,
+            "pos_embed": jax.random.normal(
+                ks[1], (self.max_pos, cfg.d_model), cfg.dtype) * 0.02,
+            "enc_layers": C.stacked_init(self._enc_layer_init, ks[2],
+                                         cfg.encoder_layers),
+            "enc_norm": _ln_init(cfg.d_model, cfg.dtype),
+            "dec_layers": C.stacked_init(self._dec_layer_init, ks[3],
+                                         cfg.n_layers),
+            "final_norm": _ln_init(cfg.d_model, cfg.dtype),
+        }
+
+    def param_pspecs(self, model_axis: int = 16) -> Dict[str, Any]:
+        cfg = self.cfg
+        enc_layer = {"ln1": _LN_SPEC, "attn": B.attn_pspecs(cfg),
+                     "ln2": _LN_SPEC, "mlp": B.mlp_pspecs(cfg)}
+        dec_layer = {"ln1": _LN_SPEC, "self_attn": B.attn_pspecs(cfg),
+                     "lnx": _LN_SPEC, "cross_attn": B.attn_pspecs(cfg),
+                     "ln2": _LN_SPEC, "mlp": B.mlp_pspecs(cfg)}
+
+        def stack(t):
+            return jax.tree.map(lambda p: P(None, *p), t,
+                                is_leaf=lambda x: isinstance(x, P))
+
+        return {"embed": P("model", None), "pos_embed": P(None, None),
+                "enc_layers": stack(enc_layer), "enc_norm": _LN_SPEC,
+                "dec_layers": stack(dec_layer), "final_norm": _LN_SPEC}
+
+    # ----------------------------------------------------------------- norms
+    def _ln(self, x, p):
+        return C.layer_norm(x, p["scale"], p["bias"], self.cfg.norm_eps)
+
+    # --------------------------------------------------------------- encoder
+    def encode(self, params, frames: jax.Array) -> jax.Array:
+        """frames [B, Se, d] (stub frontend output) -> encoder states."""
+        cfg = self.cfg
+        b, se, _ = frames.shape
+        pos = C.sinusoidal_positions(se, cfg.d_model).astype(cfg.dtype)
+        x = frames.astype(cfg.dtype) + pos[None]
+        positions = jnp.broadcast_to(jnp.arange(se)[None], (b, se))
+
+        def body(p, x):
+            from repro.dist.sharding import constrain
+            x = constrain(x, "data", None, None)
+            h = B.attention(p["attn"], self._ln(x, p["ln1"]), cfg, positions,
+                            causal=False)
+            x = constrain(x + h, "data", None, None)
+            return x + B.mlp(p["mlp"], self._ln(x, p["ln2"]), cfg)
+
+        if cfg.remat:
+            body = jax.checkpoint(body)
+
+        def scan_fn(x, p):
+            return body(p, x), None
+
+        x, _ = jax.lax.scan(scan_fn, x, params["enc_layers"],
+                            unroll=cfg.encoder_layers
+                            if cfg.scan_unroll else 1)
+        return self._ln(x, params["enc_norm"])
+
+    # --------------------------------------------------------------- decoder
+    def _dec_forward(self, params, tokens, enc_out):
+        cfg = self.cfg
+        b, s = tokens.shape
+        x = params["embed"][tokens] + params["pos_embed"][:s][None]
+        positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+        se = enc_out.shape[1]
+
+        def body(p, x):
+            from repro.dist.sharding import constrain
+            x = constrain(x, "data", None, None)
+            h = B.attention(p["self_attn"], self._ln(x, p["ln1"]), cfg,
+                            positions, causal=True)
+            x = constrain(x + h, "data", None, None)
+            # cross attention: k/v from encoder states
+            kx = (enc_out @ p["cross_attn"]["wk"]).reshape(
+                b, se, cfg.n_kv_heads, cfg.head_dim)
+            vx = (enc_out @ p["cross_attn"]["wv"]).reshape(
+                b, se, cfg.n_kv_heads, cfg.head_dim)
+            if cfg.qkv_bias:
+                kx = kx + p["cross_attn"]["bk"].astype(kx.dtype).reshape(
+                    cfg.n_kv_heads, cfg.head_dim)
+                vx = vx + p["cross_attn"]["bv"].astype(vx.dtype).reshape(
+                    cfg.n_kv_heads, cfg.head_dim)
+            h = B.attention(p["cross_attn"], self._ln(x, p["lnx"]), cfg,
+                            positions, causal=False, kv=(kx, vx))
+            x = x + h
+            return x + B.mlp(p["mlp"], self._ln(x, p["ln2"]), cfg)
+
+        if cfg.remat:
+            body = jax.checkpoint(body)
+
+        def scan_fn(x, p):
+            return body(p, x), None
+
+        x, _ = jax.lax.scan(scan_fn, x, params["dec_layers"],
+                            unroll=cfg.n_layers if cfg.scan_unroll else 1)
+        return self._ln(x, params["final_norm"])
+
+    def loss(self, params, batch: Dict[str, jax.Array]) -> jax.Array:
+        enc_out = self.encode(params, batch["frames"])
+        h = self._dec_forward(params, batch["tokens"], enc_out)
+        logits = h @ params["embed"].T
+        return C.cross_entropy_loss(logits, batch["labels"])
+
+    # ------------------------------------------------------------------ cache
+    def init_cache(self, batch: int, max_len: int) -> Dict[str, Any]:
+        cfg = self.cfg
+        L = cfg.n_layers
+        se = cfg.encoder_seq
+        shape = (L, batch, cfg.n_kv_heads, max_len, cfg.head_dim)
+        xshape = (L, batch, cfg.n_kv_heads, se, cfg.head_dim)
+        return {"pos": jnp.zeros((batch,), jnp.int32),
+                "k": jnp.zeros(shape, cfg.dtype),
+                "v": jnp.zeros(shape, cfg.dtype),
+                "xk": jnp.zeros(xshape, cfg.dtype),
+                "xv": jnp.zeros(xshape, cfg.dtype)}
+
+    def cache_pspecs(self) -> Dict[str, Any]:
+        kv = P(None, "data", None, "model", None)   # sequence-sharded
+        # cross K/V: 1500 encoder frames don't divide the model axis and the
+        # tensor is small — replicate over 'model', shard batch only.
+        xkv = P(None, "data", None, None, None)
+        return {"pos": P("data"), "k": kv, "v": kv, "xk": xkv, "xv": xkv}
+
+    # ---------------------------------------------------------------- prefill
+    def prefill(self, params, tokens: jax.Array, frames: jax.Array,
+                max_len: Optional[int] = None
+                ) -> Tuple[jax.Array, Dict[str, Any]]:
+        cfg = self.cfg
+        enc_out = self.encode(params, frames)
+        b, s = tokens.shape
+        max_len = max(max_len or s, s)
+        se = enc_out.shape[1]
+        x = params["embed"][tokens] + params["pos_embed"][:s][None]
+        positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+
+        def scan_fn(x, p):
+            xin = self._ln(x, p["ln1"])
+            q, k, v = B._qkv(p["self_attn"], xin, cfg, positions)
+            from repro.kernels import ops
+            qt, kt, vt = B.constrain_attention_layout(
+                q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                v.transpose(0, 2, 1, 3), cfg)
+            o = ops.flash_attention(qt, kt, vt, causal=True)
+            kt, vt = kt, vt
+            x = x + o.transpose(0, 2, 1, 3).reshape(b, s, cfg.q_dim) \
+                @ p["self_attn"]["wo"]
+            kx = (enc_out @ p["cross_attn"]["wk"]).reshape(
+                b, se, cfg.n_kv_heads, cfg.head_dim)
+            vx = (enc_out @ p["cross_attn"]["wv"]).reshape(
+                b, se, cfg.n_kv_heads, cfg.head_dim)
+            if cfg.qkv_bias:
+                kx = kx + p["cross_attn"]["bk"].astype(kx.dtype).reshape(
+                    cfg.n_kv_heads, cfg.head_dim)
+                vx = vx + p["cross_attn"]["bv"].astype(vx.dtype).reshape(
+                    cfg.n_kv_heads, cfg.head_dim)
+            h = B.attention(p["cross_attn"], self._ln(x, p["lnx"]), cfg,
+                            positions, causal=False, kv=(kx, vx))
+            x = x + h
+            x = x + B.mlp(p["mlp"], self._ln(x, p["ln2"]), cfg)
+            if s < max_len:                          # free slots for decode
+                pad = [(0, 0), (0, 0), (0, max_len - s), (0, 0)]
+                kt_p, vt_p = jnp.pad(kt, pad), jnp.pad(vt, pad)
+            else:
+                kt_p, vt_p = kt, vt
+            return x, {"k": kt_p, "v": vt_p,
+                       "xk": kx.transpose(0, 2, 1, 3),
+                       "xv": vx.transpose(0, 2, 1, 3)}
+
+        x, ys = jax.lax.scan(scan_fn, x, params["dec_layers"],
+                             unroll=cfg.n_layers if cfg.scan_unroll else 1)
+        h = self._ln(x, params["final_norm"])
+        cache = {"pos": jnp.full((b,), s, jnp.int32), "k": ys["k"],
+                 "v": ys["v"], "xk": ys["xk"], "xv": ys["xv"]}
+        return (h[:, -1] @ params["embed"].T), cache
+
+    # ------------------------------------------------------------ decode step
+    def decode_step(self, params, cache: Dict[str, Any], tokens: jax.Array
+                    ) -> Tuple[jax.Array, Dict[str, Any]]:
+        from repro.kernels import ops
+        cfg = self.cfg
+        b = tokens.shape[0]
+        pos = cache["pos"]
+        x = params["embed"][tokens][:, None, :] + \
+            params["pos_embed"][jnp.minimum(pos, self.max_pos - 1)][:, None, :]
+        se = cache["xk"].shape[3]
+
+        def scan_fn(carry, inp):
+            x = carry
+            p, cl = inp["p"], inp["c"]
+            h, kc, vc = B.attention_decode(p["self_attn"],
+                                           self._ln(x, p["ln1"]), cfg,
+                                           cl["k"], cl["v"], pos)
+            x = x + h
+            # cross attention against the cached encoder K/V
+            xin = self._ln(x, p["lnx"])
+            q = (xin @ p["cross_attn"]["wq"]).reshape(
+                b, cfg.n_heads, cfg.head_dim)
+            if cfg.qkv_bias:
+                q = q + p["cross_attn"]["bq"].astype(q.dtype).reshape(
+                    cfg.n_heads, cfg.head_dim)
+            o = ops.decode_attention(q, cl["xk"], cl["xv"],
+                                     jnp.full((b,), se, jnp.int32))
+            x = x + o.reshape(b, 1, cfg.q_dim) @ p["cross_attn"]["wo"]
+            x = x + B.mlp(p["mlp"], self._ln(x, p["ln2"]), cfg)
+            return x, {"k": kc, "v": vc}
+
+        per_layer = {"p": params["dec_layers"],
+                     "c": {k: cache[k] for k in ("k", "v", "xk", "xv")}}
+        x, new_kv = jax.lax.scan(scan_fn, x, per_layer,
+                                 unroll=cfg.n_layers if cfg.scan_unroll else 1)
+        h = self._ln(x[:, 0], params["final_norm"])
+        out = {"pos": pos + 1, "k": new_kv["k"], "v": new_kv["v"],
+               "xk": cache["xk"], "xv": cache["xv"]}
+        return (h @ params["embed"].T), out

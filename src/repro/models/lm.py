@@ -1,0 +1,456 @@
+"""Decoder-only causal LM covering the dense / MoE / SSM / hybrid / VLM
+families of the assigned pool with one code path.
+
+Layers are *scanned*: parameters are stacked on a leading L axis and the
+block is a single traced function — this keeps HLO size (and CPU compile
+time for the 512-device dry-runs) independent of depth, and is also what
+production frameworks do (MaxText).  The hybrid family (Zamba2) carries a
+*shared* transformer block outside the stack, applied every
+``cfg.attn_every`` layers via ``lax.cond`` inside the scan.
+
+Three entry points per model:
+  loss(params, batch)                      training objective
+  prefill(params, tokens, ...)             full-seq forward + cache build
+  decode_step(params, cache, tokens, pos)  single-token serving step
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import blocks as B
+from repro.models import common as C
+from repro.models import ssm as S
+from repro.models.common import ModelConfig
+
+
+def _norm_scale_init(d, dtype):
+    return jnp.ones((d,), dtype)
+
+
+class CausalLM:
+    def __init__(self, cfg: ModelConfig):
+        assert cfg.family in ("dense", "moe", "ssm", "hybrid", "vlm")
+        self.cfg = cfg
+
+    # ------------------------------------------------------------------ init
+    def _layer_init(self, key) -> Dict[str, Any]:
+        cfg = self.cfg
+        k1, k2, k3 = jax.random.split(key, 3)
+        d = cfg.d_model
+        if cfg.ssm_type == "rwkv6":
+            return {"ln1": _norm_scale_init(d, cfg.dtype),
+                    "ln2": _norm_scale_init(d, cfg.dtype),
+                    "mix": S.rwkv6_init(k1, cfg)}
+        if cfg.ssm_type == "mamba2":
+            return {"ln1": _norm_scale_init(d, cfg.dtype),
+                    "mix": S.mamba2_init(k1, cfg)}
+        layer = {"ln1": _norm_scale_init(d, cfg.dtype),
+                 "attn": B.attn_init(k1, cfg),
+                 "ln2": _norm_scale_init(d, cfg.dtype)}
+        if cfg.family == "moe":
+            layer["moe"] = B.moe_init(k2, cfg)
+        else:
+            layer["mlp"] = B.mlp_init(k2, cfg)
+        return layer
+
+    def _layer_pspecs(self, model_axis: int) -> Dict[str, Any]:
+        cfg = self.cfg
+        if cfg.ssm_type == "rwkv6":
+            return {"ln1": P(None), "ln2": P(None),
+                    "mix": S.rwkv6_pspecs(cfg)}
+        if cfg.ssm_type == "mamba2":
+            return {"ln1": P(None), "mix": S.mamba2_pspecs(cfg)}
+        layer = {"ln1": P(None), "attn": B.attn_pspecs(cfg), "ln2": P(None)}
+        if cfg.family == "moe":
+            layer["moe"] = B.moe_pspecs(cfg, model_axis)
+        else:
+            layer["mlp"] = B.mlp_pspecs(cfg)
+        return layer
+
+    def init(self, key) -> Dict[str, Any]:
+        cfg = self.cfg
+        ke, kl, kh, ks = jax.random.split(key, 4)
+        params: Dict[str, Any] = {
+            "embed": jax.random.normal(
+                ke, (cfg.vocab_size, cfg.d_model), cfg.dtype) * 0.02,
+            "layers": C.stacked_init(self._layer_init, kl, cfg.n_layers),
+            "final_norm": _norm_scale_init(cfg.d_model, cfg.dtype),
+        }
+        if not cfg.tie_embeddings:
+            params["lm_head"] = C.dense(kh, cfg.d_model, cfg.vocab_size,
+                                        cfg.dtype)
+        if cfg.family == "hybrid" and cfg.attn_every:
+            params["shared"] = {
+                "ln1": _norm_scale_init(cfg.d_model, cfg.dtype),
+                "attn": B.attn_init(ks, cfg),
+                "ln2": _norm_scale_init(cfg.d_model, cfg.dtype),
+                "mlp": B.mlp_init(jax.random.fold_in(ks, 1), cfg),
+            }
+        return params
+
+    def param_pspecs(self, model_axis: int = 16) -> Dict[str, Any]:
+        cfg = self.cfg
+        layer = self._layer_pspecs(model_axis)
+        stacked = jax.tree.map(
+            lambda p: P(None, *p), layer,
+            is_leaf=lambda x: isinstance(x, P))
+        specs: Dict[str, Any] = {
+            "embed": P("model", None),
+            "layers": stacked,
+            "final_norm": P(None),
+        }
+        if not cfg.tie_embeddings:
+            specs["lm_head"] = P(None, "model")
+        if cfg.family == "hybrid" and cfg.attn_every:
+            specs["shared"] = {"ln1": P(None), "attn": B.attn_pspecs(cfg),
+                               "ln2": P(None), "mlp": B.mlp_pspecs(cfg)}
+        return specs
+
+    # ----------------------------------------------------------------- norms
+    def _norm(self, x, scale):
+        return C.rms_norm(x, scale, self.cfg.norm_eps)
+
+    def _boundary(self, x):
+        """Residual-stream layout at block boundaries (§Perf iter 3/4).
+
+        heads %% TP == 0: batch-sharded, replicated over model (Megatron) —
+        XLA otherwise lets attention internals leak into the MLP sharding.
+        heads %% TP != 0: sequence-sharded over model (Megatron-SP) so the
+        seq-parallel attention scores compose with AG/RS around matmuls
+        instead of weight gathers."""
+        from repro.dist.sharding import constrain, get_constraint_mesh
+        mesh = get_constraint_mesh()
+        if mesh is None or x.ndim != 3:
+            return x
+        if self.cfg.n_heads % mesh.shape["model"] == 0:
+            return constrain(x, "data", None, None)
+        return constrain(x, "data", "model", None)
+
+    # ------------------------------------------------------------- full pass
+    def _shared_block(self, p, x, positions, kv_cache=None, pos=None):
+        cfg = self.cfg
+        if kv_cache is None:
+            h = B.attention(p["attn"], self._norm(x, p["ln1"]), cfg, positions)
+            x = x + h
+            x = x + B.mlp(p["mlp"], self._norm(x, p["ln2"]), cfg)
+            return x, None
+        h, kc, vc = B.attention_decode(p["attn"], self._norm(x, p["ln1"]),
+                                       cfg, kv_cache[0], kv_cache[1], pos)
+        x = x + h
+        x = x + B.mlp(p["mlp"], self._norm(x, p["ln2"]), cfg)
+        return x, (kc, vc)
+
+    def _block_train(self, p, x, positions, shared, layer_idx):
+        """One scanned layer (train/prefill, no cache emission)."""
+        cfg = self.cfg
+        x = self._boundary(x)
+        if cfg.ssm_type in ("rwkv6", "mamba2"):
+            if cfg.ssm_type == "rwkv6":
+                h, _ = S.rwkv6_block(p["mix"], self._norm(x, p["ln1"]), cfg)
+            else:
+                h, _ = S.mamba2_block(p["mix"], self._norm(x, p["ln1"]), cfg)
+            x = x + h
+            if cfg.family == "hybrid" and cfg.attn_every:
+                def with_attn(x):
+                    return self._shared_block(shared, x, positions)[0]
+                x = jax.lax.cond(layer_idx % cfg.attn_every == cfg.attn_every - 1,
+                                 with_attn, lambda x: x, x)
+            return x
+        h = B.attention(p["attn"], self._norm(x, p["ln1"]), cfg, positions)
+        x = self._boundary(x + h)
+        inner = self._norm(x, p["ln2"])
+        if cfg.family == "moe":
+            x = x + B.moe(p["moe"], inner, cfg)
+        else:
+            x = x + B.mlp(p["mlp"], inner, cfg)
+        return x
+
+    def hidden(self, params, tokens: Optional[jax.Array] = None,
+               embeds: Optional[jax.Array] = None,
+               remat: Optional[bool] = None) -> jax.Array:
+        """Token ids (and/or precomputed frontend embeds, prepended) ->
+        final hidden states [B, S, d]."""
+        cfg = self.cfg
+        parts = []
+        if embeds is not None:
+            parts.append(embeds.astype(cfg.dtype))
+        if tokens is not None:
+            parts.append(params["embed"][tokens])
+        x = jnp.concatenate(parts, axis=1) if len(parts) > 1 else parts[0]
+        b, s, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+        shared = params.get("shared")
+
+        body = self._block_train
+        remat = cfg.remat if remat is None else remat
+        if remat:
+            body = jax.checkpoint(
+                body, policy=jax.checkpoint_policies.nothing_saveable,
+                static_argnums=())
+
+        def scan_fn(carry, inp):
+            x, idx = carry
+            x = body(inp, x, positions, shared, idx)
+            return (x, idx + 1), None
+
+        (x, _), _ = jax.lax.scan(scan_fn, (x, jnp.int32(0)), params["layers"],
+                                 unroll=self.cfg.n_layers
+                                 if self.cfg.scan_unroll else 1)
+        return self._norm(x, params["final_norm"])
+
+    def logits(self, params, hidden: jax.Array) -> jax.Array:
+        if self.cfg.tie_embeddings:
+            return hidden @ params["embed"].T
+        return hidden @ params["lm_head"]
+
+    def loss(self, params, batch: Dict[str, jax.Array]) -> jax.Array:
+        h = self.hidden(params, batch.get("tokens"),
+                        batch.get("vision_embeds"))
+        logits = self.logits(params, h)
+        labels = batch["labels"]
+        if logits.shape[1] != labels.shape[1]:      # frontend prefix: no loss
+            pad = logits.shape[1] - labels.shape[1]
+            labels = jnp.concatenate(
+                [jnp.full(labels.shape[:1] + (pad,), -1, labels.dtype),
+                 labels], axis=1)
+        return C.cross_entropy_loss(logits, labels)
+
+    # ------------------------------------------------------------------ cache
+    def init_cache(self, batch: int, max_len: int) -> Dict[str, Any]:
+        cfg = self.cfg
+        L = cfg.n_layers
+        c: Dict[str, Any] = {"pos": jnp.zeros((batch,), jnp.int32)}
+        if cfg.ssm_type == "rwkv6":
+            c["ssm"] = jax.tree.map(
+                lambda x: jnp.broadcast_to(x[None], (L,) + x.shape).copy(),
+                S.rwkv6_state_init(cfg, batch))
+        elif cfg.ssm_type == "mamba2":
+            c["ssm"] = jax.tree.map(
+                lambda x: jnp.broadcast_to(x[None], (L,) + x.shape).copy(),
+                S.mamba2_state_init(cfg, batch))
+        else:
+            s = min(max_len, cfg.sliding_window or max_len)
+            c["k"] = jnp.zeros((L, batch, cfg.n_kv_heads, s, cfg.head_dim),
+                               cfg.dtype)
+            c["v"] = jnp.zeros_like(c["k"])
+        if cfg.family == "hybrid" and cfg.attn_every:
+            napp = cfg.n_layers // cfg.attn_every
+            s = min(max_len, cfg.sliding_window or max_len)
+            c["shared_k"] = jnp.zeros(
+                (napp, batch, cfg.n_kv_heads, s, cfg.head_dim), cfg.dtype)
+            c["shared_v"] = jnp.zeros_like(c["shared_k"])
+        return c
+
+    def cache_pspecs(self) -> Dict[str, Any]:
+        cfg = self.cfg
+        c: Dict[str, Any] = {"pos": P("data")}
+        if cfg.ssm_type == "rwkv6":
+            c["ssm"] = jax.tree.map(lambda p: P(None, *p),
+                                    S.rwkv6_state_pspecs(cfg),
+                                    is_leaf=lambda x: isinstance(x, P))
+        elif cfg.ssm_type == "mamba2":
+            c["ssm"] = jax.tree.map(lambda p: P(None, *p),
+                                    S.mamba2_state_pspecs(cfg),
+                                    is_leaf=lambda x: isinstance(x, P))
+        else:
+            # KV caches shard the SEQUENCE dim over 'model' (kv-head counts
+            # are below the model-axis degree on most archs; sequence-
+            # parallel decode attention is the TPU-native alternative).
+            c["k"] = P(None, "data", None, "model", None)
+            c["v"] = P(None, "data", None, "model", None)
+        if cfg.family == "hybrid" and cfg.attn_every:
+            c["shared_k"] = P(None, "data", None, "model", None)
+            c["shared_v"] = P(None, "data", None, "model", None)
+        return c
+
+    # ---------------------------------------------------------------- prefill
+    def prefill(self, params, tokens: jax.Array,
+                embeds: Optional[jax.Array] = None,
+                max_len: Optional[int] = None
+                ) -> Tuple[jax.Array, Dict[str, Any]]:
+        """Returns (logits for the last position [B, V], filled cache).
+
+        ``max_len`` sizes the KV cache (>= prompt length) so decode steps
+        have free slots; defaults to the prompt length."""
+        cfg = self.cfg
+        parts = []
+        if embeds is not None:
+            parts.append(embeds.astype(cfg.dtype))
+        if tokens is not None:
+            parts.append(params["embed"][tokens])
+        x = jnp.concatenate(parts, axis=1) if len(parts) > 1 else parts[0]
+        b, s_total, _ = x.shape
+        max_len = max(max_len or s_total, s_total)
+        positions = jnp.broadcast_to(jnp.arange(s_total)[None], (b, s_total))
+        shared = params.get("shared")
+        cache = self.init_cache(b, max_len)
+        w = cfg.sliding_window
+        keep = min(s_total, w or s_total)
+        cache_len = min(max_len, w or max_len)
+
+        def attn_with_kv(p_attn, xin):
+            """Attention + windowed/rolled KV emission without recomputing
+            the projections."""
+            from repro.kernels import ops
+            q, k, v = B._qkv(p_attn, xin, cfg, positions)
+            qt, kt, vt = B.constrain_attention_layout(
+                q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                v.transpose(0, 2, 1, 3), cfg)
+            o = ops.flash_attention(qt, kt, vt, causal=True, window=w)
+            o = o.transpose(0, 2, 1, 3).reshape(b, s_total, cfg.q_dim)
+            kk, vv = kt[:, :, -keep:], vt[:, :, -keep:]
+            if w and s_total > w:
+                shift = s_total % w                 # ring-buffer alignment
+                kk = jnp.roll(kk, shift, axis=2)
+                vv = jnp.roll(vv, shift, axis=2)
+            if keep < cache_len:                    # free slots for decode
+                pad = [(0, 0), (0, 0), (0, cache_len - keep), (0, 0)]
+                kk = jnp.pad(kk, pad)
+                vv = jnp.pad(vv, pad)
+            return o @ p_attn["wo"], kk, vv
+
+        def scan_fn(carry, inp):
+            from repro.dist.sharding import constrain
+            x, idx, sh_k, sh_v = carry
+            x = self._boundary(x)
+            p = inp
+            ys = {}
+            if cfg.ssm_type == "rwkv6":
+                h, st = S.rwkv6_block(p["mix"], self._norm(x, p["ln1"]), cfg,
+                                      state=S.rwkv6_state_init(cfg, b))
+                x = x + h
+                ys["ssm"] = st
+            elif cfg.ssm_type == "mamba2":
+                h, st = S.mamba2_block(p["mix"], self._norm(x, p["ln1"]), cfg,
+                                       state=S.mamba2_state_init(cfg, b))
+                x = x + h
+                ys["ssm"] = st
+            else:
+                xin = self._norm(x, p["ln1"])
+                h, kk, vv = attn_with_kv(p["attn"], xin)
+                ys["k"], ys["v"] = kk, vv
+                x = self._boundary(x + h)
+                inner = self._norm(x, p["ln2"])
+                if cfg.family == "moe":
+                    x = x + B.moe(p["moe"], inner, cfg)
+                else:
+                    x = x + B.mlp(p["mlp"], inner, cfg)
+
+            if cfg.family == "hybrid" and cfg.attn_every:
+                def with_attn(x):
+                    xin = self._norm(x, shared["ln1"])
+                    h, kk, vv = attn_with_kv(shared["attn"], xin)
+                    x2 = x + h
+                    x2 = x2 + B.mlp(shared["mlp"],
+                                    self._norm(x2, shared["ln2"]), cfg)
+                    return x2, kk, vv
+
+                def without(x):
+                    z = jnp.zeros((b, cfg.n_kv_heads, cache_len, cfg.head_dim),
+                                  cfg.dtype)
+                    return x, z, z
+
+                app = idx // cfg.attn_every
+                is_app = idx % cfg.attn_every == cfg.attn_every - 1
+                x, kk, vv = jax.lax.cond(is_app, with_attn, without, x)
+                sh_k = jax.lax.cond(
+                    is_app, lambda c: jax.lax.dynamic_update_index_in_dim(
+                        c, kk, app, 0), lambda c: c, sh_k)
+                sh_v = jax.lax.cond(
+                    is_app, lambda c: jax.lax.dynamic_update_index_in_dim(
+                        c, vv, app, 0), lambda c: c, sh_v)
+            return (x, idx + 1, sh_k, sh_v), ys
+
+        sh_k = cache.get("shared_k", jnp.zeros((), cfg.dtype))
+        sh_v = cache.get("shared_v", jnp.zeros((), cfg.dtype))
+        (x, _, sh_k, sh_v), ys = jax.lax.scan(
+            scan_fn, (x, jnp.int32(0), sh_k, sh_v), params["layers"],
+            unroll=self.cfg.n_layers if self.cfg.scan_unroll else 1)
+
+        if "ssm" in ys:
+            cache["ssm"] = ys["ssm"]
+        if "k" in ys:
+            cache["k"], cache["v"] = ys["k"], ys["v"]
+        if cfg.family == "hybrid" and cfg.attn_every:
+            cache["shared_k"], cache["shared_v"] = sh_k, sh_v
+        cache["pos"] = jnp.full((b,), s_total, jnp.int32)
+
+        h = self._norm(x, params["final_norm"])
+        return self.logits(params, h[:, -1]), cache
+
+    # ------------------------------------------------------------ decode step
+    def decode_step(self, params, cache: Dict[str, Any], tokens: jax.Array
+                    ) -> Tuple[jax.Array, Dict[str, Any]]:
+        """tokens [B] -> (logits [B, V], updated cache)."""
+        cfg = self.cfg
+        b = tokens.shape[0]
+        pos = cache["pos"]
+        x = params["embed"][tokens][:, None, :]            # [B, 1, d]
+        shared = params.get("shared")
+
+        def scan_fn(carry, inp):
+            x, idx, sh_k, sh_v = carry
+            p, cl = inp["p"], inp["c"]
+            new_c = {}
+            if cfg.ssm_type == "rwkv6":
+                h, st = S.rwkv6_block(p["mix"], self._norm(x, p["ln1"]), cfg,
+                                      state=cl["ssm"])
+                x = x + h
+                new_c["ssm"] = st
+            elif cfg.ssm_type == "mamba2":
+                h, st = S.mamba2_block(p["mix"], self._norm(x, p["ln1"]), cfg,
+                                       state=cl["ssm"])
+                x = x + h
+                new_c["ssm"] = st
+            else:
+                h, kc, vc = B.attention_decode(
+                    p["attn"], self._norm(x, p["ln1"]), cfg,
+                    cl["k"], cl["v"], pos)
+                new_c["k"], new_c["v"] = kc, vc
+                x = x + h
+                inner = self._norm(x, p["ln2"])
+                if cfg.family == "moe":
+                    x = x + B.moe(p["moe"], inner, cfg)
+                else:
+                    x = x + B.mlp(p["mlp"], inner, cfg)
+
+            if cfg.family == "hybrid" and cfg.attn_every:
+                app = idx // cfg.attn_every
+                is_app = idx % cfg.attn_every == cfg.attn_every - 1
+                kv = (jax.lax.dynamic_index_in_dim(sh_k, app, 0, False),
+                      jax.lax.dynamic_index_in_dim(sh_v, app, 0, False))
+
+                def with_attn(args):
+                    x, sh_k, sh_v = args
+                    x2, (kc, vc) = self._shared_block(shared, x, None,
+                                                      kv_cache=kv, pos=pos)
+                    sh_k = jax.lax.dynamic_update_index_in_dim(sh_k, kc, app, 0)
+                    sh_v = jax.lax.dynamic_update_index_in_dim(sh_v, vc, app, 0)
+                    return x2, sh_k, sh_v
+
+                x, sh_k, sh_v = jax.lax.cond(
+                    is_app, with_attn, lambda a: a, (x, sh_k, sh_v))
+            return (x, idx + 1, sh_k, sh_v), new_c
+
+        per_layer_cache = {k: v for k, v in cache.items()
+                           if k not in ("pos", "shared_k", "shared_v")}
+        sh_k = cache.get("shared_k", jnp.zeros((), cfg.dtype))
+        sh_v = cache.get("shared_v", jnp.zeros((), cfg.dtype))
+        (x, _, sh_k, sh_v), new_caches = jax.lax.scan(
+            scan_fn, (x, jnp.int32(0), sh_k, sh_v),
+            {"p": params["layers"], "c": per_layer_cache},
+            unroll=self.cfg.n_layers if self.cfg.scan_unroll else 1)
+
+        out = dict(new_caches)
+        out["pos"] = pos + 1
+        if cfg.family == "hybrid" and cfg.attn_every:
+            out["shared_k"], out["shared_v"] = sh_k, sh_v
+        h = self._norm(x[:, 0], params["final_norm"])
+        return self.logits(params, h), out

@@ -1,0 +1,335 @@
+"""Attention-free sequence mixers: RWKV-6 (Finch) and Mamba-2 (SSD).
+
+Both are implemented in their *chunked parallel* forms — sequential
+recurrences re-expressed as per-chunk matmuls with a tiny cross-chunk scan
+— which is the TPU-idiomatic formulation (MXU-heavy, state stays in the
+scan carry) and what makes ``long_500k`` decoding O(1)-state.
+
+Numerical safety: pairwise decay factors are computed as
+``exp(min(L_t - L_s, 0))`` on the masked lower-triangle, never as separate
+``exp(+L)*exp(-L)`` factors (which overflow under strong decay).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import common as C
+from repro.models.common import ModelConfig
+
+F32 = jnp.float32
+
+
+# ===========================================================================
+# RWKV-6
+# ===========================================================================
+
+def rwkv6_init(key, cfg: ModelConfig) -> Dict[str, Any]:
+    dt = cfg.dtype
+    d = cfg.d_model
+    dh = cfg.ssm_head_dim
+    h = d // dh
+    f = cfg.d_ff
+    lora = 64
+    ks = jax.random.split(key, 12)
+    return {
+        # token-shift lerp coefficients
+        "mu_r": jnp.full((d,), 0.5, dt), "mu_k": jnp.full((d,), 0.5, dt),
+        "mu_v": jnp.full((d,), 0.5, dt), "mu_w": jnp.full((d,), 0.5, dt),
+        "mu_g": jnp.full((d,), 0.5, dt),
+        # time-mix projections
+        "wr": C.dense(ks[0], d, d, dt), "wk": C.dense(ks[1], d, d, dt),
+        "wv": C.dense(ks[2], d, d, dt), "wg": C.dense(ks[3], d, d, dt),
+        "wo": C.dense(ks[4], d, d, dt),
+        # data-dependent decay (the Finch feature): w = w0 + tanh(x A) B
+        "w0": jnp.full((d,), -2.0, F32),
+        "w_lora_a": C.dense(ks[5], d, lora, dt, std=0.01),
+        "w_lora_b": C.dense(ks[6], lora, d, dt, std=0.01),
+        "u": jax.random.normal(ks[7], (h, dh), F32) * 0.1,   # bonus
+        "ln_x": jnp.ones((d,), dt),
+        # channel mix
+        "mu_ck": jnp.full((d,), 0.5, dt), "mu_cr": jnp.full((d,), 0.5, dt),
+        "ck": C.dense(ks[8], d, f, dt), "cv": C.dense(ks[9], f, d, dt),
+        "cr": C.dense(ks[10], d, d, dt),
+    }
+
+
+def rwkv6_pspecs(cfg: ModelConfig) -> Dict[str, Any]:
+    rep = P(None)
+    return {
+        "mu_r": rep, "mu_k": rep, "mu_v": rep, "mu_w": rep, "mu_g": rep,
+        "wr": P(None, "model"), "wk": P(None, "model"), "wv": P(None, "model"),
+        "wg": P(None, "model"), "wo": P("model", None),
+        "w0": rep, "w_lora_a": P(None, None), "w_lora_b": P(None, "model"),
+        "u": P("model", None), "ln_x": rep,
+        "mu_ck": rep, "mu_cr": rep,
+        "ck": P(None, "model"), "cv": P("model", None), "cr": P(None, "model"),
+    }
+
+
+def _shift(x: jax.Array, carry: Optional[jax.Array] = None) -> jax.Array:
+    """Token shift: x_{t-1} (zeros / carried last token at t=0)."""
+    pad = jnp.zeros_like(x[:, :1]) if carry is None else carry[:, None]
+    return jnp.concatenate([pad, x[:, :-1]], axis=1)
+
+
+def rwkv6_chunked(r, k, v, w_raw, u, state, chunk: int = 32):
+    """Chunked RWKV-6 recurrence.
+
+    r/k/v/w_raw: [B, H, T, D]; u: [H, D]; state: [B, H, D, D] (fp32).
+    Returns (out [B, H, T, D], new_state).
+    """
+    b, h, t, d = r.shape
+    chunk = min(chunk, t)
+    while t % chunk:
+        chunk //= 2
+    nc = t // chunk
+
+    logw = -jnp.exp(w_raw.astype(F32))                     # [B,H,T,D] <= 0
+    rs = r.astype(F32).reshape(b, h, nc, chunk, d)
+    ks = k.astype(F32).reshape(b, h, nc, chunk, d)
+    vs = v.astype(F32).reshape(b, h, nc, chunk, d)
+    lw = logw.reshape(b, h, nc, chunk, d)
+    L = jnp.cumsum(lw, axis=3)                             # inclusive
+    Lp = L - lw                                            # L_{t-1}
+    uf = u.astype(F32)
+
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)  # strict lower
+
+    def chunk_step(S, inp):
+        rc, kc, vc, Lc, Lpc = inp                          # [B,H,C,D]
+        # inter-chunk: decayed carry-in state
+        y_inter = jnp.einsum("bhcd,bhde->bhce", rc * jnp.exp(Lpc), S)
+        # intra-chunk pairwise (t > s): exp(Lp_t - L_s) <= 1 on the mask
+        expo = Lpc[:, :, :, None, :] - Lc[:, :, None, :, :]    # [B,H,t,s,D]
+        dec = jnp.exp(jnp.minimum(expo, 0.0)) * mask[None, None, :, :, None]
+        A = jnp.einsum("bhtd,bhsd,bhtsd->bhts", rc, kc, dec)
+        y_intra = jnp.einsum("bhts,bhse->bhte", A, vc)
+        # diagonal bonus term: (r_t ⊙ u) · k_t  v_t
+        sdiag = jnp.einsum("bhtd,hd,bhtd->bht", rc, uf, kc)
+        y = y_inter + y_intra + sdiag[..., None] * vc
+        # state to next chunk
+        Llast = Lc[:, :, -1:, :]
+        kd = kc * jnp.exp(jnp.minimum(Llast - Lc, 0.0))
+        S = jnp.exp(Llast[:, :, 0])[..., None] * S + \
+            jnp.einsum("bhsd,bhse->bhde", kd, vc)
+        return S, y
+
+    xs = tuple(jnp.moveaxis(a, 2, 0) for a in (rs, ks, vs, L, Lp))
+    state, ys = jax.lax.scan(chunk_step, state.astype(F32), xs)
+    out = jnp.moveaxis(ys, 0, 2).reshape(b, h, t, d)
+    return out.astype(r.dtype), state
+
+
+def rwkv6_block(p, x: jax.Array, cfg: ModelConfig,
+                state: Optional[Dict[str, jax.Array]] = None
+                ) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
+    """Full RWKV-6 layer (time mix + channel mix), pre-norm residuals are
+    applied by the caller.  ``state`` (decode): {'s': [B,H,D,D],
+    'shift_t': [B,d], 'shift_c': [B,d]}; None for training (zeros)."""
+    b, t, d = x.shape
+    dh = cfg.ssm_head_dim
+    h = d // dh
+
+    xs = _shift(x, None if state is None else state["shift_t"])
+
+    def mix(mu):
+        return x + (xs - x) * mu.astype(x.dtype)
+
+    r = (mix(p["mu_r"]) @ p["wr"]).reshape(b, t, h, dh).transpose(0, 2, 1, 3)
+    k = (mix(p["mu_k"]) @ p["wk"]).reshape(b, t, h, dh).transpose(0, 2, 1, 3)
+    v = (mix(p["mu_v"]) @ p["wv"]).reshape(b, t, h, dh).transpose(0, 2, 1, 3)
+    g = mix(p["mu_g"]) @ p["wg"]
+    xw = mix(p["mu_w"])
+    w_raw = p["w0"].astype(F32) + (jnp.tanh(xw @ p["w_lora_a"])
+                                   @ p["w_lora_b"]).astype(F32)
+    w_raw = w_raw.reshape(b, t, h, dh).transpose(0, 2, 1, 3)
+
+    s0 = jnp.zeros((b, h, dh, dh), F32) if state is None else state["s"]
+    out, s_new = rwkv6_chunked(r, k, v, w_raw, p["u"], s0)
+    # per-head normalization (official GroupNorm(h) over the flattened dim)
+    out = C.rms_norm(out.transpose(0, 2, 1, 3), jnp.ones((dh,), x.dtype),
+                     cfg.norm_eps).reshape(b, t, d) * p["ln_x"].astype(x.dtype)
+    out = (out * jax.nn.silu(g)) @ p["wo"]
+
+    # channel mix (token-shifted squared-relu FFN with receptance gate)
+    x2 = x + out
+    xs2 = _shift(x2, None if state is None else state["shift_c"])
+
+    def mix2(mu):
+        return x2 + (xs2 - x2) * mu.astype(x.dtype)
+
+    kk = jnp.square(jax.nn.relu(mix2(p["mu_ck"]) @ p["ck"]))
+    cm = (kk @ p["cv"]) * jax.nn.sigmoid(mix2(p["mu_cr"]) @ p["cr"])
+
+    new_state = None
+    if state is not None:
+        new_state = {"s": s_new, "shift_t": x[:, -1], "shift_c": x2[:, -1]}
+    return out + cm, new_state
+
+
+def rwkv6_state_init(cfg: ModelConfig, batch: int) -> Dict[str, jax.Array]:
+    d = cfg.d_model
+    dh = cfg.ssm_head_dim
+    h = d // dh
+    return {"s": jnp.zeros((batch, h, dh, dh), F32),
+            "shift_t": jnp.zeros((batch, d), cfg.dtype),
+            "shift_c": jnp.zeros((batch, d), cfg.dtype)}
+
+
+def rwkv6_state_pspecs(cfg: ModelConfig) -> Dict[str, Any]:
+    return {"s": P("data", "model", None, None),
+            "shift_t": P("data", None), "shift_c": P("data", None)}
+
+
+# ===========================================================================
+# Mamba-2 (SSD)
+# ===========================================================================
+
+def mamba2_init(key, cfg: ModelConfig) -> Dict[str, Any]:
+    dt = cfg.dtype
+    d = cfg.d_model
+    d_in = cfg.ssm_expand * d
+    n = cfg.ssm_state
+    hd = cfg.ssm_head_dim
+    nh = d_in // hd
+    ks = jax.random.split(key, 4)
+    d_proj = 2 * d_in + 2 * n + nh                      # z, xBC, dt
+    return {
+        "in_proj": C.dense(ks[0], d, d_proj, dt),
+        "conv_w": jax.random.normal(ks[1], (cfg.conv_width, d_in + 2 * n),
+                                    dt) * 0.1,
+        "conv_b": jnp.zeros((d_in + 2 * n,), dt),
+        "A_log": jnp.zeros((nh,), F32),                 # A = -exp(A_log)
+        "D": jnp.ones((nh,), F32),
+        "dt_bias": jnp.zeros((nh,), F32),
+        "norm": jnp.ones((d_in,), dt),
+        "out_proj": C.dense(ks[2], d_in, d, dt),
+    }
+
+
+def mamba2_pspecs(cfg: ModelConfig) -> Dict[str, Any]:
+    return {"in_proj": P(None, "model"), "conv_w": P(None, None),
+            "conv_b": P(None), "A_log": P(None), "D": P(None),
+            "dt_bias": P(None), "norm": P("model"),
+            "out_proj": P("model", None)}
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 carry: Optional[jax.Array] = None) -> jax.Array:
+    """Depthwise causal conv as shifted elementwise sums (shardable).
+    x [B, T, Cch]; w [K, Cch]; carry [B, K-1, Cch] (decode)."""
+    kw = w.shape[0]
+    pad = (jnp.zeros((x.shape[0], kw - 1, x.shape[2]), x.dtype)
+           if carry is None else carry.astype(x.dtype))
+    xp = jnp.concatenate([pad, x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i].astype(x.dtype)
+            for i in range(kw))
+    return y + b.astype(x.dtype)
+
+
+def mamba2_ssd(xh, dtv, A, Bc, Cc, state, chunk: int = 64):
+    """Chunked SSD.  xh [B,T,nh,hd]; dtv [B,T,nh]; A [nh] (negative);
+    Bc/Cc [B,T,N]; state [B,nh,hd,N] fp32.  Returns (y, new_state)."""
+    b, t, nh, hd = xh.shape
+    n = Bc.shape[-1]
+    chunk = min(chunk, t)
+    while t % chunk:
+        chunk //= 2
+    nc = t // chunk
+
+    dA = dtv.astype(F32) * A.astype(F32)                  # [B,T,nh] <= 0
+    xs = (xh.astype(F32) * dtv.astype(F32)[..., None]).reshape(
+        b, nc, chunk, nh, hd)
+    Bs = Bc.astype(F32).reshape(b, nc, chunk, n)
+    Cs = Cc.astype(F32).reshape(b, nc, chunk, n)
+    L = jnp.cumsum(dA.reshape(b, nc, chunk, nh), axis=2)  # inclusive
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))       # include diagonal
+
+    def chunk_step(S, inp):
+        xc, bc, cc, lc = inp       # [B,C,nh,hd], [B,C,N], [B,C,N], [B,C,nh]
+        # inter: y_t += exp(L_t) * (C_t · S)
+        y_inter = jnp.einsum("bcn,bhdn->bchd", cc, S) * \
+            jnp.exp(lc)[..., None]
+        # intra: pairwise decay per head (scalar) — safe on the mask
+        expo = lc[:, :, None, :] - lc[:, None, :, :]      # [B,t,s,nh]
+        dec = jnp.exp(jnp.minimum(expo, 0.0)) * mask[None, :, :, None]
+        cb = jnp.einsum("btn,bsn->bts", cc, bc)           # [B,t,s]
+        y_intra = jnp.einsum("bts,btsh,bshd->bthd", cb, dec, xc)
+        y = y_inter + y_intra
+        # state update
+        llast = lc[:, -1:, :]                             # [B,1,nh]
+        kd = jnp.exp(jnp.minimum(llast - lc, 0.0))        # [B,C,nh]
+        S = jnp.exp(llast[:, 0])[:, :, None, None] * S + \
+            jnp.einsum("bch,bchd,bcn->bhdn", kd, xc, bc)
+        return S, y
+
+    xs_scan = (jnp.moveaxis(xs, 1, 0), jnp.moveaxis(Bs, 1, 0),
+               jnp.moveaxis(Cs, 1, 0), jnp.moveaxis(L, 1, 0))
+    state, ys = jax.lax.scan(chunk_step, state.astype(F32), xs_scan)
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, t, nh, hd)
+    return y, state
+
+
+def mamba2_block(p, x: jax.Array, cfg: ModelConfig,
+                 state: Optional[Dict[str, jax.Array]] = None
+                 ) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
+    """x [B, T, d] -> [B, T, d].  state (decode): {'h': [B,nh,hd,N],
+    'conv': [B, K-1, d_in+2N]}."""
+    b, t, d = x.shape
+    d_in = cfg.ssm_expand * d
+    n = cfg.ssm_state
+    hd = cfg.ssm_head_dim
+    nh = d_in // hd
+
+    zxbcdt = x @ p["in_proj"]
+    z = zxbcdt[..., :d_in]
+    xbc = zxbcdt[..., d_in:d_in + d_in + 2 * n]
+    dtv = jax.nn.softplus(zxbcdt[..., -nh:].astype(F32)
+                          + p["dt_bias"].astype(F32))
+
+    conv_carry = None if state is None else state["conv"]
+    xbc = jax.nn.silu(_causal_conv(xbc, p["conv_w"], p["conv_b"], conv_carry))
+    xc = xbc[..., :d_in].reshape(b, t, nh, hd)
+    bc = xbc[..., d_in:d_in + n]
+    cc = xbc[..., d_in + n:]
+
+    A = -jnp.exp(p["A_log"].astype(F32))
+    h0 = (jnp.zeros((b, nh, hd, n), F32) if state is None else state["h"])
+    y, h_new = mamba2_ssd(xc, dtv, A, bc, cc, h0)
+    y = y + p["D"].astype(F32)[None, None, :, None] * xc.astype(F32)
+    y = y.reshape(b, t, d_in).astype(x.dtype)
+    y = C.rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    out = y @ p["out_proj"]
+
+    new_state = None
+    if state is not None:
+        tail = xbc_raw_tail(zxbcdt, d_in, n, cfg.conv_width, state["conv"])
+        new_state = {"h": h_new, "conv": tail}
+    return out, new_state
+
+
+def xbc_raw_tail(zxbcdt: jax.Array, d_in: int, n: int, kw: int,
+                 prev: jax.Array) -> jax.Array:
+    """Last K-1 *pre-conv* xBC inputs for the decode conv carry."""
+    xbc_raw = zxbcdt[..., d_in:d_in + d_in + 2 * n]
+    joined = jnp.concatenate([prev.astype(xbc_raw.dtype), xbc_raw], axis=1)
+    return joined[:, -(kw - 1):]
+
+
+def mamba2_state_init(cfg: ModelConfig, batch: int) -> Dict[str, jax.Array]:
+    d_in = cfg.ssm_expand * cfg.d_model
+    n = cfg.ssm_state
+    nh = d_in // cfg.ssm_head_dim
+    return {"h": jnp.zeros((batch, nh, cfg.ssm_head_dim, n), F32),
+            "conv": jnp.zeros((batch, cfg.conv_width - 1, d_in + 2 * n),
+                              cfg.dtype)}
+
+
+def mamba2_state_pspecs(cfg: ModelConfig) -> Dict[str, Any]:
+    return {"h": P("data", "model", None, None),
+            "conv": P("data", None, "model")}

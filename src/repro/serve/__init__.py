@@ -1,0 +1,1 @@
+"""Serving runtime: LatentBox engine over the real VAE decode fleet."""

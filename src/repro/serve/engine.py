@@ -1,0 +1,152 @@
+"""Serving engine: LatentBox's routing/cache layer driving a real JAX
+decode fleet.
+
+This is the non-simulated end-to-end path (examples/serve_trace_replay.py):
+requests -> Router (coalescing, consistent hashing, spillover w/ pinning)
+-> per-node DualFormatCache -> on miss, the *real* VAE decode (jitted,
+batched) reconstructs pixels from compressed latents fetched from the
+LatentStore.  Wall-clock decode/fetch times feed the marginal-hit tuner's
+EWMAs, closing the paper's feedback loop on real measurements.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.compression.latentcodec import compress_latent, decompress_latent
+from repro.core.dual_cache import (DualFormatCache, FULL_MISS, IMAGE_HIT,
+                                   LATENT_HIT)
+from repro.core.latent_store import LatentStore
+from repro.core.router import Router
+from repro.core.tuner import MarginalHitTuner, TunerConfig
+from repro.vae.model import VAE, VAEConfig
+
+
+@dataclasses.dataclass
+class EngineConfig:
+    n_nodes: int = 2
+    cache_bytes_per_node: float = 64e6
+    alpha0: float = 0.5
+    tau: float = 0.1
+    promote_threshold: int = 4
+    theta: int = 4
+    tuner: TunerConfig = dataclasses.field(
+        default_factory=lambda: TunerConfig(window=500, step=0.02))
+
+
+class _Node:
+    def __init__(self, idx: int, cfg: EngineConfig, image_bytes: float,
+                 latent_bytes: float):
+        self.idx = idx
+        self.cache = DualFormatCache(
+            cfg.cache_bytes_per_node, alpha=cfg.alpha0, tau=cfg.tau,
+            promote_threshold=cfg.promote_threshold,
+            image_size_fn=lambda _: image_bytes,
+            latent_size_fn=lambda _: latent_bytes)
+        self.tuner = MarginalHitTuner(self.cache, cfg.tuner)
+        self.images: Dict[int, np.ndarray] = {}     # decoded-image payloads
+        self.latents: Dict[int, bytes] = {}         # compressed payloads
+        self.queue_depth = 0
+
+
+class ServingEngine:
+    """Single-process stand-in for the Ray fleet: N logical nodes share one
+    device, but the cache/routing/tuning logic is the production code."""
+
+    def __init__(self, vae: VAE, store: LatentStore,
+                 cfg: Optional[EngineConfig] = None,
+                 image_bytes: float = 64e3, latent_bytes: float = 13e3):
+        self.vae = vae
+        self.store = store
+        self.cfg = cfg or EngineConfig()
+        self.nodes = [_Node(i, self.cfg, image_bytes, latent_bytes)
+                      for i in range(self.cfg.n_nodes)]
+        self.router = Router([f"node{i}" for i in range(self.cfg.n_nodes)],
+                             theta=self.cfg.theta)
+        self.stats = {"image_hit": 0, "latent_hit": 0, "full_miss": 0,
+                      "spilled": 0}
+
+    def _decode(self, node: _Node, blob: bytes) -> Tuple[np.ndarray, float]:
+        t0 = time.perf_counter()
+        # fixed decode dtype: determinism holds per (latent, stack) pair
+        z = jnp.asarray(decompress_latent(blob), jnp.float32)[None]
+        img = np.asarray(self.vae.decode(z))[0]
+        ms = (time.perf_counter() - t0) * 1e3
+        node.tuner.observe_decode_ms(ms)
+        return img, ms
+
+    def get(self, oid: int) -> Tuple[np.ndarray, str]:
+        owner_name = self.router.ring.owner(oid)
+        owner = self.nodes[int(owner_name[4:])]
+        res = owner.cache.lookup(oid)
+        owner.tuner.on_request()
+
+        if res.outcome == IMAGE_HIT:
+            self.stats["image_hit"] += 1
+            return owner.images[oid], IMAGE_HIT
+
+        # pick the execution node (spillover with cache pinning)
+        for n in self.nodes:
+            self.router.report_depth(f"node{n.idx}", n.queue_depth)
+        exec_node = owner
+        if owner.queue_depth > self.cfg.theta:
+            cand = self.nodes[int(self.router.least_loaded(
+                exclude=owner_name)[4:])]
+            if cand.queue_depth < owner.queue_depth:
+                exec_node = cand
+                self.stats["spilled"] += 1
+
+        exec_node.queue_depth += 1
+        try:
+            if res.outcome == LATENT_HIT:
+                self.stats["latent_hit"] += 1
+                blob = owner.latents[oid]
+                img, _ = self._decode(exec_node, blob)
+            else:
+                self.stats["full_miss"] += 1
+                t0 = time.perf_counter()
+                blob = self.store.get(oid)
+                if blob is None:
+                    raise KeyError(f"object {oid} not in store")
+                owner.tuner.observe_fetch_ms(
+                    (time.perf_counter() - t0) * 1e3
+                    + self.store.fetch_ms(oid, time.time()))
+                owner.cache.admit_latent(oid)
+                if oid in owner.cache.latent_tier:
+                    owner.latents[oid] = blob
+                img, _ = self._decode(exec_node, blob)
+        finally:
+            exec_node.queue_depth -= 1
+
+        # cache pinning: decoded result written back to the OWNER node
+        if res.promoted or owner.cache.contains(oid) == "image":
+            owner.images[oid] = img
+        self._gc(owner)
+        return img, res.outcome
+
+    def _gc(self, node: _Node) -> None:
+        if len(node.images) > 2 * len(node.cache.image_tier) + 32:
+            live = set(iter(node.cache.image_tier))
+            node.images = {k: v for k, v in node.images.items() if k in live}
+        if len(node.latents) > 2 * len(node.cache.latent_tier) + 32:
+            live = set(iter(node.cache.latent_tier))
+            node.latents = {k: v for k, v in node.latents.items()
+                            if k in live}
+
+    def summary(self) -> Dict[str, Any]:
+        total = sum(self.stats[k] for k in
+                    ("image_hit", "latent_hit", "full_miss"))
+        out = dict(self.stats)
+        out["total"] = total
+        if total:
+            out["image_hit_frac"] = self.stats["image_hit"] / total
+            out["decode_frac"] = (self.stats["latent_hit"]
+                                  + self.stats["full_miss"]) / total
+        out["alpha"] = [round(n.cache.alpha, 3) for n in self.nodes]
+        return out

@@ -1,0 +1,3 @@
+from repro.trace.synth import SyntheticTrace, TraceConfig, generate_trace
+
+__all__ = ["SyntheticTrace", "TraceConfig", "generate_trace"]

@@ -1,0 +1,54 @@
+"""Int8 error-feedback gradient compression (distributed-optimization
+trick for slow cross-pod links).
+
+Gradients are quantized to int8 with a per-tensor fp32 scale *before* the
+cross-pod reduction and dequantized after; the quantization residual is
+carried in an error-feedback buffer so the bias vanishes over steps
+(Seide et al. / EF-SGD).  Under pjit the quantized tree is what crosses
+the ``pod`` axis — a 4x wire-byte reduction on the slowest links, visible
+in the dry-run's collective bytes (§Perf).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(g: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    gf = g.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(gf)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def ef_init(params) -> Any:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compress_tree(grads, error: Optional[Any] = None):
+    """Returns ((q_tree, scale_tree), new_error).  Quantize(g + e) with the
+    residual fed back."""
+    if error is None:
+        error = jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+    corrected = jax.tree.map(lambda g, e: g.astype(jnp.float32) + e,
+                             grads, error)
+    qs = jax.tree.map(quantize_int8, corrected,
+                      is_leaf=lambda x: isinstance(x, jax.Array))
+    q_tree = jax.tree.map(lambda t: t[0], qs,
+                          is_leaf=lambda x: isinstance(x, tuple))
+    s_tree = jax.tree.map(lambda t: t[1], qs,
+                          is_leaf=lambda x: isinstance(x, tuple))
+    recon = jax.tree.map(dequantize_int8, q_tree, s_tree)
+    new_error = jax.tree.map(lambda c, r: c - r, corrected, recon)
+    return (q_tree, s_tree), new_error
+
+
+def decompress_tree(q_tree, s_tree):
+    return jax.tree.map(dequantize_int8, q_tree, s_tree)

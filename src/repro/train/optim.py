@@ -1,0 +1,114 @@
+"""Hand-rolled optimizers + schedules (no optax dependency).
+
+AdamW with decoupled weight decay, global-norm clipping, cosine/linear
+schedules.  State is a pytree mirroring params (so the param PartitionSpecs
+apply verbatim to m/v — and can be re-sharded over the data axis for
+ZeRO-1, see ``dist.sharding.zero1_pspecs``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    m: Any
+    v: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: Optional[float] = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    schedule: str = "cosine"          # cosine|linear|constant
+    moment_dtype: str = "float32"     # 'bfloat16' halves optimizer HBM
+
+
+def schedule_lr(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    s = step.astype(jnp.float32)
+    warm = jnp.minimum(1.0, (s + 1.0) / max(1, cfg.warmup_steps))
+    frac = jnp.clip((s - cfg.warmup_steps)
+                    / max(1, cfg.total_steps - cfg.warmup_steps), 0.0, 1.0)
+    if cfg.schedule == "cosine":
+        decay = 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+    elif cfg.schedule == "linear":
+        decay = 1.0 - frac
+    else:
+        decay = jnp.float32(1.0)
+    return cfg.lr * warm * decay
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def clip_by_global_norm(tree, max_norm: float) -> Tuple[Any, jax.Array]:
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale
+                                   ).astype(g.dtype), tree), norm
+
+
+class AdamW:
+    """init(params) -> state; update(grads, state, params) -> (params', state')."""
+
+    def __init__(self, cfg: AdamWConfig = AdamWConfig()):
+        self.cfg = cfg
+
+    def init(self, params) -> AdamWState:
+        mdt = jnp.dtype(self.cfg.moment_dtype)
+        zeros = lambda p: jnp.zeros(p.shape, mdt)
+        return AdamWState(step=jnp.zeros((), jnp.int32),
+                          m=jax.tree.map(zeros, params),
+                          v=jax.tree.map(zeros, params))
+
+    def update(self, grads, state: AdamWState, params
+               ) -> Tuple[Any, AdamWState, Dict[str, jax.Array]]:
+        cfg = self.cfg
+        metrics: Dict[str, jax.Array] = {}
+        if cfg.clip_norm is not None:
+            grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+            metrics["grad_norm"] = gnorm
+        step = state.step + 1
+        lr = schedule_lr(cfg, step)
+        metrics["lr"] = lr
+        b1, b2 = cfg.b1, cfg.b2
+        bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+        bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+        mdt = jnp.dtype(cfg.moment_dtype)
+
+        def upd(p, g, m, v):
+            gf = g.astype(jnp.float32)
+            m2 = b1 * m.astype(jnp.float32) + (1 - b1) * gf
+            v2 = b2 * v.astype(jnp.float32) + (1 - b2) * gf * gf
+            mhat = m2 / bc1
+            vhat = v2 / bc2
+            delta = mhat / (jnp.sqrt(vhat) + cfg.eps) \
+                + cfg.weight_decay * p.astype(jnp.float32)
+            return ((p.astype(jnp.float32) - lr * delta).astype(p.dtype),
+                    m2.astype(mdt), v2.astype(mdt))
+
+        flat_p, treedef = jax.tree_util.tree_flatten(params)
+        flat_g = treedef.flatten_up_to(grads)
+        flat_m = treedef.flatten_up_to(state.m)
+        flat_v = treedef.flatten_up_to(state.v)
+        out = [upd(p, g, m, v) for p, g, m, v in
+               zip(flat_p, flat_g, flat_m, flat_v)]
+        new_p = treedef.unflatten([o[0] for o in out])
+        new_m = treedef.unflatten([o[1] for o in out])
+        new_v = treedef.unflatten([o[2] for o in out])
+        return new_p, AdamWState(step, new_m, new_v), metrics

@@ -1,0 +1,3 @@
+from repro.vae.model import VAEConfig, VAE, SD35_VAE, SD15_VAE, FLUX_VAE
+
+__all__ = ["VAEConfig", "VAE", "SD35_VAE", "SD15_VAE", "FLUX_VAE"]

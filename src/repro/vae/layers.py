@@ -1,0 +1,153 @@
+"""VAE building blocks in pure JAX (NHWC layout — channels on the TPU lane
+axis).  Hot spots route through :mod:`repro.kernels.ops` so the Pallas TPU
+kernels and the XLA reference path are interchangeable (``impl=`` flag).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# initializers
+# ---------------------------------------------------------------------------
+
+def conv_init(key, kh: int, kw: int, cin: int, cout: int,
+              dtype=jnp.float32) -> Params:
+    fan_in = kh * kw * cin
+    w = jax.random.normal(key, (kh, kw, cin, cout), dtype) / math.sqrt(fan_in)
+    return {"w": w, "b": jnp.zeros((cout,), dtype)}
+
+
+def gn_init(channels: int, dtype=jnp.float32) -> Params:
+    return {"scale": jnp.ones((channels,), dtype),
+            "bias": jnp.zeros((channels,), dtype)}
+
+
+def dense_init(key, cin: int, cout: int, dtype=jnp.float32) -> Params:
+    w = jax.random.normal(key, (cin, cout), dtype) / math.sqrt(cin)
+    return {"w": w, "b": jnp.zeros((cout,), dtype)}
+
+
+# ---------------------------------------------------------------------------
+# ops
+# ---------------------------------------------------------------------------
+
+def conv2d(x: jax.Array, p: Params, stride: int = 1,
+           padding: str | Tuple = "SAME") -> jax.Array:
+    """NHWC conv; channels-last keeps C on the 128-wide lane dimension."""
+    y = jax.lax.conv_general_dilated(
+        x, p["w"].astype(x.dtype), window_strides=(stride, stride),
+        padding=padding, dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return y + p["b"].astype(x.dtype)
+
+
+def group_norm(x: jax.Array, p: Params, groups: int = 32,
+               eps: float = 1e-6) -> jax.Array:
+    """GroupNorm over (H, W, C/g) with fp32 statistics."""
+    n, h, w, c = x.shape
+    xf = x.astype(jnp.float32).reshape(n, h * w, groups, c // groups)
+    mean = xf.mean(axis=(1, 3), keepdims=True)
+    var = xf.var(axis=(1, 3), keepdims=True)
+    xf = (xf - mean) * jax.lax.rsqrt(var + eps)
+    xf = xf.reshape(n, h, w, c)
+    return (xf * p["scale"].astype(jnp.float32)
+            + p["bias"].astype(jnp.float32)).astype(x.dtype)
+
+
+def silu(x: jax.Array) -> jax.Array:
+    return x * jax.nn.sigmoid(x)
+
+
+def gn_silu(x: jax.Array, p: Params, groups: int = 32,
+            impl: Optional[str] = None) -> jax.Array:
+    """Fused GroupNorm + SiLU — the decoder's memory-bound hot spot."""
+    from repro.kernels import ops                     # late import (no cycle)
+    return ops.group_norm_silu(x, p["scale"], p["bias"], groups=groups,
+                               impl=impl)
+
+
+# ---------------------------------------------------------------------------
+# blocks
+# ---------------------------------------------------------------------------
+
+def resnet_block_init(key, cin: int, cout: int, dtype=jnp.float32) -> Params:
+    k = jax.random.split(key, 3)
+    p = {
+        "norm1": gn_init(cin, dtype),
+        "conv1": conv_init(k[0], 3, 3, cin, cout, dtype),
+        "norm2": gn_init(cout, dtype),
+        "conv2": conv_init(k[1], 3, 3, cout, cout, dtype),
+    }
+    if cin != cout:
+        p["shortcut"] = conv_init(k[2], 1, 1, cin, cout, dtype)
+    return p
+
+
+def resnet_block(x: jax.Array, p: Params, groups: int = 32,
+                 impl: Optional[str] = None) -> jax.Array:
+    h = gn_silu(x, p["norm1"], groups=groups, impl=impl)
+    h = conv2d(h, p["conv1"])
+    h = gn_silu(h, p["norm2"], groups=groups, impl=impl)
+    h = conv2d(h, p["conv2"])
+    if "shortcut" in p:
+        x = conv2d(x, p["shortcut"])
+    return x + h
+
+
+def attn_block_init(key, c: int, dtype=jnp.float32) -> Params:
+    k = jax.random.split(key, 4)
+    return {
+        "norm": gn_init(c, dtype),
+        "q": dense_init(k[0], c, c, dtype),
+        "k": dense_init(k[1], c, c, dtype),
+        "v": dense_init(k[2], c, c, dtype),
+        "proj": dense_init(k[3], c, c, dtype),
+    }
+
+
+def attn_block(x: jax.Array, p: Params, groups: int = 32,
+               impl: Optional[str] = None) -> jax.Array:
+    """Single-head self-attention over the H*W token grid (mid-block)."""
+    from repro.kernels import ops
+    n, h, w, c = x.shape
+    y = group_norm(x, p["norm"], groups=groups)
+    y = y.reshape(n, h * w, c)
+    q = y @ p["q"]["w"].astype(y.dtype) + p["q"]["b"].astype(y.dtype)
+    k = y @ p["k"]["w"].astype(y.dtype) + p["k"]["b"].astype(y.dtype)
+    v = y @ p["v"]["w"].astype(y.dtype) + p["v"]["b"].astype(y.dtype)
+    # [n, hw, c] -> [n, 1 head, hw, c]
+    o = ops.flash_attention(q[:, None], k[:, None], v[:, None],
+                            causal=False, impl=impl)[:, 0]
+    o = o @ p["proj"]["w"].astype(o.dtype) + p["proj"]["b"].astype(o.dtype)
+    return x + o.reshape(n, h, w, c)
+
+
+def upsample_init(key, c: int, dtype=jnp.float32) -> Params:
+    return {"conv": conv_init(key, 3, 3, c, c, dtype)}
+
+
+def upsample(x: jax.Array, p: Params) -> jax.Array:
+    """Nearest-neighbor 2x + 3x3 conv (SD decoder upsampler)."""
+    n, h, w, c = x.shape
+    x = jnp.repeat(jnp.repeat(x, 2, axis=1), 2, axis=2)
+    return conv2d(x, p["conv"])
+
+
+def downsample_init(key, c: int, dtype=jnp.float32) -> Params:
+    return {"conv": conv_init(key, 3, 3, c, c, dtype)}
+
+
+def downsample(x: jax.Array, p: Params) -> jax.Array:
+    """Strided 3x3 conv with SD's asymmetric (0,1) padding."""
+    x = jnp.pad(x, ((0, 0), (0, 1), (0, 1), (0, 0)))
+    y = jax.lax.conv_general_dilated(
+        x, p["conv"]["w"].astype(x.dtype), window_strides=(2, 2),
+        padding="VALID", dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return y + p["conv"]["b"].astype(x.dtype)

@@ -1,0 +1,182 @@
+"""Config-driven VAE (SD/FLUX family) — the reconstruction engine of the
+latent-first store (paper §2.2).
+
+Decoder matches the SD 3.5 / FLUX.1 shape: 16 latent channels at 1/8
+spatial resolution, block_out_channels (128, 256, 512, 512), 3 res blocks
+per decoder level, one single-head attention mid-block — ~49.5 M params at
+defaults, as in paper Table 1b.  The decode is a deterministic feed-forward
+pass: same latent -> bit-identical pixels on a fixed stack.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.vae import layers as L
+
+
+@dataclasses.dataclass(frozen=True)
+class VAEConfig:
+    name: str = "sd35_vae"
+    latent_channels: int = 16
+    block_out_channels: Tuple[int, ...] = (128, 256, 512, 512)
+    layers_per_block: int = 2            # decoder uses layers_per_block + 1
+    groups: int = 32
+    scaling_factor: float = 1.5305       # SD3 latent scaling
+    shift_factor: float = 0.0609
+    image_channels: int = 3
+    dtype: Any = jnp.float32
+
+    @property
+    def spatial_factor(self) -> int:
+        return 2 ** (len(self.block_out_channels) - 1)
+
+    def latent_shape(self, image_hw: int) -> Tuple[int, int, int]:
+        s = image_hw // self.spatial_factor
+        return (s, s, self.latent_channels)
+
+
+SD35_VAE = VAEConfig(name="sd35_vae", latent_channels=16)
+FLUX_VAE = VAEConfig(name="flux_vae", latent_channels=16,
+                     scaling_factor=0.3611, shift_factor=0.1159)
+SD15_VAE = VAEConfig(name="sd15_vae", latent_channels=4,
+                     scaling_factor=0.18215, shift_factor=0.0)
+
+
+# ---------------------------------------------------------------------------
+# parameter construction
+# ---------------------------------------------------------------------------
+
+def init_decoder(key, cfg: VAEConfig) -> Dict[str, Any]:
+    dtype = cfg.dtype
+    chs = cfg.block_out_channels
+    top = chs[-1]
+    keys = jax.random.split(key, 8)
+    params: Dict[str, Any] = {
+        "conv_in": L.conv_init(keys[0], 3, 3, cfg.latent_channels, top, dtype),
+        "mid": {
+            "res1": L.resnet_block_init(keys[1], top, top, dtype),
+            "attn": L.attn_block_init(keys[2], top, dtype),
+            "res2": L.resnet_block_init(keys[3], top, top, dtype),
+        },
+        "up": [],
+        "norm_out": L.gn_init(chs[0], dtype),
+        "conv_out": L.conv_init(keys[4], 3, 3, chs[0], cfg.image_channels, dtype),
+    }
+    kb = jax.random.split(keys[5], len(chs))
+    cin = top
+    for i, cout in enumerate(reversed(chs)):        # top -> bottom
+        kr = jax.random.split(kb[i], cfg.layers_per_block + 2)
+        blocks = []
+        for j in range(cfg.layers_per_block + 1):
+            blocks.append(L.resnet_block_init(kr[j], cin, cout, dtype))
+            cin = cout
+        level: Dict[str, Any] = {"blocks": blocks}
+        if i < len(chs) - 1:
+            level["upsample"] = L.upsample_init(kr[-1], cout, dtype)
+        params["up"].append(level)
+    return params
+
+
+def init_encoder(key, cfg: VAEConfig) -> Dict[str, Any]:
+    dtype = cfg.dtype
+    chs = cfg.block_out_channels
+    keys = jax.random.split(key, 8)
+    params: Dict[str, Any] = {
+        "conv_in": L.conv_init(keys[0], 3, 3, cfg.image_channels, chs[0], dtype),
+        "down": [],
+    }
+    kb = jax.random.split(keys[1], len(chs))
+    cin = chs[0]
+    for i, cout in enumerate(chs):
+        kr = jax.random.split(kb[i], cfg.layers_per_block + 2)
+        blocks = []
+        for j in range(cfg.layers_per_block):
+            blocks.append(L.resnet_block_init(kr[j], cin, cout, dtype))
+            cin = cout
+        level: Dict[str, Any] = {"blocks": blocks}
+        if i < len(chs) - 1:
+            level["downsample"] = L.downsample_init(kr[-1], cout, dtype)
+        params["down"].append(level)
+    top = chs[-1]
+    params["mid"] = {
+        "res1": L.resnet_block_init(keys[2], top, top, dtype),
+        "attn": L.attn_block_init(keys[3], top, dtype),
+        "res2": L.resnet_block_init(keys[4], top, top, dtype),
+    }
+    params["norm_out"] = L.gn_init(top, dtype)
+    params["conv_out"] = L.conv_init(keys[5], 3, 3, top,
+                                     2 * cfg.latent_channels, dtype)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# forward passes
+# ---------------------------------------------------------------------------
+
+def decode(params: Dict[str, Any], z: jax.Array, cfg: VAEConfig,
+           impl: Optional[str] = None) -> jax.Array:
+    """latent [N, h, w, C_lat] -> image [N, 8h, 8w, 3] in [-1, 1]."""
+    z = z / cfg.scaling_factor + cfg.shift_factor
+    x = L.conv2d(z, params["conv_in"])
+    x = L.resnet_block(x, params["mid"]["res1"], cfg.groups, impl)
+    x = L.attn_block(x, params["mid"]["attn"], cfg.groups, impl)
+    x = L.resnet_block(x, params["mid"]["res2"], cfg.groups, impl)
+    for level in params["up"]:
+        for blk in level["blocks"]:
+            x = L.resnet_block(x, blk, cfg.groups, impl)
+        if "upsample" in level:
+            x = L.upsample(x, level["upsample"])
+    x = L.gn_silu(x, params["norm_out"], groups=cfg.groups, impl=impl)
+    return L.conv2d(x, params["conv_out"])
+
+
+def encode(params: Dict[str, Any], x: jax.Array, cfg: VAEConfig,
+           impl: Optional[str] = None) -> Tuple[jax.Array, jax.Array]:
+    """image [N, H, W, 3] -> (mean, logvar) latents [N, H/8, W/8, C_lat]."""
+    h = L.conv2d(x, params["conv_in"])
+    for level in params["down"]:
+        for blk in level["blocks"]:
+            h = L.resnet_block(h, blk, cfg.groups, impl)
+        if "downsample" in level:
+            h = L.downsample(h, level["downsample"])
+    h = L.resnet_block(h, params["mid"]["res1"], cfg.groups, impl)
+    h = L.attn_block(h, params["mid"]["attn"], cfg.groups, impl)
+    h = L.resnet_block(h, params["mid"]["res2"], cfg.groups, impl)
+    h = L.gn_silu(h, params["norm_out"], groups=cfg.groups, impl=impl)
+    moments = L.conv2d(h, params["conv_out"])
+    mean, logvar = jnp.split(moments, 2, axis=-1)
+    mean = (mean - cfg.shift_factor) * cfg.scaling_factor
+    return mean, logvar
+
+
+def param_count(params) -> int:
+    return sum(p.size for p in jax.tree_util.tree_leaves(params))
+
+
+class VAE:
+    """Convenience wrapper bundling config + params + jitted entry points."""
+
+    def __init__(self, cfg: VAEConfig = SD35_VAE, seed: int = 0,
+                 with_encoder: bool = True):
+        self.cfg = cfg
+        key = jax.random.PRNGKey(seed)
+        kd, ke = jax.random.split(key)
+        self.decoder = init_decoder(kd, cfg)
+        self.encoder = init_encoder(ke, cfg) if with_encoder else None
+        self._decode = jax.jit(lambda p, z: decode(p, z, cfg))
+        self._encode = jax.jit(lambda p, x: encode(p, x, cfg))
+
+    def decode(self, z: jax.Array) -> jax.Array:
+        return self._decode(self.decoder, z)
+
+    def encode_mean(self, x: jax.Array) -> jax.Array:
+        return self._encode(self.encoder, x)[0]
+
+    @property
+    def decoder_params(self) -> int:
+        return param_count(self.decoder)

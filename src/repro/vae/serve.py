@@ -1,0 +1,126 @@
+"""The VAE decode fleet — the paper's read path as a pjit step.
+
+``make_decode_step`` returns a jitted batched decode (latents -> images)
+with batch data-parallelism over every mesh axis; the serving engine
+(repro.serve.engine) microbatches requests into it.  ``vae_cell_cost``
+gives the analytic FLOPs/bytes used by the roofline and by the cluster
+simulator's T_decode cross-check (benchmarks/bench_decode.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.shapes import ShapeSpec
+from repro.vae.model import SD35_VAE, VAEConfig, decode
+
+
+def make_decode_step(cfg: VAEConfig, mesh=None):
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    if mesh is None:
+        return jax.jit(lambda p, z: decode(p, z, cfg))
+    all_axes = tuple(mesh.axis_names)
+    zsh = NamedSharding(mesh, P(all_axes, None, None, None))
+    return jax.jit(lambda p, z: decode(p, z, cfg),
+                   in_shardings=(None, zsh), out_shardings=zsh)
+
+
+# ---------------------------------------------------------------------------
+# analytic decode cost (conv-dominated; per image at resolution R)
+# ---------------------------------------------------------------------------
+
+def decoder_flops_per_image(cfg: VAEConfig = SD35_VAE,
+                            resolution: int = 1024) -> float:
+    """Sum conv/attention FLOPs through the decoder stages."""
+    lat = resolution // cfg.spatial_factor
+    chs = list(reversed(cfg.block_out_channels))     # top -> bottom
+    top = chs[0]
+    flops = 0.0
+    h = lat
+
+    def conv(cin, cout, hh, k=3):
+        return 2.0 * hh * hh * cin * cout * k * k
+
+    def resblock(cin, cout, hh):
+        f = conv(cin, cout, hh) + conv(cout, cout, hh)
+        if cin != cout:
+            f += conv(cin, cout, hh, k=1)
+        return f
+
+    flops += conv(cfg.latent_channels, top, h)               # conv_in
+    flops += 2 * resblock(top, top, h)                       # mid res
+    flops += 4 * (2.0 * (h * h) * (h * h) * top) \
+        + 4 * 2.0 * h * h * top * top                        # mid attn
+    cin = top
+    for i, cout in enumerate(chs):
+        for _ in range(cfg.layers_per_block + 1):
+            flops += resblock(cin, cout, h)
+            cin = cout
+        if i < len(chs) - 1:
+            h *= 2
+            flops += conv(cout, cout, h)                     # upsampler
+    flops += conv(chs[-1], cfg.image_channels, h)            # conv_out
+    return flops
+
+
+def decoder_bytes_per_image(cfg: VAEConfig = SD35_VAE,
+                            resolution: int = 1024,
+                            dtype_size: int = 2) -> float:
+    """Activation + weight traffic (fused GN+SiLU, flash attention)."""
+    lat = resolution // cfg.spatial_factor
+    chs = list(reversed(cfg.block_out_channels))
+    params = 49.55e6
+    traffic = params * dtype_size
+    h = lat
+    cin = chs[0]
+    # each res block: ~4 r/w of the [h, h, c] activation
+    traffic += 3 * 4 * h * h * cin * dtype_size              # mid
+    for i, cout in enumerate(chs):
+        traffic += (cfg.layers_per_block + 1) * 4 * h * h * cout * dtype_size
+        if i < len(chs) - 1:
+            h *= 2
+            traffic += 2 * h * h * cout * dtype_size
+    traffic += h * h * 3 * dtype_size                        # output image
+    return traffic
+
+
+@dataclasses.dataclass
+class VaeCellCost:
+    flops: float
+    hbm_bytes: float
+    hbm_bytes_flash: float
+    model_flops: float
+    params: int
+    active_params: int
+
+
+def vae_cell_cost(shape: ShapeSpec) -> VaeCellCost:
+    res = shape.seq_len
+    b = shape.global_batch
+    f = decoder_flops_per_image(SD35_VAE, res) * b
+    by = decoder_bytes_per_image(SD35_VAE, res) * b
+    return VaeCellCost(flops=f, hbm_bytes=by, hbm_bytes_flash=by,
+                       model_flops=f, params=49_550_000,
+                       active_params=49_550_000)
+
+
+def decode_ms_estimate(resolution: int = 1024,
+                       peak_flops: float = 197e12,
+                       hbm_bw: float = 819e9,
+                       mfu: float = 0.55) -> Dict[str, float]:
+    """Roofline T_decode estimate for one image on one v5e chip — feeds the
+    cluster simulator's default decode latency (cross-check vs the paper's
+    measured 32.6-67.2 ms on H100/RTX GPUs)."""
+    fl = decoder_flops_per_image(SD35_VAE, resolution)
+    by = decoder_bytes_per_image(SD35_VAE, resolution)
+    t_comp = fl / (peak_flops * mfu)
+    t_mem = by / hbm_bw
+    return {"flops": fl, "bytes": by, "compute_ms": t_comp * 1e3,
+            "memory_ms": t_mem * 1e3,
+            "decode_ms": max(t_comp, t_mem) * 1e3}

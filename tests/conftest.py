@@ -1,0 +1,13 @@
+import os
+
+# Tests must see the real 1-CPU world (the dry-run sets its own flags in a
+# separate process).  Keep any accidental device-count override out.
+os.environ.pop("XLA_FLAGS", None)
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

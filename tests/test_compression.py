@@ -1,0 +1,87 @@
+"""Latent codec: bit-exact roundtrip (hypothesis), ratio sanity, PNG proxy,
+lossy codec quality ordering, PSNR/SSIM metric properties."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+from hypothesis.extra import numpy as hnp
+
+from repro.compression.latentcodec import (compress_latent, compression_ratio,
+                                           decompress_latent)
+from repro.compression.lossy import jpeg_like
+from repro.compression.metrics import psnr, ssim
+from repro.compression.png_proxy import png_like_size
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.sampled_from([np.float16, np.float32, np.int16, np.uint16,
+                        np.int32]).flatmap(
+    lambda dt: hnp.arrays(dtype=dt,
+                          shape=hnp.array_shapes(min_dims=1, max_dims=3,
+                                                 min_side=1, max_side=24))))
+def test_roundtrip_bit_exact(arr):
+    out = decompress_latent(compress_latent(arr))
+    assert out.dtype == arr.dtype and out.shape == arr.shape
+    assert np.array_equal(arr, out, equal_nan=True)
+
+
+def test_special_values_roundtrip():
+    sp = np.array([np.nan, np.inf, -np.inf, 0.0, -0.0, 1e-40, -1e-40,
+                   np.finfo(np.float32).max], np.float32)
+    out = decompress_latent(compress_latent(sp))
+    assert np.array_equal(sp, out, equal_nan=True)
+    assert np.array_equal(np.signbit(sp), np.signbit(out))
+
+
+def test_smooth_latents_compress_better_than_noise(rng):
+    noise = rng.standard_normal((16, 64, 64)).astype(np.float16)
+    x = np.linspace(0, 8 * np.pi, 64 * 64, dtype=np.float32)
+    smooth = np.broadcast_to(np.sin(x).reshape(64, 64), (16, 64, 64))
+    smooth = smooth.astype(np.float16)
+    _, _, r_noise = compression_ratio(noise)
+    _, _, r_smooth = compression_ratio(np.ascontiguousarray(smooth))
+    assert r_smooth > 1.5 * r_noise
+
+
+def test_constant_array_compresses_heavily():
+    a = np.full((16, 32, 32), 1.25, np.float16)
+    raw, comp, ratio = compression_ratio(a)
+    assert ratio > 20
+
+
+def test_png_proxy_smooth_vs_noise(rng):
+    smooth = np.tile(np.linspace(0, 255, 64, dtype=np.uint8)[None, :, None],
+                     (64, 1, 3))
+    noise = rng.integers(0, 256, (64, 64, 3)).astype(np.uint8)
+    assert png_like_size(smooth) < png_like_size(noise) / 3
+
+
+class TestLossy:
+    def test_quality_ordering(self, rng):
+        img = (np.clip(np.cumsum(rng.standard_normal((64, 64, 3)), axis=0)
+                       * 10 + 128, 0, 255)).astype(np.uint8)
+        s95, r95 = jpeg_like(img, 95)
+        s50, r50 = jpeg_like(img, 50)
+        assert s50 < s95
+        assert psnr(img, r95) > psnr(img, r50)
+        assert ssim(img, r95) > ssim(img, r50)
+
+
+class TestMetrics:
+    def test_psnr_identity_inf(self, rng):
+        img = rng.integers(0, 256, (32, 32, 3)).astype(np.uint8)
+        assert psnr(img, img) == float("inf")
+        assert ssim(img, img) == pytest.approx(1.0, abs=1e-6)
+
+    def test_psnr_known_value(self):
+        a = np.zeros((16, 16))
+        b = np.full((16, 16), 16.0)
+        assert psnr(a, b) == pytest.approx(10 * np.log10(255 ** 2 / 256.0))
+
+    def test_ssim_degrades_with_noise(self, rng):
+        img = (np.clip(np.cumsum(rng.standard_normal((64, 64)), axis=0)
+                       * 10 + 128, 0, 255))
+        noisy1 = img + rng.normal(0, 5, img.shape)
+        noisy2 = img + rng.normal(0, 25, img.shape)
+        assert ssim(img, noisy1) > ssim(img, noisy2)

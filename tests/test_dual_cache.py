@@ -1,0 +1,171 @@
+"""Dual-format cache invariants (paper §4.2) — unit + hypothesis property
+tests: single residency, capacity bounds, promotion-at-h, tail-hit
+semantics, alpha resizing."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.dual_cache import (DualFormatCache, SegmentedLRU, FULL_MISS,
+                                   IMAGE_HIT, LATENT_HIT)
+
+IMG, LAT = 100.0, 20.0
+
+
+def make(capacity=1000.0, alpha=0.5, tau=0.1, h=3):
+    return DualFormatCache(capacity, alpha=alpha, tau=tau,
+                           promote_threshold=h,
+                           image_size_fn=lambda _: IMG,
+                           latent_size_fn=lambda _: LAT)
+
+
+class TestSegmentedLRU:
+    def test_basic_lru_order(self):
+        c = SegmentedLRU(3.0, tau=0.0)
+        for i in range(3):
+            c.insert(i, 1.0)
+        c.lookup(0)                       # refresh 0
+        c.insert(3, 1.0)                  # evicts 1 (LRU)
+        assert 0 in c and 2 in c and 3 in c and 1 not in c
+
+    def test_tail_demotion_and_tail_hit(self):
+        c = SegmentedLRU(10.0, tau=0.2)   # main 8, tail 2
+        for i in range(10):
+            c.insert(i, 1.0)
+        # oldest entries demoted into tail
+        assert c.lookup(8) == "tail" or c.lookup(8) == "main"
+        c.check_invariants()
+
+    def test_oversize_object_rejected(self):
+        c = SegmentedLRU(10.0)
+        evicted = c.insert(1, 50.0)
+        assert (1, 50.0) in evicted and 1 not in c
+
+    def test_capacity_shrink_evicts(self):
+        c = SegmentedLRU(10.0)
+        for i in range(10):
+            c.insert(i, 1.0)
+        c.set_capacity(4.0)
+        assert c.resident_bytes <= 4.0
+        c.check_invariants()
+
+
+class TestDualFormatCache:
+    def test_lookup_cascade(self):
+        c = make()
+        r = c.lookup(1)
+        assert r.outcome == FULL_MISS
+        c.admit_latent(1)
+        assert c.lookup(1).outcome == LATENT_HIT
+
+    def test_promotion_at_threshold(self):
+        c = make(h=3)
+        c.admit_latent(1)
+        assert c.lookup(1).outcome == LATENT_HIT        # count 1
+        assert c.lookup(1).outcome == LATENT_HIT        # count 2
+        r = c.lookup(1)                                  # count 3 -> promote
+        assert r.outcome == LATENT_HIT and r.promoted
+        assert c.contains(1) == "image"
+        assert c.lookup(1).outcome == IMAGE_HIT
+
+    def test_single_residency(self):
+        c = make(h=1)
+        c.admit_latent(1)
+        c.lookup(1)                                      # promote at h=1
+        assert 1 in c.image_tier and 1 not in c.latent_tier
+        c.check_invariants()
+
+    def test_no_promotion_into_zero_image_tier(self):
+        c = make(alpha=0.0, h=1)
+        c.admit_latent(1)
+        r = c.lookup(1)
+        assert r.outcome == LATENT_HIT and not r.promoted
+        assert c.contains(1) == "latent"                 # object kept
+
+    def test_alpha_one_drops_latent_admission(self):
+        c = make(alpha=1.0)
+        c.admit_latent(1)
+        assert c.contains(1) is None
+        c.insert_image(1)
+        assert c.contains(1) == "image"
+
+    def test_window_stats(self):
+        c = make(h=2)
+        c.lookup(1)
+        c.admit_latent(1)
+        c.lookup(1)
+        c.lookup(1)                                      # promotes
+        c.lookup(1)                                      # image hit
+        s = c.end_window()
+        assert s.total_requests == 4
+        assert s.full_misses == 1
+        assert s.latent_hits == 2
+        assert s.image_hits == 1
+        assert s.promotions == 1
+        assert c.stats.total_requests == 0               # reset
+
+    def test_set_alpha_rebalances(self):
+        c = make(alpha=0.5)
+        for i in range(40):
+            c.admit_latent(i)
+        before = c.latent_tier.resident_bytes
+        c.set_alpha(0.9)
+        assert c.latent_tier.capacity == pytest.approx(100.0)
+        assert c.latent_tier.resident_bytes <= 100.0
+        assert c.latent_tier.resident_bytes < before
+        c.check_invariants()
+
+
+@settings(max_examples=200, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 30), st.sampled_from(["get"])),
+                min_size=1, max_size=300),
+       st.floats(0.0, 1.0), st.floats(0.0, 0.4),
+       st.integers(1, 6))
+def test_property_invariants(ops, alpha, tau, h):
+    """Any access sequence preserves: capacity bounds, single residency,
+    non-negative counters, and the outcome algebra."""
+    c = DualFormatCache(500.0, alpha=alpha, tau=tau, promote_threshold=h,
+                        image_size_fn=lambda _: IMG,
+                        latent_size_fn=lambda _: LAT)
+    for oid, _ in ops:
+        r = c.lookup(oid)
+        if r.outcome == FULL_MISS:
+            c.admit_latent(oid)
+        c.check_invariants()
+    s = c.stats
+    assert s.image_hits + s.image_misses == s.total_requests
+    assert s.latent_hits + s.full_misses == s.image_misses
+    assert s.image_tail_hits <= s.image_hits
+    assert s.latent_tail_hits <= s.latent_hits
+
+
+class TestRegenTier:
+    """Beyond-paper recipe tier (core/regen_tier.py)."""
+
+    def test_breakeven_age_positive_and_finite(self):
+        from repro.core.regen_tier import RegenPolicy
+        a = RegenPolicy().demotion_age_months()
+        assert 0.1 < a < 240.0
+
+    def test_demotion_and_regen_flow(self):
+        from repro.core.regen_tier import RegenPolicy, RegenTierStore
+        pol = RegenPolicy()
+        st = RegenTierStore(pol)
+        st.put(1, 290e3, now_mo=0.0)
+        st.put(2, 290e3, now_mo=0.0)
+        _, r = st.fetch(2, now_mo=0.5)        # keep 2 warm
+        assert not r
+        st.run_demotion(now_mo=pol.demotion_age_months() + 1.0)
+        _, needs1 = st.fetch(1, now_mo=pol.demotion_age_months() + 1.1)
+        assert needs1                          # 1 was demoted to recipe
+        st.readmit(1, 290e3, now_mo=pol.demotion_age_months() + 1.1)
+        _, needs1b = st.fetch(1, now_mo=pol.demotion_age_months() + 1.2)
+        assert not needs1b                     # warm again after regen
+
+    def test_cheaper_gpu_lowers_breakeven_age(self):
+        from repro.core.regen_tier import RegenPolicy
+        import dataclasses
+        a_expensive = RegenPolicy(p_gpu_hr=2.5).demotion_age_months()
+        a_cheap = RegenPolicy(p_gpu_hr=0.3).demotion_age_months()
+        assert a_cheap < a_expensive

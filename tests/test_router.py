@@ -1,0 +1,81 @@
+"""Consistent-hash router (paper §4.4): ownership stability, coalescing,
+spillover decisions, and elastic node churn."""
+
+import numpy as np
+import pytest
+
+from repro.core.router import ConsistentHashRing, Router
+
+
+class TestRing:
+    def test_deterministic_ownership(self):
+        r1 = ConsistentHashRing(["a", "b", "c"])
+        r2 = ConsistentHashRing(["a", "b", "c"])
+        for oid in range(200):
+            assert r1.owner(oid) == r2.owner(oid)
+
+    def test_balanced(self):
+        r = ConsistentHashRing([f"n{i}" for i in range(4)], vnodes=256)
+        owners = [r.owner(i) for i in range(20_000)]
+        _, counts = np.unique(owners, return_counts=True)
+        assert counts.min() > 0.15 * 20_000          # no starved node
+
+    def test_minimal_churn_on_node_add(self):
+        """Elastic scaling property: adding a node remaps ~1/(n+1)."""
+        r = ConsistentHashRing(["a", "b", "c"], vnodes=256)
+        before = {i: r.owner(i) for i in range(10_000)}
+        r.add_node("d")
+        moved = sum(before[i] != r.owner(i) for i in range(10_000))
+        assert moved / 10_000 < 0.45                  # ~0.25 expected
+        # and everything that moved went to the new node
+        for i in range(10_000):
+            if before[i] != r.owner(i):
+                assert r.owner(i) == "d"
+
+    def test_remove_node(self):
+        r = ConsistentHashRing(["a", "b"], vnodes=64)
+        r.remove_node("a")
+        assert all(r.owner(i) == "b" for i in range(100))
+
+
+class TestRouterCoalescing:
+    def test_coalesce_parks_waiters(self):
+        r = Router(["n0", "n1"])
+        assert not r.try_coalesce(7, "w1")            # nothing in flight
+        r.begin_inflight(7)
+        assert r.try_coalesce(7, "w2")
+        assert r.try_coalesce(7, "w3")
+        assert r.finish_inflight(7) == ["w2", "w3"]
+        assert not r.try_coalesce(7, "w4")            # cleared
+
+
+class TestSpillover:
+    def test_dispatch_prefers_owner_under_threshold(self):
+        r = Router(["n0", "n1"], theta=4)
+        owner = r.ring.owner(42)
+        r.report_depth(owner, 3)
+        o, e, spilled = r.dispatch(42)
+        assert o == e == owner and not spilled
+
+    def test_dispatch_spills_when_overloaded(self):
+        r = Router(["n0", "n1"], theta=2)
+        owner = r.ring.owner(42)
+        other = "n1" if owner == "n0" else "n0"
+        r.report_depth(owner, 10)
+        r.report_depth(other, 0)
+        o, e, spilled = r.dispatch(42)
+        assert o == owner and e == other and spilled  # cache pinned at owner
+
+    def test_no_spill_when_everyone_loaded(self):
+        r = Router(["n0", "n1"], theta=2)
+        owner = r.ring.owner(42)
+        for n in ("n0", "n1"):
+            r.report_depth(n, 10)
+        _, e, spilled = r.dispatch(42)
+        assert e == owner and not spilled
+
+    def test_single_node_cluster(self):
+        r = Router(["n0"], theta=0)
+        r.report_depth("n0", 99)
+        o, e, spilled = r.dispatch(1)
+        assert o == e == "n0" and not spilled

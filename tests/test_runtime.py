@@ -1,0 +1,190 @@
+"""Runtime substrate: optimizer math, checkpoint restart/reshard, data
+determinism, gradient compression, collectives, cost model."""
+
+import dataclasses
+import os
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.ckpt.checkpoint import CheckpointManager
+from repro.core.cost_model import CostParams, normalized_horizons, project
+from repro.data.synthetic import DataConfig, SyntheticTokens
+from repro.train import grad_compress as GC
+from repro.train.optim import (AdamW, AdamWConfig, clip_by_global_norm,
+                               schedule_lr)
+
+
+class TestAdamW:
+    def test_matches_reference_step(self):
+        cfg = AdamWConfig(lr=0.1, b1=0.9, b2=0.999, eps=1e-8,
+                          weight_decay=0.0, clip_norm=None,
+                          warmup_steps=0, schedule="constant")
+        opt = AdamW(cfg)
+        p = {"w": jnp.array([1.0, -2.0])}
+        g = {"w": jnp.array([0.5, 0.5])}
+        state = opt.init(p)
+        p2, state, _ = opt.update(g, state, p)
+        m = 0.1 * 0.5
+        v = 0.001 * 0.25
+        mhat = m / (1 - 0.9)
+        vhat = v / (1 - 0.999)
+        want = 1.0 - 0.1 * mhat / (np.sqrt(vhat) + 1e-8)
+        assert float(p2["w"][0]) == pytest.approx(want, rel=1e-5)
+
+    def test_weight_decay_decoupled(self):
+        cfg = AdamWConfig(lr=0.1, weight_decay=0.5, clip_norm=None,
+                          warmup_steps=0, schedule="constant")
+        opt = AdamW(cfg)
+        p = {"w": jnp.array([2.0])}
+        g = {"w": jnp.array([0.0])}
+        p2, _, _ = opt.update(g, opt.init(p), p)
+        assert float(p2["w"][0]) == pytest.approx(2.0 - 0.1 * 0.5 * 2.0)
+
+    def test_schedule_warmup_and_cosine(self):
+        cfg = AdamWConfig(lr=1.0, warmup_steps=10, total_steps=110)
+        assert float(schedule_lr(cfg, jnp.int32(0))) == pytest.approx(0.1)
+        assert float(schedule_lr(cfg, jnp.int32(9))) == pytest.approx(1.0)
+        assert float(schedule_lr(cfg, jnp.int32(110))) < 1e-6
+
+    def test_clip(self):
+        tree = {"a": jnp.array([3.0, 4.0])}
+        clipped, norm = clip_by_global_norm(tree, 1.0)
+        assert float(norm) == pytest.approx(5.0)
+        assert float(jnp.linalg.norm(clipped["a"])) == pytest.approx(1.0)
+
+    def test_bf16_moments(self):
+        opt = AdamW(AdamWConfig(moment_dtype="bfloat16"))
+        st = opt.init({"w": jnp.zeros((4,))})
+        assert st.m["w"].dtype == jnp.bfloat16
+
+
+class TestCheckpoint:
+    def test_roundtrip_and_resume(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path), keep_last=2)
+        tree = {"a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+                "nested": {"b": jnp.ones((4,), jnp.bfloat16)}}
+        mgr.save(5, tree)
+        mgr.save(10, jax.tree.map(lambda x: x * 2, tree))
+        assert mgr.all_steps() == [5, 10]
+        restored, step = mgr.restore(tree)
+        assert step == 10
+        np.testing.assert_array_equal(np.asarray(restored["a"]),
+                                      np.asarray(tree["a"]) * 2)
+        assert restored["nested"]["b"].dtype == jnp.bfloat16
+
+    def test_atomicity_ignores_uncommitted(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path))
+        tree = {"a": jnp.zeros((2,))}
+        mgr.save(1, tree)
+        # simulate a torn write: directory without the commit marker
+        os.makedirs(tmp_path / "step_000000002")
+        assert mgr.latest_step() == 1
+
+    def test_prune_keeps_last(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path), keep_last=2)
+        for s in (1, 2, 3, 4):
+            mgr.save(s, {"a": jnp.zeros(1)})
+        assert mgr.all_steps() == [3, 4]
+
+    def test_async_save(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path))
+        mgr.save(7, {"a": jnp.ones((8, 8))}, blocking=False)
+        mgr.wait()
+        assert mgr.latest_step() == 7
+
+    def test_shape_mismatch_raises(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path))
+        mgr.save(1, {"a": jnp.zeros((2,))})
+        with pytest.raises(ValueError):
+            mgr.restore({"a": jnp.zeros((3,))})
+
+
+class TestData:
+    def test_deterministic_across_restarts(self):
+        cfg = DataConfig(vocab_size=1000, seq_len=32, global_batch=4, seed=3)
+        d1, d2 = SyntheticTokens(cfg), SyntheticTokens(cfg)
+        b1, b2 = d1.batch(17), d2.batch(17)
+        np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+
+    def test_shards_partition_batch(self):
+        base = dict(vocab_size=100, seq_len=8, global_batch=4, seed=0)
+        s0 = SyntheticTokens(DataConfig(**base, shard_index=0, num_shards=2))
+        s1 = SyntheticTokens(DataConfig(**base, shard_index=1, num_shards=2))
+        b0, b1 = s0.batch(0), s1.batch(0)
+        assert b0["tokens"].shape == (2, 8)
+        assert not np.array_equal(b0["tokens"], b1["tokens"])
+
+    def test_labels_shifted(self):
+        d = SyntheticTokens(DataConfig(vocab_size=50, seq_len=16,
+                                       global_batch=1))
+        b = d.batch(0)
+        np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+
+
+class TestGradCompression:
+    def test_quantize_roundtrip_error_bounded(self, rng):
+        g = jnp.asarray(rng.standard_normal(1000), jnp.float32)
+        q, s = GC.quantize_int8(g)
+        err = np.abs(np.asarray(GC.dequantize_int8(q, s) - g))
+        assert err.max() <= float(s) * 0.5 + 1e-7
+
+    def test_error_feedback_unbiased_over_steps(self, rng):
+        """EF: the accumulated applied update converges to the true sum."""
+        g = {"w": jnp.asarray(rng.standard_normal(256) * 1e-3, jnp.float32)}
+        err = None
+        applied = np.zeros(256)
+        for _ in range(50):
+            (q, s), err = GC.compress_tree(g, err)
+            applied += np.asarray(GC.decompress_tree(q, s)["w"])
+        true = np.asarray(g["w"]) * 50
+        assert np.abs(applied - true).max() <= float(s["w"]) + 1e-6
+
+
+class TestCostModel:
+    def test_imgstore_linear_anchor(self):
+        curves = project(CostParams())
+        norm = normalized_horizons(curves)
+        assert norm["imgstore"][2026.25] == pytest.approx(1.0, abs=0.05)
+        # paper: ImgStore ~164x by 2050, LB-5090 ~49x (constant prices);
+        # our ramp model anchors slightly differently — same order
+        assert 80 <= norm["imgstore"][2050.0] <= 260
+        assert norm["lb_5090"][2050.0] < 0.55 * norm["imgstore"][2050.0]
+
+    def test_glacier_between(self):
+        norm = normalized_horizons(project(CostParams()))
+        assert norm["lb_5090"][2050.0] < norm["imgstore_glacier"][2050.0] \
+            < norm["imgstore"][2050.0]
+
+
+class TestElasticRescale:
+    def test_restore_onto_different_mesh(self, tmp_path):
+        """Elastic path: checkpoint saved unsharded restores onto a mesh
+        with a different layout via the shardings argument."""
+        import jax
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        mgr = CheckpointManager(str(tmp_path))
+        tree = {"w": jnp.arange(16, dtype=jnp.float32).reshape(4, 4)}
+        mgr.save(1, tree)
+        mesh = jax.make_mesh((1,), ("model",))
+        sh = {"w": NamedSharding(mesh, P("model", None))}
+        restored, step = mgr.restore(tree, shardings=sh)
+        assert step == 1
+        assert restored["w"].sharding == sh["w"]
+        np.testing.assert_array_equal(np.asarray(restored["w"]),
+                                      np.asarray(tree["w"]))
+
+    def test_trainer_resume_after_data_reshard(self, tmp_path):
+        """Rescale story: same global batch, different shard count — the
+        stateless data pipeline regenerates the identical global stream."""
+        base = dict(vocab_size=64, seq_len=8, global_batch=4, seed=11)
+        whole = SyntheticTokens(DataConfig(**base))
+        halves = [SyntheticTokens(DataConfig(**base, shard_index=i,
+                                             num_shards=2))
+                  for i in range(2)]
+        b = whole.batch(3)
+        b2 = np.concatenate([h.batch(3)["tokens"] for h in halves])
+        np.testing.assert_array_equal(b["tokens"], b2)

@@ -1,0 +1,135 @@
+"""Synthetic trace statistics + distribution helpers (sharding specs,
+collectives, analytic costs vs XLA)."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.trace.synth import TraceConfig, generate_trace
+
+
+class TestTrace:
+    @pytest.fixture(scope="class")
+    def trace(self):
+        return generate_trace(TraceConfig(n_objects=20_000,
+                                          n_requests=400_000,
+                                          span_days=60, seed=5))
+
+    def test_sorted_and_bounded(self, trace):
+        assert np.all(np.diff(trace.timestamps) >= 0)
+        assert trace.timestamps[0] >= 0
+        assert trace.timestamps[-1] <= trace.config.span_days * 86_400 + 1
+        assert trace.object_ids.max() < trace.config.n_objects
+
+    def test_zipf_skew(self, trace):
+        s = trace.characterize()
+        assert s["top1_share"] > 0.15          # heavy head
+        assert s["top10_share"] > s["top1_share"]
+        assert s["frac_lt10_views"] > 0.4      # long tail
+
+    def test_reaccess_concentration(self, trace):
+        s = trace.characterize()
+        assert s["reaccess_1h"] > 0.15
+        assert s["reaccess_1d"] > s["reaccess_1h"]
+
+    def test_post_birth_decay(self, trace):
+        ages = trace.timestamps - trace.birth_time[trace.object_ids]
+        frac_week1 = float(np.mean(ages < 7 * 86_400))
+        assert frac_week1 > 0.5                # most views close to birth
+
+    def test_deterministic(self):
+        cfg = TraceConfig(n_objects=500, n_requests=5_000, seed=9)
+        a, b = generate_trace(cfg), generate_trace(cfg)
+        np.testing.assert_array_equal(a.object_ids, b.object_ids)
+
+    def test_window_and_downsample(self, trace):
+        w = trace.window(0, 86_400.0)
+        assert w.n_requests < trace.n_requests
+        assert np.all(w.timestamps <= 86_400.0)
+        d = trace.downsample_objects(1_000, seed=1)
+        assert len(np.unique(d.object_ids)) <= 1_000
+
+    def test_save_load_roundtrip(self, trace, tmp_path):
+        p = str(tmp_path / "t.npz")
+        trace.save(p)
+        from repro.trace.synth import SyntheticTrace
+        t2 = SyntheticTrace.load(p)
+        np.testing.assert_array_equal(trace.object_ids, t2.object_ids)
+
+
+class TestShardingHelpers:
+    def test_constrain_noop_without_mesh(self):
+        from repro.dist.sharding import constrain, set_constraint_mesh
+        set_constraint_mesh(None)
+        x = jnp.ones((4, 4))
+        assert constrain(x, "data", None) is x
+
+    def test_zero1_skips_fsdp_leaves(self):
+        from repro.dist.sharding import opt_state_pspecs
+        specs = {"w": P(None, "data", "model"), "b": P(None, "model")}
+        o = opt_state_pspecs(specs, zero1=True)
+        assert o.m["w"] == P(None, "data", "model")     # untouched
+        assert o.m["b"] == P("data", "model")           # first free dim
+
+    def test_retarget_pspec_multipod(self):
+        import jax as _jax
+        from repro.dist.sharding import retarget_pspec
+        mesh = _jax.make_mesh((1, 1, 1), ("pod", "data", "model"))
+        assert retarget_pspec(P("data", None), mesh) == \
+            P(("pod", "data"), None)
+
+
+class TestAnalyticCosts:
+    def test_model_flops_6nd_dense(self):
+        import repro.configs as RC
+        from repro.configs.shapes import LM_SHAPES
+        from repro.launch.costs import cell_cost
+        cfg = RC.get_config("granite-8b")
+        c = cell_cost(cfg, LM_SHAPES["train_4k"])
+        tokens = 256 * 4096
+        assert c.model_flops == pytest.approx(
+            6 * cfg.param_count() * tokens, rel=1e-6)
+        # compiled-equivalent flops exceed 6ND (remat) but < 3x
+        assert 1.0 < c.flops / c.model_flops < 3.0
+
+    def test_decode_memory_dominated_by_kv_or_params(self):
+        import repro.configs as RC
+        from repro.configs.shapes import LM_SHAPES
+        from repro.launch.costs import cell_cost
+        cfg = RC.get_config("qwen2-7b")
+        c = cell_cost(cfg, LM_SHAPES["decode_32k"])
+        # decode flops tiny vs train
+        t = cell_cost(cfg, LM_SHAPES["train_4k"])
+        assert c.flops < t.flops / 1e3
+
+    def test_vae_decoder_flops_scale(self):
+        from repro.vae.serve import decoder_flops_per_image
+        f512 = decoder_flops_per_image(resolution=512)
+        f1024 = decoder_flops_per_image(resolution=1024)
+        assert 3.5 < f1024 / f512 < 4.5        # ~quadratic in resolution
+
+    def test_analytic_matches_xla_at_smoke_scale(self):
+        """Calibration: cost_analysis on an unrolled 1-device compile of a
+        reduced dense model agrees with the analytic forward FLOPs within
+        ~35% (XLA counts some fusions differently)."""
+        import dataclasses
+        import repro.configs as RC
+        from repro.launch.costs import fwd_flops_per_token, _logits_flops
+        cfg = dataclasses.replace(RC.reduced_config(RC.get_config(
+            "granite-8b")), scan_unroll=True, remat=False)
+        model = RC.build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        b, s = 2, 64
+        toks = jnp.zeros((b, s), jnp.int32)
+
+        def fwd(p, t):
+            return model.logits(p, model.hidden(p, t, remat=False))
+
+        compiled = jax.jit(fwd).lower(params, toks).compile()
+        got = compiled.cost_analysis()["flops"]
+        want = (fwd_flops_per_token(cfg, s / 2) * b * s
+                + _logits_flops(cfg, b * s))
+        assert 0.5 < got / want < 1.5

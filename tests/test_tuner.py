@@ -1,0 +1,96 @@
+"""Marginal-hit tuner (paper §4.3): gradient sign algebra, EWMA feedback,
+and convergence toward the better tier on synthetic workloads."""
+
+import numpy as np
+import pytest
+
+from repro.core.dual_cache import DualFormatCache, WindowStats
+from repro.core.replay import ReplayConfig, replay
+from repro.core.tuner import Ewma, MarginalHitTuner, TunerConfig
+
+
+def stats(total=1000, img_miss=400, full_miss=100, img_tail=20, lat_tail=10):
+    s = WindowStats()
+    s.total_requests = total
+    s.image_misses = img_miss
+    s.image_hits = total - img_miss
+    s.full_misses = full_miss
+    s.latent_hits = img_miss - full_miss
+    s.image_tail_hits = img_tail
+    s.latent_tail_hits = lat_tail
+    return s
+
+
+class TestGradient:
+    def test_eq2_value(self):
+        s = stats()
+        d = MarginalHitTuner.gradient(s, t_decode=40.0, t_fetch=140.0)
+        mr_lat = 100 / 400
+        expect = -(20 / 1000) * (40 + 140 * mr_lat) + 140 * (400 / 1000) \
+            * (10 / 400)
+        assert d == pytest.approx(expect)
+
+    def test_sign_moves_alpha_toward_image_tier(self):
+        cache = DualFormatCache(1000.0, alpha=0.5)
+        tuner = MarginalHitTuner(cache, TunerConfig(window=10, step=0.05))
+        # image tail hits dominate -> D < 0 -> alpha up
+        cache.stats = stats(img_tail=100, lat_tail=0)
+        rec = tuner.end_window()
+        assert rec.gradient < 0 and cache.alpha == pytest.approx(0.55)
+
+    def test_sign_moves_alpha_toward_latent_tier(self):
+        cache = DualFormatCache(1000.0, alpha=0.5)
+        tuner = MarginalHitTuner(cache, TunerConfig(window=10, step=0.05))
+        cache.stats = stats(img_tail=0, lat_tail=200)
+        rec = tuner.end_window()
+        assert rec.gradient > 0 and cache.alpha == pytest.approx(0.45)
+
+    def test_alpha_clamped(self):
+        cache = DualFormatCache(1000.0, alpha=0.99)
+        tuner = MarginalHitTuner(cache, TunerConfig(window=10, step=0.05,
+                                                    alpha_max=1.0))
+        cache.stats = stats(img_tail=100, lat_tail=0)
+        tuner.end_window()
+        assert cache.alpha <= 1.0
+
+    def test_expected_latency_eq1(self):
+        s = stats()
+        e = MarginalHitTuner.expected_latency_ms(s, 40.0, 140.0)
+        mr_i, mr_l = 0.4, 0.25
+        assert e == pytest.approx(mr_i * ((1 - mr_l) * 40 + mr_l * 180))
+
+
+class TestEwma:
+    def test_cold_start_then_tracks(self):
+        e = Ewma(40.0, beta=0.5)
+        assert e.value == 40.0
+        e.update(100.0)
+        assert e.value == 100.0            # first sample replaces default
+        e.update(0.0)
+        assert e.value == 50.0
+
+    def test_feedback_loop_raises_alpha_when_decode_expensive(self):
+        """Paper Fig. 6: GPU overload -> T_decode up -> alpha pushed up."""
+        cache = DualFormatCache(1000.0, alpha=0.5)
+        tuner = MarginalHitTuner(cache, TunerConfig(window=10, step=0.01))
+        cache.stats = stats(img_tail=30, lat_tail=30)
+        for _ in range(50):
+            tuner.observe_decode_ms(500.0)     # overloaded GPU
+        rec = tuner.end_window()
+        assert rec.gradient < 0                # image tier favored
+
+
+class TestEndToEndAdaptation:
+    def test_adaptive_beats_or_matches_worst_static(self):
+        rng = np.random.default_rng(0)
+        ids = rng.zipf(1.3, 60_000) % 2_000
+        base = dict(cache_bytes=2_000 * 1.4e6 * 0.05, image_bytes=1.4e6,
+                    latent_bytes=0.28e6)
+        ad = replay(ids, ReplayConfig(**base, adaptive=True,
+                                      tuner=TunerConfig(window=5_000,
+                                                        step=0.02)))
+        worst = max(
+            replay(ids, ReplayConfig(**base, alpha0=a, adaptive=False)
+                   ).mean_ms
+            for a in (0.1, 0.9))
+        assert ad.mean_ms <= worst * 1.05
