@@ -4,7 +4,11 @@ No GPU here, so the per-image decode latency is (a) derived from the v5e
 roofline of our decoder (compute-bound: conv FLOPs / peak) — this is the
 T_decode the cluster simulator uses — and (b) cross-checked by measuring
 the actual jitted decode on CPU at small resolution and verifying the
-compute-bound scaling (latency ~ linear in batch, quadratic in res)."""
+compute-bound scaling (latency ~ linear in batch, quadratic in res).
+
+Also sweeps the serving engine's microbatch buckets {1, 2, 4, 8} and
+reports per-image decode ms per bucket — the measurable win of the
+DecodeBatcher in repro.serve.engine."""
 
 from __future__ import annotations
 
@@ -53,11 +57,32 @@ def run() -> Rows:
         rows.add(f"decode.cpu_tiny.b{b}.us", times[b], round(times[b], 0))
     rows.add("decode.cpu_scaling_b4_over_b1",
              derived=round(times[4] / times[1], 2))
+
+    # microbatching sweep over the engine's decode buckets: fixed per-batch
+    # overhead (dispatch, halo materialization, weight streaming) amortizes
+    # across the batch, so per-image ms should fall as the bucket grows
+    rng = np.random.default_rng(0)
+    per_image = {}
+    for b in (1, 2, 4, 8):
+        z = jnp.asarray(rng.standard_normal((b, 16, 16, 4)), jnp.float32)
+        vae.decode(z).block_until_ready()            # compile this bucket
+        samples = []
+        for _ in range(9):                           # median tames CPU noise
+            with Timer() as t:
+                vae.decode(z).block_until_ready()
+            samples.append(t.us)
+        per_image[b] = float(np.median(samples)) / b / 1e3
+        rows.add(f"decode.bucket.b{b}.per_image_ms",
+                 derived=round(per_image[b], 3))
+    rows.add("decode.bucket.b8_over_b1",
+             derived=round(per_image[8] / per_image[1], 3))
     return rows
 
 
 def main():
-    run().print()
+    rows = run()
+    rows.print()
+    print(f"# saved {rows.save_json('bench_decode')}")
 
 
 if __name__ == "__main__":

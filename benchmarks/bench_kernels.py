@@ -1,6 +1,7 @@
 """Kernel-layer microbenchmark: Pallas (interpret) vs jnp oracle
 correctness at bench shapes + the analytic HBM-traffic win of each fusion
-on the decode hot path (what the §Perf memory-term iteration claims)."""
+on the decode hot path.  Rows persist as JSON under artifacts/ (local,
+untracked) so a rerun on a later checkout can be diffed against them."""
 
 from __future__ import annotations
 
@@ -58,6 +59,30 @@ def run() -> Rows:
         rows.add(f"kernel.conv3x3.{hh}x{ww}x{cin}.vmem_mb",
                  derived=round(vmem, 1))
 
+    # fused gn+silu+conv3x3 (res-block hot path): correctness at decode
+    # shapes + the HBM round-trip of the normalized activation it removes
+    from repro.kernels.gn_silu_conv import gn_silu_conv3x3
+    for (n, hh, ww, cin, cout, g) in ((1, 16, 16, 64, 64, 8),
+                                      (2, 8, 8, 32, 64, 8),
+                                      (1, 32, 32, 64, 128, 8)):
+        x = jnp.asarray(rng.standard_normal((n, hh, ww, cin)), jnp.float32)
+        sc = jnp.asarray(rng.standard_normal(cin), jnp.float32)
+        bi = jnp.asarray(rng.standard_normal(cin), jnp.float32)
+        wt = jnp.asarray(rng.standard_normal((3, 3, cin, cout)) * 0.1,
+                         jnp.float32)
+        bc = jnp.asarray(rng.standard_normal(cout), jnp.float32)
+        with Timer() as t:
+            o = gn_silu_conv3x3(x, sc, bi, wt, bc, groups=g, rows=8,
+                                interpret=True)
+        err = float(jnp.abs(
+            o - ref.gn_silu_conv3x3_ref(x, sc, bi, wt, bc, groups=g)).max())
+        tag = f"kernel.gn_silu_conv.{n}x{hh}x{ww}x{cin}to{cout}"
+        rows.add(f"{tag}.max_err", t.us, f"{err:.1e}")
+        act = n * hh * ww * cin * 4
+        # unfused: gn+silu writes y, conv re-reads y -> 2 extra activation
+        # passes the fusion keeps in VMEM
+        rows.add(f"{tag}.traffic_saved_mb", derived=round(2 * act / 1e6, 2))
+
     # decode attention: streams the KV cache exactly once
     n, hq, hkv, S, d = 2, 8, 2, 512, 64
     q1 = jnp.asarray(rng.standard_normal((n, hq, d)), jnp.float32)
@@ -75,7 +100,9 @@ def run() -> Rows:
 
 
 def main():
-    run().print()
+    rows = run()
+    rows.print()
+    print(f"# saved {rows.save_json('bench_kernels')}")
 
 
 if __name__ == "__main__":

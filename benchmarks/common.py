@@ -1,7 +1,9 @@
-"""Shared benchmark plumbing: trace cache, CSV rows, scale control."""
+"""Shared benchmark plumbing: trace cache, CSV/JSON rows, scale control."""
 
 from __future__ import annotations
 
+import json
+import math
 import os
 import time
 from typing import Any, Dict, List, Optional
@@ -42,22 +44,39 @@ def bench_trace(name: str = "main") -> SyntheticTrace:
 
 
 class Rows:
-    """Collects ``name,us_per_call,derived`` CSV rows."""
+    """Collects ``name,us_per_call,derived`` rows; prints CSV and can
+    persist JSON under artifacts/ (untracked local scratch), so a run on
+    one checkout can be diffed against a rerun on another."""
 
     def __init__(self):
         self.rows: List[str] = []
+        self._records: List[Dict[str, Any]] = []
 
     def add(self, name: str, us_per_call: float = float("nan"),
             derived: Any = "") -> None:
         self.rows.append(f"{name},{us_per_call:.3f},{derived}")
+        self._records.append({
+            "name": name,
+            "us_per_call": None if math.isnan(us_per_call) else us_per_call,
+            "derived": derived})
 
     def extend(self, other: "Rows") -> None:
         self.rows.extend(other.rows)
+        self._records.extend(other._records)
 
     def print(self) -> None:
         print("name,us_per_call,derived")
         for r in self.rows:
             print(r)
+
+    def save_json(self, name: str) -> str:
+        """Write the rows as ``artifacts/<name>.json``; returns the path."""
+        os.makedirs(ART, exist_ok=True)
+        path = os.path.join(ART, f"{name}.json")
+        with open(path, "w") as f:
+            json.dump({"bench": name, "scale": SCALE,
+                       "rows": self._records}, f, indent=1, default=str)
+        return path
 
 
 class Timer:

@@ -1,7 +1,8 @@
 """END-TO-END DRIVER (deliverable b): serve a generated-image corpus with
 batched requests through the full LatentBox stack — consistent-hash router,
-dual-format cache, adaptive tuner, spillover — with REAL VAE decodes on
-the read path, replaying a synthetic production trace.
+dual-format cache, adaptive tuner, spillover — with REAL VAE decodes
+microbatched through the engine's bucketed DecodeBatcher, replaying a
+synthetic production trace in 8-request windows.
 
     PYTHONPATH=src python examples/serve_trace_replay.py
 """
@@ -11,6 +12,7 @@ import sys
 # the launcher is the production entry point; the example pins a scale
 sys.exit(subprocess.call(
     [sys.executable, "-m", "repro.launch.serve",
-     "--objects", "50", "--requests", "600", "--nodes", "2"],
+     "--objects", "50", "--requests", "600", "--nodes", "2",
+     "--batch", "8"],
     env={**__import__("os").environ,
          "PYTHONPATH": "src"}))

@@ -26,6 +26,31 @@ from jax.experimental import pallas as pl
 VMEM_BUDGET = 12 * 2 ** 20      # conservative VMEM budget per input block
 
 
+def band_rows(h: int, width: int, cin: int, itemsize: int,
+              rows: int) -> int:
+    """Largest halving of ``rows`` that divides ``h`` AND whose padded
+    input band fits the VMEM budget (shared by conv3x3 and the fused
+    GN+SiLU+conv kernel so the sizing policy can't drift)."""
+    rows = min(rows, h)
+    while rows > 1 and (h % rows
+                        or (rows + 2) * (width + 2) * cin * itemsize
+                        > VMEM_BUDGET):
+        rows //= 2
+    return rows
+
+
+def materialize_bands(x: jax.Array, rows: int) -> jax.Array:
+    """[N, H, W, C] -> flattened row bands with 1-pixel halo
+    [N * H/rows, rows+2, W+2, C] (the overlapping halo reads don't fit
+    disjoint BlockSpec tiling, so the bands are staged once in HBM)."""
+    n, h, width, cin = x.shape
+    nb = h // rows
+    xp = jnp.pad(x, ((0, 0), (1, 1), (1, 1), (0, 0)))
+    bands = jnp.stack([xp[:, i * rows:i * rows + rows + 2]
+                       for i in range(nb)], axis=1)
+    return bands.reshape(n * nb, rows + 2, width + 2, cin)
+
+
 def _conv_kernel(x_ref, w_ref, b_ref, o_ref, *, rows: int, width: int):
     x = x_ref[0]                                     # [rows+2, W+2, Cin]
     acc = jnp.zeros_like(o_ref[0], dtype=jnp.float32)  # [rows, W, tc]
@@ -50,22 +75,11 @@ def conv3x3(x: jax.Array, w: jax.Array, b: Optional[jax.Array] = None,
     if b is None:
         b = jnp.zeros((cout,), x.dtype)
 
-    rows = min(rows, h)
-    while h % rows:
-        rows //= 2
-    # shrink the band until the input block fits the VMEM budget
-    while rows > 1 and (rows + 2) * (width + 2) * cin * x.dtype.itemsize \
-            > VMEM_BUDGET:
-        rows //= 2
+    rows = band_rows(h, width, cin, x.dtype.itemsize, rows)
     tc = min(block_cout, cout)
     while cout % tc:
         tc //= 2
-
     nb = h // rows
-    xp = jnp.pad(x, ((0, 0), (1, 1), (1, 1), (0, 0)))
-    # materialize row bands with halo: [N, nb, rows+2, W+2, Cin]
-    bands = jnp.stack([xp[:, i * rows:i * rows + rows + 2] for i in range(nb)],
-                      axis=1)
 
     out = pl.pallas_call(
         functools.partial(_conv_kernel, rows=rows, width=width),
@@ -80,5 +94,5 @@ def conv3x3(x: jax.Array, w: jax.Array, b: Optional[jax.Array] = None,
                                lambda i, c: (i, 0, 0, c)),
         out_shape=jax.ShapeDtypeStruct((n * nb, rows, width, cout), x.dtype),
         interpret=interpret,
-    )(bands.reshape(n * nb, rows + 2, width + 2, cin), w, b)
+    )(materialize_bands(x, rows), w, b)
     return out.reshape(n, h, width, cout)

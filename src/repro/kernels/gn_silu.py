@@ -3,7 +3,9 @@
 The VAE decoder applies GN+SiLU before every conv — at 1024x1024 output the
 activations dominate HBM traffic, so fusing the normalize+affine+activation
 into one VMEM pass halves the memory term of the decode roofline vs
-unfused GN / SiLU (see EXPERIMENTS.md §Perf).
+unfused GN / SiLU (traffic rows in ``benchmarks/bench_kernels.py``; the
+decode path itself now goes one step further and fuses the trailing conv
+too — see :mod:`repro.kernels.gn_silu_conv`).
 
 Two-pass structure (stats must exist before scaling):
   pass 1  grid (N, T): per-spatial-tile partial sums -> (sum, sumsq) [N, G]

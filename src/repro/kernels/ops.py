@@ -53,6 +53,17 @@ def group_norm_silu(x, scale, bias, groups: int = 32, eps: float = 1e-6,
                                    interpret=impl == "pallas_interpret")
 
 
+def gn_silu_conv3x3(x, scale, bias, w, b=None, groups: int = 32,
+                    eps: float = 1e-6, impl: Optional[str] = None):
+    """Fused GroupNorm + SiLU + 3x3 SAME conv (the res-block hot path)."""
+    impl = _resolve(impl)
+    if impl == "xla":
+        return ref.gn_silu_conv3x3_ref(x, scale, bias, w, b, groups, eps)
+    from repro.kernels import gn_silu_conv as gsc
+    return gsc.gn_silu_conv3x3(x, scale, bias, w, b, groups=groups, eps=eps,
+                               interpret=impl == "pallas_interpret")
+
+
 def flash_attention(q, k, v, causal: bool = False, scale=None,
                     window: Optional[int] = None, impl: Optional[str] = None):
     impl = _resolve(impl)

@@ -24,6 +24,15 @@ def group_norm_silu_ref(x: jax.Array, scale: jax.Array, bias: jax.Array,
     return (xf * jax.nn.sigmoid(xf)).astype(x.dtype)
 
 
+def gn_silu_conv3x3_ref(x: jax.Array, scale: jax.Array, bias: jax.Array,
+                        w: jax.Array, b: Optional[jax.Array] = None,
+                        groups: int = 32, eps: float = 1e-6) -> jax.Array:
+    """``conv3x3(silu(group_norm(x)))`` — oracle for the fused res-block
+    kernel; composition of the two oracles keeps it bit-identical to the
+    unfused decode path."""
+    return conv3x3_ref(group_norm_silu_ref(x, scale, bias, groups, eps), w, b)
+
+
 def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
                         causal: bool = False,
                         scale: Optional[float] = None,

@@ -30,6 +30,9 @@ def main() -> None:
     ap.add_argument("--requests", type=int, default=800)
     ap.add_argument("--nodes", type=int, default=2)
     ap.add_argument("--res", type=int, default=32)
+    ap.add_argument("--batch", type=int, default=8,
+                    help="request window size fed to the microbatching "
+                         "decode scheduler (1 = sequential gets)")
     args = ap.parse_args()
 
     rng = np.random.default_rng(0)
@@ -63,15 +66,21 @@ def main() -> None:
         image_bytes=float(img_bytes), latent_bytes=float(np.mean(lat_bytes)))
 
     t0 = time.perf_counter()
-    for oid in ids:
-        eng.get(int(oid))
+    window = max(1, args.batch)
+    for start in range(0, len(ids), window):
+        eng.get_many([int(oid) for oid in ids[start:start + window]])
     dt = time.perf_counter() - t0
     s = eng.summary()
     print(f"[serve] {len(ids)} requests in {dt:.1f}s "
-          f"({1e3 * dt / len(ids):.1f} ms/req on CPU)")
+          f"({1e3 * dt / len(ids):.1f} ms/req on CPU, "
+          f"window={window})")
     print(f"[serve] image-hit {s['image_hit_frac']:.1%}, "
           f"decode fraction {s['decode_frac']:.1%}, "
           f"spilled {s['spilled']}, alpha per node {s['alpha']}")
+    batches = max(1, s['decode_batches'])
+    print(f"[serve] {s['decodes']} decodes in {s['decode_batches']} batches "
+          f"(mean batch {s['decodes'] / batches:.1f}, "
+          f"{s['coalesced_decodes']} coalesced in-flight)")
 
 
 if __name__ == "__main__":

@@ -1,31 +1,38 @@
 """Serving engine: LatentBox's routing/cache layer driving a real JAX
-decode fleet.
+decode fleet, with a microbatching decode scheduler on the miss path.
 
 This is the non-simulated end-to-end path (examples/serve_trace_replay.py):
 requests -> Router (coalescing, consistent hashing, spillover w/ pinning)
 -> per-node DualFormatCache -> on miss, the *real* VAE decode (jitted,
 batched) reconstructs pixels from compressed latents fetched from the
-LatentStore.  Wall-clock decode/fetch times feed the marginal-hit tuner's
-EWMAs, closing the paper's feedback loop on real measurements.
+LatentStore.
+
+Misses do not decode one-by-one: they accumulate in a ``DecodeBatcher``
+queue where duplicate in-flight object ids coalesce into a single decode
+(single-flight), then flush as batches padded up to a small set of
+bucketed batch sizes (default 1/2/4/8) so ``jax.jit`` compiles once per
+bucket instead of once per arrival pattern.  Per-image wall-clock
+(batch time / real images in the batch) feeds the marginal-hit tuner's
+EWMAs, closing the paper's feedback loop on real measurements.  Decode is
+deterministic per image, so bucketed batching (and its padding) returns
+bit-identical pixels to a batch-1 decode of the same latent.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.compression.latentcodec import compress_latent, decompress_latent
-from repro.core.dual_cache import (DualFormatCache, FULL_MISS, IMAGE_HIT,
-                                   LATENT_HIT)
+from repro.compression.latentcodec import decompress_latent
+from repro.core.dual_cache import DualFormatCache, IMAGE_HIT, LATENT_HIT
 from repro.core.latent_store import LatentStore
 from repro.core.router import Router
 from repro.core.tuner import MarginalHitTuner, TunerConfig
-from repro.vae.model import VAE, VAEConfig
+from repro.vae.model import VAE
 
 
 @dataclasses.dataclass
@@ -36,6 +43,7 @@ class EngineConfig:
     tau: float = 0.1
     promote_threshold: int = 4
     theta: int = 4
+    decode_buckets: Tuple[int, ...] = (1, 2, 4, 8)
     tuner: TunerConfig = dataclasses.field(
         default_factory=lambda: TunerConfig(window=500, step=0.02))
 
@@ -55,6 +63,113 @@ class _Node:
         self.queue_depth = 0
 
 
+def _node_index(name: str) -> int:
+    """Parse a ``node<idx>`` ring/router name into a fleet index."""
+    if not name.startswith("node"):
+        raise ValueError(f"malformed node name {name!r} (want 'node<idx>')")
+    try:
+        return int(name[4:])
+    except ValueError as e:
+        raise ValueError(
+            f"malformed node name {name!r} (want 'node<idx>')") from e
+
+
+class DecodeBatcher:
+    """Microbatching decode scheduler over one jitted VAE decode.
+
+    Pending misses queue up via :meth:`submit`; duplicate in-flight object
+    ids coalesce into one decode (single-flight).  :meth:`flush` drains the
+    queue in FIFO order as batches, each padded up to the smallest
+    configured bucket that fits so the jitted decode sees only
+    ``len(buckets)`` distinct batch shapes.  Padding repeats the last real
+    latent — the decode is per-image independent and deterministic, so
+    padded slots never perturb the real outputs.
+    """
+
+    def __init__(self, vae: VAE, buckets: Sequence[int] = (1, 2, 4, 8)):
+        if not buckets or any(b <= 0 for b in buckets):
+            raise ValueError(f"buckets must be positive: {buckets!r}")
+        self.vae = vae
+        self.buckets = tuple(sorted(set(int(b) for b in buckets)))
+        self.max_batch = self.buckets[-1]
+        # oid -> (latent z [h, w, c] float32, exec node) in arrival order
+        self._pending: Dict[int, Tuple[np.ndarray, Any]] = {}
+        self._warm: set = set()       # buckets whose decode shape is compiled
+        self.stats = {"decodes": 0, "batches": 0, "coalesced": 0,
+                      "padded_slots": 0}
+
+    def __len__(self) -> int:
+        return len(self._pending)
+
+    def clear(self) -> None:
+        """Drop everything pending (a window aborted mid-admission)."""
+        self._pending.clear()
+
+    def submit(self, oid: int, blob: bytes, node: Any) -> bool:
+        """Queue a decode for ``oid``; returns True if newly enqueued,
+        False if it coalesced with an in-flight decode of the same oid."""
+        if oid in self._pending:
+            self.stats["coalesced"] += 1
+            return False
+        # fixed decode dtype: determinism holds per (latent, stack) pair
+        z = np.asarray(decompress_latent(blob), np.float32)
+        self._pending[oid] = (z, node)
+        return True
+
+    def bucket_for(self, n: int) -> int:
+        """Smallest configured bucket >= n (n itself beyond the largest)."""
+        for b in self.buckets:
+            if b >= n:
+                return b
+        return n
+
+    def flush(self) -> Dict[int, np.ndarray]:
+        """Decode everything pending; returns oid -> image and feeds each
+        exec node's tuner the per-image wall clock of its batch."""
+        results: Dict[int, np.ndarray] = {}
+        items = list(self._pending.items())
+        self._pending.clear()
+        for start in range(0, len(items), self.max_batch):
+            chunk = items[start:start + self.max_batch]
+            results.update(self._decode_chunk(chunk))
+        return results
+
+    def _decode_chunk(self, chunk) -> Dict[int, np.ndarray]:
+        n_real = len(chunk)
+        bucket = self.bucket_for(n_real)
+        zs = [z for _, (z, _) in chunk]
+        zs.extend([zs[-1]] * (bucket - n_real))       # pad with the last real z
+        zb = jnp.stack(zs)
+        if bucket not in self._warm:
+            # compile this bucket's shape outside the timed region so jit
+            # compile time never poisons the tuner's decode EWMA
+            self.vae.decode(zb).block_until_ready()
+            self._warm.add(bucket)
+        t0 = time.perf_counter()
+        imgs = np.asarray(self.vae.decode(zb))
+        ms = (time.perf_counter() - t0) * 1e3
+        per_image_ms = ms / n_real
+        self.stats["batches"] += 1
+        self.stats["decodes"] += n_real
+        self.stats["padded_slots"] += bucket - n_real
+        out = {}
+        for i, (oid, (_, node)) in enumerate(chunk):
+            node.tuner.observe_decode_ms(per_image_ms)
+            out[oid] = imgs[i]
+        return out
+
+
+@dataclasses.dataclass
+class _Ticket:
+    """One request's routing decision, held across the batched decode."""
+    oid: int
+    outcome: str
+    owner: _Node
+    exec_node: Optional[_Node] = None
+    img: Optional[np.ndarray] = None          # set on image hit
+    write_image: bool = False                 # promote/pin decision at lookup
+
+
 class ServingEngine:
     """Single-process stand-in for the Ray fleet: N logical nodes share one
     device, but the cache/routing/tuning logic is the production code."""
@@ -69,66 +184,115 @@ class ServingEngine:
                       for i in range(self.cfg.n_nodes)]
         self.router = Router([f"node{i}" for i in range(self.cfg.n_nodes)],
                              theta=self.cfg.theta)
+        self.batcher = DecodeBatcher(vae, self.cfg.decode_buckets)
         self.stats = {"image_hit": 0, "latent_hit": 0, "full_miss": 0,
                       "spilled": 0}
 
-    def _decode(self, node: _Node, blob: bytes) -> Tuple[np.ndarray, float]:
-        t0 = time.perf_counter()
-        # fixed decode dtype: determinism holds per (latent, stack) pair
-        z = jnp.asarray(decompress_latent(blob), jnp.float32)[None]
-        img = np.asarray(self.vae.decode(z))[0]
-        ms = (time.perf_counter() - t0) * 1e3
-        node.tuner.observe_decode_ms(ms)
-        return img, ms
+    # -- request admission ---------------------------------------------------
 
-    def get(self, oid: int) -> Tuple[np.ndarray, str]:
+    def _lookup(self, oid: int) -> _Ticket:
+        """Route one request up to (but excluding) the decode: cache lookup,
+        spillover pick, latent fetch/admission, and decode enqueue."""
         owner_name = self.router.ring.owner(oid)
-        owner = self.nodes[int(owner_name[4:])]
+        owner = self.nodes[_node_index(owner_name)]
         res = owner.cache.lookup(oid)
         owner.tuner.on_request()
 
         if res.outcome == IMAGE_HIT:
             self.stats["image_hit"] += 1
-            return owner.images[oid], IMAGE_HIT
+            img = owner.images.get(oid)
+            if img is not None:
+                return _Ticket(oid, IMAGE_HIT, owner, img=img)
+            # admitted to the image tier, but the pixel payload is still
+            # in-flight in this window's batch: join the pending decode
+            # (single-flight) and write back on flush.
+            blob = owner.latents.get(oid) or self.store.get(oid)
+            if blob is None:
+                raise KeyError(f"object {oid} not in store")
+            if self.batcher.submit(oid, blob, owner):
+                owner.queue_depth += 1
+            return _Ticket(oid, IMAGE_HIT, owner, exec_node=owner,
+                           write_image=True)
 
         # pick the execution node (spillover with cache pinning)
         for n in self.nodes:
             self.router.report_depth(f"node{n.idx}", n.queue_depth)
         exec_node = owner
         if owner.queue_depth > self.cfg.theta:
-            cand = self.nodes[int(self.router.least_loaded(
-                exclude=owner_name)[4:])]
+            cand = self.nodes[_node_index(
+                self.router.least_loaded(exclude=owner_name))]
             if cand.queue_depth < owner.queue_depth:
                 exec_node = cand
                 self.stats["spilled"] += 1
 
-        exec_node.queue_depth += 1
-        try:
-            if res.outcome == LATENT_HIT:
-                self.stats["latent_hit"] += 1
-                blob = owner.latents[oid]
-                img, _ = self._decode(exec_node, blob)
-            else:
-                self.stats["full_miss"] += 1
-                t0 = time.perf_counter()
-                blob = self.store.get(oid)
-                if blob is None:
-                    raise KeyError(f"object {oid} not in store")
-                owner.tuner.observe_fetch_ms(
-                    (time.perf_counter() - t0) * 1e3
-                    + self.store.fetch_ms(oid, time.time()))
-                owner.cache.admit_latent(oid)
-                if oid in owner.cache.latent_tier:
-                    owner.latents[oid] = blob
-                img, _ = self._decode(exec_node, blob)
-        finally:
-            exec_node.queue_depth -= 1
+        if res.outcome == LATENT_HIT:
+            self.stats["latent_hit"] += 1
+            blob = owner.latents[oid]
+        else:
+            self.stats["full_miss"] += 1
+            t0 = time.perf_counter()
+            blob = self.store.get(oid)
+            if blob is None:
+                raise KeyError(f"object {oid} not in store")
+            owner.tuner.observe_fetch_ms(
+                (time.perf_counter() - t0) * 1e3
+                + self.store.fetch_ms(oid, time.time()))
+            owner.cache.admit_latent(oid)
+            if oid in owner.cache.latent_tier:
+                owner.latents[oid] = blob
 
-        # cache pinning: decoded result written back to the OWNER node
-        if res.promoted or owner.cache.contains(oid) == "image":
-            owner.images[oid] = img
-        self._gc(owner)
-        return img, res.outcome
+        if self.batcher.submit(oid, blob, exec_node):
+            exec_node.queue_depth += 1          # one slot per unique decode
+        return _Ticket(
+            oid, res.outcome, owner, exec_node=exec_node,
+            write_image=res.promoted or owner.cache.contains(oid) == "image")
+
+    # -- public API ----------------------------------------------------------
+
+    def get(self, oid: int) -> Tuple[np.ndarray, str]:
+        return self.get_many([oid])[0]
+
+    def get_many(self, oids: Sequence[int]
+                 ) -> List[Tuple[np.ndarray, str]]:
+        """Serve a window of requests with one batched decode flush.
+
+        Lookups/routing run in request order (cache state evolves exactly
+        as with sequential ``get`` calls); all resulting misses decode in
+        bucketed microbatches, then results write back to their hash
+        owners (cache pinning) in request order.
+        """
+        try:
+            tickets = [self._lookup(int(oid)) for oid in oids]
+        except Exception:
+            # a window aborted mid-admission (e.g. unknown oid) must not
+            # leak queued decodes or queue-depth into the next window
+            self.batcher.clear()
+            for n in self.nodes:
+                n.queue_depth = 0
+            raise
+        decoded = self._flush()
+        out: List[Tuple[np.ndarray, str]] = []
+        touched = {}
+        for t in tickets:
+            if t.img is not None:
+                out.append((t.img, t.outcome))
+                continue
+            img = decoded[t.oid]
+            # cache pinning: decoded result written back to the OWNER node
+            if t.write_image or t.owner.cache.contains(t.oid) == "image":
+                t.owner.images[t.oid] = img
+            touched[id(t.owner)] = t.owner
+            out.append((img, t.outcome))
+        for node in touched.values():
+            self._gc(node)
+        return out
+
+    def _flush(self) -> Dict[int, np.ndarray]:
+        try:
+            return self.batcher.flush()
+        finally:
+            for n in self.nodes:
+                n.queue_depth = 0               # all in-flight decodes drained
 
     def _gc(self, node: _Node) -> None:
         if len(node.images) > 2 * len(node.cache.image_tier) + 32:
@@ -149,4 +313,7 @@ class ServingEngine:
             out["decode_frac"] = (self.stats["latent_hit"]
                                   + self.stats["full_miss"]) / total
         out["alpha"] = [round(n.cache.alpha, 3) for n in self.nodes]
+        out["decode_batches"] = self.batcher.stats["batches"]
+        out["decodes"] = self.batcher.stats["decodes"]
+        out["coalesced_decodes"] = self.batcher.stats["coalesced"]
         return out

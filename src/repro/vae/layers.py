@@ -40,8 +40,18 @@ def dense_init(key, cin: int, cout: int, dtype=jnp.float32) -> Params:
 # ---------------------------------------------------------------------------
 
 def conv2d(x: jax.Array, p: Params, stride: int = 1,
-           padding: str | Tuple = "SAME") -> jax.Array:
-    """NHWC conv; channels-last keeps C on the 128-wide lane dimension."""
+           padding: str | Tuple = "SAME",
+           impl: Optional[str] = None) -> jax.Array:
+    """NHWC conv; channels-last keeps C on the 128-wide lane dimension.
+
+    Unstrided SAME 3x3 convs — every conv on the decode path except the
+    1x1 shortcut and the strided downsample — dispatch through
+    :func:`repro.kernels.ops.conv3x3` so the Pallas implicit-GEMM kernel
+    is live on the read path (the XLA impl is the identical lax conv).
+    """
+    if p["w"].shape[:2] == (3, 3) and stride == 1 and padding == "SAME":
+        from repro.kernels import ops                 # late import (no cycle)
+        return ops.conv3x3(x, p["w"], p["b"], impl=impl)
     y = jax.lax.conv_general_dilated(
         x, p["w"].astype(x.dtype), window_strides=(stride, stride),
         padding=padding, dimension_numbers=("NHWC", "HWIO", "NHWC"))
@@ -92,12 +102,23 @@ def resnet_block_init(key, cin: int, cout: int, dtype=jnp.float32) -> Params:
 
 def resnet_block(x: jax.Array, p: Params, groups: int = 32,
                  impl: Optional[str] = None) -> jax.Array:
-    h = gn_silu(x, p["norm1"], groups=groups, impl=impl)
-    h = conv2d(h, p["conv1"])
-    h = gn_silu(h, p["norm2"], groups=groups, impl=impl)
-    h = conv2d(h, p["conv2"])
+    """GN+SiLU+conv3x3 twice plus shortcut, via the fused kernel.
+
+    Each GN+SiLU+conv triple dispatches through
+    :func:`repro.kernels.ops.gn_silu_conv3x3`, keeping the normalized
+    activation in VMEM instead of round-tripping it through HBM between
+    the norm and the conv (the XLA impl composes the two oracles and is
+    bit-identical to the unfused path).  The 1x1 shortcut stays on XLA.
+    """
+    from repro.kernels import ops                     # late import (no cycle)
+    h = ops.gn_silu_conv3x3(x, p["norm1"]["scale"], p["norm1"]["bias"],
+                            p["conv1"]["w"], p["conv1"]["b"],
+                            groups=groups, impl=impl)
+    h = ops.gn_silu_conv3x3(h, p["norm2"]["scale"], p["norm2"]["bias"],
+                            p["conv2"]["w"], p["conv2"]["b"],
+                            groups=groups, impl=impl)
     if "shortcut" in p:
-        x = conv2d(x, p["shortcut"])
+        x = conv2d(x, p["shortcut"], impl=impl)
     return x + h
 
 
@@ -133,11 +154,12 @@ def upsample_init(key, c: int, dtype=jnp.float32) -> Params:
     return {"conv": conv_init(key, 3, 3, c, c, dtype)}
 
 
-def upsample(x: jax.Array, p: Params) -> jax.Array:
+def upsample(x: jax.Array, p: Params,
+             impl: Optional[str] = None) -> jax.Array:
     """Nearest-neighbor 2x + 3x3 conv (SD decoder upsampler)."""
     n, h, w, c = x.shape
     x = jnp.repeat(jnp.repeat(x, 2, axis=1), 2, axis=2)
-    return conv2d(x, p["conv"])
+    return conv2d(x, p["conv"], impl=impl)
 
 
 def downsample_init(key, c: int, dtype=jnp.float32) -> Params:

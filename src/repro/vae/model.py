@@ -122,7 +122,7 @@ def decode(params: Dict[str, Any], z: jax.Array, cfg: VAEConfig,
            impl: Optional[str] = None) -> jax.Array:
     """latent [N, h, w, C_lat] -> image [N, 8h, 8w, 3] in [-1, 1]."""
     z = z / cfg.scaling_factor + cfg.shift_factor
-    x = L.conv2d(z, params["conv_in"])
+    x = L.conv2d(z, params["conv_in"], impl=impl)
     x = L.resnet_block(x, params["mid"]["res1"], cfg.groups, impl)
     x = L.attn_block(x, params["mid"]["attn"], cfg.groups, impl)
     x = L.resnet_block(x, params["mid"]["res2"], cfg.groups, impl)
@@ -130,15 +130,15 @@ def decode(params: Dict[str, Any], z: jax.Array, cfg: VAEConfig,
         for blk in level["blocks"]:
             x = L.resnet_block(x, blk, cfg.groups, impl)
         if "upsample" in level:
-            x = L.upsample(x, level["upsample"])
+            x = L.upsample(x, level["upsample"], impl=impl)
     x = L.gn_silu(x, params["norm_out"], groups=cfg.groups, impl=impl)
-    return L.conv2d(x, params["conv_out"])
+    return L.conv2d(x, params["conv_out"], impl=impl)
 
 
 def encode(params: Dict[str, Any], x: jax.Array, cfg: VAEConfig,
            impl: Optional[str] = None) -> Tuple[jax.Array, jax.Array]:
     """image [N, H, W, 3] -> (mean, logvar) latents [N, H/8, W/8, C_lat]."""
-    h = L.conv2d(x, params["conv_in"])
+    h = L.conv2d(x, params["conv_in"], impl=impl)
     for level in params["down"]:
         for blk in level["blocks"]:
             h = L.resnet_block(h, blk, cfg.groups, impl)
@@ -148,7 +148,7 @@ def encode(params: Dict[str, Any], x: jax.Array, cfg: VAEConfig,
     h = L.attn_block(h, params["mid"]["attn"], cfg.groups, impl)
     h = L.resnet_block(h, params["mid"]["res2"], cfg.groups, impl)
     h = L.gn_silu(h, params["norm_out"], groups=cfg.groups, impl=impl)
-    moments = L.conv2d(h, params["conv_out"])
+    moments = L.conv2d(h, params["conv_out"], impl=impl)
     mean, logvar = jnp.split(moments, 2, axis=-1)
     mean = (mean - cfg.shift_factor) * cfg.scaling_factor
     return mean, logvar
@@ -162,14 +162,15 @@ class VAE:
     """Convenience wrapper bundling config + params + jitted entry points."""
 
     def __init__(self, cfg: VAEConfig = SD35_VAE, seed: int = 0,
-                 with_encoder: bool = True):
+                 with_encoder: bool = True, impl: Optional[str] = None):
         self.cfg = cfg
+        self.impl = impl          # None -> process default (ops.set_default_impl)
         key = jax.random.PRNGKey(seed)
         kd, ke = jax.random.split(key)
         self.decoder = init_decoder(kd, cfg)
         self.encoder = init_encoder(ke, cfg) if with_encoder else None
-        self._decode = jax.jit(lambda p, z: decode(p, z, cfg))
-        self._encode = jax.jit(lambda p, x: encode(p, x, cfg))
+        self._decode = jax.jit(lambda p, z: decode(p, z, cfg, impl))
+        self._encode = jax.jit(lambda p, x: encode(p, x, cfg, impl))
 
     def decode(self, z: jax.Array) -> jax.Array:
         return self._decode(self.decoder, z)

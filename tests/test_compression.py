@@ -3,6 +3,8 @@ lossy codec quality ordering, PSNR/SSIM metric properties."""
 
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")   # dev-only dep, see requirements-dev.txt
 from hypothesis import given, settings
 from hypothesis import strategies as st
 from hypothesis.extra import numpy as hnp

@@ -4,6 +4,8 @@ semantics, alpha resizing."""
 
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")   # dev-only dep, see requirements-dev.txt
 from hypothesis import given, settings
 from hypothesis import strategies as st
 

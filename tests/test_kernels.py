@@ -12,6 +12,7 @@ from repro.kernels.conv3x3 import conv3x3
 from repro.kernels.decode_attention import decode_attention
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.gn_silu import group_norm_silu
+from repro.kernels.gn_silu_conv import gn_silu_conv3x3
 from repro.kernels.rwkv6_scan import rwkv6_scan
 
 R = np.random.default_rng(0)
@@ -39,6 +40,68 @@ def test_gn_silu(shape, groups, dtype):
     np.testing.assert_allclose(np.asarray(out, np.float32),
                                np.asarray(want, np.float32),
                                atol=tol(dtype), rtol=tol(dtype))
+
+
+@pytest.mark.parametrize("n,h,w,cin,cout,groups", [
+    (1, 8, 8, 16, 32, 4), (2, 16, 12, 8, 8, 2), (1, 32, 32, 64, 128, 8),
+    (1, 5, 7, 4, 4, 2), (3, 4, 4, 32, 16, 8), (1, 16, 16, 64, 64, 32),
+])
+def test_gn_silu_conv3x3(n, h, w, cin, cout, groups):
+    """Fused GN+SiLU+conv3x3 (res-block hot path) vs composed oracles."""
+    x = arr((n, h, w, cin))
+    s = arr((cin,))
+    gb = arr((cin,))
+    wt = arr((3, 3, cin, cout), scale=0.1)
+    b = arr((cout,))
+    out = gn_silu_conv3x3(x, s, gb, wt, b, groups=groups, rows=8,
+                          interpret=True)
+    want = ref.gn_silu_conv3x3_ref(x, s, gb, wt, b, groups=groups)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=1e-4)
+
+
+def test_band_rows_divides_h_under_vmem_pressure():
+    """The VMEM halving must land on a divisor of h (e.g. h=18 would
+    otherwise shrink 18 -> 9 -> 4, and 4 does not divide 18)."""
+    from repro.kernels.conv3x3 import VMEM_BUDGET, band_rows
+    for h in (18, 24, 7, 5, 96):
+        for width, cin in ((1024, 384), (16, 8), (4096, 512)):
+            r = band_rows(h, width, cin, 4, 32)
+            assert h % r == 0
+            assert r == 1 or (r + 2) * (width + 2) * cin * 4 <= VMEM_BUDGET
+
+
+def test_conv3x3_non_power_of_two_height_vmem_fallback():
+    """End-to-end at a height whose halvings aren't all divisors."""
+    x = arr((1, 18, 12, 8))
+    wt = arr((3, 3, 8, 8), scale=0.1)
+    b = arr((8,))
+    out = conv3x3(x, wt, b, rows=32, interpret=True)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(ref.conv3x3_ref(x, wt, b)),
+                               atol=1e-4)
+
+
+def test_gn_silu_conv3x3_no_bias():
+    x = arr((1, 8, 8, 8))
+    s = arr((8,))
+    gb = arr((8,))
+    wt = arr((3, 3, 8, 8), scale=0.1)
+    out = gn_silu_conv3x3(x, s, gb, wt, groups=2, interpret=True)
+    want = ref.gn_silu_conv3x3_ref(x, s, gb, wt, groups=2)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=1e-4)
+
+
+def test_gn_silu_conv3x3_bf16():
+    x = arr((1, 8, 8, 32), jnp.bfloat16)
+    s = arr((32,), jnp.bfloat16)
+    gb = arr((32,), jnp.bfloat16)
+    wt = arr((3, 3, 32, 32), jnp.bfloat16, scale=0.1)
+    b = arr((32,), jnp.bfloat16)
+    out = gn_silu_conv3x3(x, s, gb, wt, b, groups=8, interpret=True)
+    want = ref.gn_silu_conv3x3_ref(x, s, gb, wt, b, groups=8)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=tol(jnp.bfloat16), rtol=tol(jnp.bfloat16))
 
 
 @pytest.mark.parametrize("n,hq,hkv,sq,skv,d,causal,window", [

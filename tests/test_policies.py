@@ -3,6 +3,8 @@ invariant Belady <= best-online (Fig. 4c's sanity condition)."""
 
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")   # dev-only dep, see requirements-dev.txt
 from hypothesis import given, settings
 from hypothesis import strategies as st
 
