@@ -35,8 +35,6 @@ def run() -> Rows:
 
     def replay(demote_age_mo: float):
         store = RegenTierStore(pol)
-        # force the sweep age (tradeoff curve, not the econ break-even)
-        store.run_demotion_age = demote_age_mo
         seen = set()
         regen_hits = 0
         next_sweep = demote_age_mo
@@ -51,10 +49,9 @@ def run() -> Rows:
                 regen_hits += 1
                 store.readmit(oid, LAT_B, now)
             if now >= next_sweep:
-                victims = [o for o, t0 in store._last_access_mo.items()
-                           if o in store._latents and now - t0 > demote_age_mo]
-                for o in victims:
-                    del store._latents[o]
+                # sweep at the forced age (tradeoff curve, not the econ
+                # break-even the policy would pick on its own)
+                store.run_demotion(now, age_override_mo=demote_age_mo)
                 next_sweep += max(demote_age_mo / 2, 0.25)
         return store, regen_hits, len(seen)
 

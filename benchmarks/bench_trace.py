@@ -1,20 +1,69 @@
-"""Paper Fig. 4 — workload characterization of the CompanyX-like trace.
+"""Paper Fig. 4 — workload characterization of the CompanyX-like trace,
+plus an end-to-end replay of a trace slice through the ``LatentBox``
+facade (simulator backend).
 
 (a) popularity skew (top-1%/top-10% view shares, Zipf tail),
 (b) post-birth decay (rate ratio day-1 vs day-90+ by popularity quartile),
 (c) miss-ratio curves for LRU / S3-FIFO / Belady at 0.1%-10% cache sizes,
-(d) re-access interval CDF points (1 h / 1 d / >30 d).
+(d) re-access interval CDF points (1 h / 1 d / >30 d),
+(e) hit-class composition of the facade tier-walk on the trace head.
 
 Paper reference points: top1=39%, top10=71%, <10 views=69%, once=15%;
 re-access 38% <1 h, 68% <1 d, 6% >30 d; S3-FIFO ~12% misses at 10%.
+
+``--smoke`` runs only the facade replay at toy scale (CI exercises the
+put -> tier-walk -> get_many path end-to-end on every push).
 """
 
 from __future__ import annotations
+
+import argparse
 
 import numpy as np
 
 from benchmarks.common import Rows, Timer, bench_trace, scale
 from repro.core.policies import BeladyCache, LRUCache, S3FIFOCache, miss_ratio
+from repro.store import (FULL_MISS, IMAGE_HIT, LATENT_HIT, REGEN_MISS,
+                         LatentBox, StoreConfig)
+from repro.trace.synth import TraceConfig, generate_trace
+
+
+def facade_replay(ids: np.ndarray, timestamps_ms: np.ndarray,
+                  n_nodes: int = 3, cache_frac: float = 0.05):
+    """Replay a trace slice through the LatentBox facade only; returns
+    ``(rows, summary)``."""
+    rows = Rows()
+    wss = int(len(np.unique(ids)))
+    box = LatentBox.simulated(StoreConfig(
+        n_nodes=n_nodes,
+        cache_bytes_per_node=max(wss * 1.4e6 * cache_frac / n_nodes, 2e6),
+        image_bytes=1.4e6, latent_bytes=0.28e6))
+    for oid in np.unique(ids):
+        box.put(int(oid))
+    with Timer() as t:
+        box.get_many([int(i) for i in ids],
+                     timestamps_ms=timestamps_ms.tolist())
+    s = box.summary()
+    total = max(s["total"], 1)
+    for cls in (IMAGE_HIT, LATENT_HIT, FULL_MISS, REGEN_MISS):
+        rows.add(f"facade.{cls}_frac", t.us / total,
+                 round(s[cls] / total, 4))
+    rows.add("facade.p95_ms", derived=round(s.get("p95_ms", 0.0), 2))
+    return rows, s
+
+
+def smoke() -> Rows:
+    """CI-sized end-to-end pass over the facade (seconds, not minutes)."""
+    tr = generate_trace(TraceConfig(n_objects=300, n_requests=4_000,
+                                    span_days=3, seed=11))
+    ids = tr.object_ids[:2_000]
+    ts = tr.timestamps[:2_000] * 1e3
+    rows, s = facade_replay(ids, ts, n_nodes=2, cache_frac=0.05)
+    hits = sum(s[cls] for cls in
+               (IMAGE_HIT, LATENT_HIT, FULL_MISS, REGEN_MISS))
+    assert s["total"] == len(ids) and hits == s["total"], \
+        "hit classes must partition requests"
+    return rows
 
 
 def run() -> Rows:
@@ -53,11 +102,19 @@ def run() -> Rows:
             with Timer() as t:
                 mr = miss_ratio(pol, ids)
             rows.add(f"mrc.{name}.{frac:g}", t.us / len(ids), round(mr, 4))
+
+    # (e) the facade's tier walk on the trace head
+    n = scale(100_000, 400_000)
+    rows.extend(facade_replay(tr.object_ids[:n], tr.timestamps[:n] * 1e3)[0])
     return rows
 
 
 def main():
-    run().print()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="facade-only end-to-end pass at CI scale")
+    args = ap.parse_args()
+    (smoke() if args.smoke else run()).print()
 
 
 if __name__ == "__main__":

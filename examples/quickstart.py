@@ -1,44 +1,48 @@
-"""Quickstart: the latent-first storage idea in 40 lines.
+"""Quickstart: the latent-first storage idea through the LatentBox API.
 
     PYTHONPATH=src python examples/quickstart.py
 
-Generates an image latent with the VAE encoder, compresses it losslessly
-(pcodec-analogue), stores it, fetches + decodes on demand, and verifies
-the decode is deterministic and the storage footprint ~5x smaller.
+One facade, four durability classes.  ``put`` encodes an image into a
+compressed latent (the only durable bytes); ``get`` walks
+pixel cache -> latent cache -> durable store -> recipe regeneration and
+reports which class answered plus the latency breakdown; ``demote`` drops
+the latent down to recipe-only storage, and the next read regenerates it
+bit-exactly.
 """
 import numpy as np
-import jax.numpy as jnp
 
-from repro.compression.latentcodec import compress_latent, decompress_latent
-from repro.compression.png_proxy import png_like_size
-from repro.core.latent_store import LatentStore
-from repro.vae.model import VAE, VAEConfig
+from repro.core.regen_tier import Recipe, synthesize_image
+from repro.store import LatentBox, StoreConfig
 
-rng = np.random.default_rng(0)
-vae = VAE(VAEConfig(name="demo", latent_channels=4,
-                    block_out_channels=(16, 32), layers_per_block=1,
-                    groups=4), seed=0)
+box = LatentBox.engine(config=StoreConfig(
+    n_nodes=2, cache_bytes_per_node=2e5, image_bytes=12e3, latent_bytes=1e3))
 
-# 1. "generate" an image and encode it into a latent (model-native state)
-img = jnp.asarray(rng.standard_normal((1, 64, 64, 3)) * 0.3, jnp.float32)
-latent = np.asarray(vae.encode_mean(img)).astype(np.float16)
+# 1. "generate" an image (seeded recipe = reproducibility contract) and
+#    persist it latent-first: encode -> lossless compress -> durable store
+recipe = Recipe(seed=0, height=64, width=64, scale=0.3)
+img = synthesize_image(recipe)
+put = box.put(42, image=img, recipe=recipe, meta={"model": recipe.model})
+print(f"raw pixels     : {img.nbytes:6d} B")
+print(f"stored latent  : {put.stored_bytes:6.0f} B  (the only durable bytes)")
+print(f"recipe         : {put.recipe_bytes:6.0f} B  (coldest durability class)")
 
-# 2. latent-first persistence: compress + put in the durable store
-blob = compress_latent(latent)
-store = LatentStore()
-store.put(42, blob)
-img_u8 = np.clip((np.asarray(img)[0] + 1) * 127.5, 0, 255).astype(np.uint8)
-print(f"PNG-class size : {png_like_size(img_u8):6d} B")
-print(f"raw latent     : {latent.nbytes:6d} B")
-print(f"stored latent  : {len(blob):6d} B  (the only durable bytes)")
-
-# 3. read path: fetch -> decompress (bit-exact) -> GPU/TPU decode
-fetched = decompress_latent(store.get(42))
-assert np.array_equal(latent, fetched), "lossless storage"
-decoded = vae.decode(jnp.asarray(fetched, jnp.float32))
-decoded2 = vae.decode(jnp.asarray(fetched, jnp.float32))
-assert np.array_equal(np.asarray(decoded), np.asarray(decoded2)), \
+# 2. read path: durable fetch -> decompress (bit-exact) -> jitted decode
+r1 = box.get(42)
+print(f"get #1         : {r1.hit_class:11s} decode {tuple(r1.payload.shape)} "
+      f"({r1.latency_ms['fetch']:.1f} ms fetch + "
+      f"{r1.latency_ms['decode']:.1f} ms decode)")
+r2 = box.get(42)
+assert np.array_equal(r1.payload, r2.payload), \
     "decode is deterministic: same latent -> bit-identical pixels"
-print(f"decoded image  : {tuple(decoded.shape)} finite="
-      f"{bool(jnp.isfinite(decoded).all())}")
+print(f"get #2         : {r2.hit_class:11s} (served from cache, same bits)")
+
+# 3. durability-class demotion: drop the latent, keep the recipe; the next
+#    cold read regenerates the latent bit-exactly and re-admits it
+box.demote(42)
+r3 = box.get(42)
+assert r3.regenerated and np.array_equal(r1.payload, r3.payload), \
+    "recipe regenerates the exact same object"
+print(f"get #3 (demoted): {r3.hit_class:10s} regenerated bit-exactly")
+
+print(f"stat           : {box.stat(42).residency}")
 print("latent-first roundtrip OK")

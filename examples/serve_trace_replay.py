@@ -1,8 +1,10 @@
 """END-TO-END DRIVER (deliverable b): serve a generated-image corpus with
-batched requests through the full LatentBox stack — consistent-hash router,
-dual-format cache, adaptive tuner, spillover — with REAL VAE decodes
-microbatched through the engine's bucketed DecodeBatcher, replaying a
-synthetic production trace in 8-request windows.
+batched requests through the ``LatentBox`` facade's engine backend —
+consistent-hash router, dual-format cache, adaptive tuner, spillover —
+with REAL VAE decodes microbatched through the engine's bucketed
+DecodeBatcher, replaying a synthetic production trace in 8-request windows
+(the launcher it calls, ``repro.launch.serve``, goes through the facade
+only: ``put`` for corpus ingest, windowed ``get_many`` for serving).
 
     PYTHONPATH=src python examples/serve_trace_replay.py
 """

@@ -7,11 +7,16 @@ from repro.core.dual_cache import (DualFormatCache, LookupResult, SegmentedLRU,
 from repro.core.tuner import MarginalHitTuner, TunerConfig, TunerRecord
 from repro.core.router import ConsistentHashRing, Router
 from repro.core.latent_store import LatentStore, StoreLatencyModel
-from repro.core.cluster import ClusterConfig, ClusterSim, replay_cluster
+from repro.core.cluster import (ClusterConfig, ClusterSim, GpuQueue,
+                                replay_cluster)
+from repro.core.regen_tier import (Recipe, RegenPolicy, RegenTierStore,
+                                   synthesize_image)
 from repro.core.replay import ReplayConfig, ReplayResult, replay, sweep_static_alpha
 from repro.core import cost_model, metrics, policies
 
 __all__ = [
+    "Recipe", "RegenPolicy", "RegenTierStore", "synthesize_image",
+    "GpuQueue",
     "DualFormatCache", "LookupResult", "SegmentedLRU", "WindowStats",
     "IMAGE_HIT", "LATENT_HIT", "FULL_MISS",
     "MarginalHitTuner", "TunerConfig", "TunerRecord",

@@ -1,4 +1,5 @@
-"""Discrete-event simulator of a LatentBox serving cluster (paper §4/§6).
+"""Discrete-event simulator of a LatentBox serving cluster (paper §4/§6) —
+the latency plant behind the SIMULATOR backend of the ``LatentBox`` API.
 
 The paper's prototype runs Ray actors over real GPUs + S3.  This container
 has neither, so the *latency-bearing* plant (GPU queues, store fetches,
@@ -8,7 +9,16 @@ real JAX/Pallas layers: the default ``decode_ms`` is cross-checked against
 the decoder's TPU roofline estimate (see ``benchmarks/bench_decode.py``),
 and per-object sizes can be fed from the real codec.
 
-One simulator covers every evaluated configuration of §6.1 via ``mode``:
+Since the store refactor the repo has exactly one tier-walk read path
+(:mod:`repro.store.walk`) with two backends of the same facade:
+``serve/engine.py`` supplies real jitted decodes, while this module
+supplies the plant — :class:`GpuQueue` and
+:class:`~repro.core.latent_store.StoreLatencyModel` are consumed by
+:class:`repro.store.backends.SimBackend` so the simulated ``LatentBox``
+and the classic event loop below share one queueing model.
+:class:`ClusterSim` itself remains the multi-configuration harness for the
+paper's §6.1 baselines, which need modes the object-store API doesn't
+expose:
 
   ``generation``  full SD pipeline on miss (upper-bound reference)
   ``decode_all``  no cache; every request fetches latent + decodes
@@ -67,6 +77,56 @@ class ClusterConfig:
     seed: int = 0
 
 
+class GpuQueue:
+    """Per-node fleet of GPU FIFO queues (the decode plant).
+
+    Two consumption styles share the same state:
+
+    * event-driven (:class:`ClusterSim`): ``start`` schedules on the
+      least-loaded GPU, ``finish`` releases it when the DEC_DONE event
+      fires;
+    * sequential replay (:class:`repro.store.backends.SimBackend`):
+      ``release(now)`` retires every decode that completed before ``now``
+      as the replay clock advances.
+    """
+
+    def __init__(self, n_gpus: int):
+        if n_gpus <= 0:
+            raise ValueError("need at least one GPU per node")
+        self.free_at = [0.0] * n_gpus
+        self._done: List[List[float]] = [[] for _ in range(n_gpus)]
+
+    @property
+    def outstanding(self) -> List[int]:
+        return [len(d) for d in self._done]
+
+    def depth(self) -> int:
+        """Queue depth reported to the router: the least-loaded GPU's."""
+        return min(self.outstanding)
+
+    def pick(self) -> int:
+        return int(np.argmin(self.outstanding))
+
+    def start(self, t: float, duration: float) -> Tuple[int, float]:
+        """Enqueue a decode at time ``t``; returns ``(gpu, start_time)``."""
+        g = self.pick()
+        start = max(t, self.free_at[g])
+        self.free_at[g] = start + duration
+        self._done[g].append(start + duration)
+        return g, start
+
+    def finish(self, gpu: int) -> None:
+        """Event-driven release: one decode on ``gpu`` completed."""
+        if self._done[gpu]:
+            self._done[gpu].pop(0)
+
+    def release(self, now: float) -> None:
+        """Sequential release: retire everything completed by ``now``."""
+        for d in self._done:
+            while d and d[0] <= now:
+                d.pop(0)
+
+
 class _Node:
     """One GPU node: dual-format (or LRU) cache + per-GPU FIFO queues."""
 
@@ -90,15 +150,11 @@ class _Node:
         self.tuner: Optional[MarginalHitTuner] = None
         if self.cache is not None and cfg.adaptive:
             self.tuner = MarginalHitTuner(self.cache, cfg.tuner)
-        self.gpu_free_at = [0.0] * cfg.gpus_per_node
-        self.gpu_outstanding = [0] * cfg.gpus_per_node
+        self.gpus = GpuQueue(cfg.gpus_per_node)
 
     # queue depth the node reports to the router: depth of its least-loaded GPU
     def reported_depth(self) -> int:
-        return min(self.gpu_outstanding)
-
-    def pick_gpu(self) -> int:
-        return int(np.argmin(self.gpu_outstanding))
+        return self.gpus.depth()
 
 
 class ClusterSim:
@@ -238,11 +294,8 @@ class ClusterSim:
     def _schedule_decode(self, t: float, oid: int, owner: _Node,
                          exec_node: _Node, events: list, arrival: float,
                          fetch_ms: float, spilled: bool) -> None:
-        g = exec_node.pick_gpu()
-        start = max(t, exec_node.gpu_free_at[g])
         dec = self._decode_time()
-        exec_node.gpu_free_at[g] = start + dec
-        exec_node.gpu_outstanding[g] += 1
+        g, start = exec_node.gpus.start(t, dec)
         queue_ms = start - t
         heapq.heappush(events, (start + dec, next(self._seq), DEC_DONE,
                                 (oid, owner.idx, exec_node.idx, g, arrival,
@@ -254,7 +307,7 @@ class ClusterSim:
                         spilled: bool) -> None:
         cfg = self.cfg
         exec_node = self.nodes[exec_idx]
-        exec_node.gpu_outstanding[gpu] -= 1
+        exec_node.gpus.finish(gpu)
         owner = self.nodes[owner_idx]
         if owner.tuner is not None:
             owner.tuner.observe_decode_ms(dec_ms + queue_ms)

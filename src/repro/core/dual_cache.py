@@ -320,6 +320,14 @@ class DualFormatCache:
         self._latent_hits.pop(oid, None)
         self.image_tier.insert(oid, self.image_size_fn(oid))
 
+    def evict(self, oid: int) -> bool:
+        """Explicitly drop ``oid`` from whichever tier holds it (promotion
+        counter included).  Returns True if the object was resident."""
+        found = self.image_tier.remove(oid)
+        found = self.latent_tier.remove(oid) or found
+        self._latent_hits.pop(oid, None)
+        return found
+
     # -- bookkeeping ----------------------------------------------------------
     def contains(self, oid: int) -> Optional[str]:
         if oid in self.image_tier:

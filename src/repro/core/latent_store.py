@@ -36,6 +36,7 @@ class LatentStore:
     def __init__(self, latency: Optional[StoreLatencyModel] = None,
                  seed: int = 0):
         self.latency = latency or StoreLatencyModel()
+        self._seed = int(seed)
         self._rng = np.random.default_rng(seed)
         self._blobs: Dict[int, bytes] = {}
         self._sizes: Dict[int, float] = {}
@@ -65,14 +66,48 @@ class LatentStore:
     def __contains__(self, oid: int) -> bool:
         return oid in self._sizes or oid in self._blobs
 
+    # -- lifecycle ---------------------------------------------------------------
+    def delete(self, oid: int) -> bool:
+        """Remove an object's durable payload AND size record (presence is
+        ``size or blob``, so a demoted object must lose both to read as
+        absent).  Clears ``_last_fetch_s`` too, so a re-created object
+        starts cold instead of inheriting warmth from a deleted namesake."""
+        found = oid in self
+        self._blobs.pop(oid, None)
+        self._sizes.pop(oid, None)
+        self._last_fetch_s.pop(oid, None)
+        return found
+
+    def stat(self, oid: int) -> Optional[Dict[str, float]]:
+        """Non-mutating metadata probe: never samples the latency RNG and
+        never warms the object (unlike :meth:`fetch_ms`)."""
+        if oid not in self:
+            return None
+        return {
+            "nbytes": self.size_of(oid),
+            "has_payload": oid in self._blobs,
+            "last_fetch_s": self._last_fetch_s.get(oid, float("-inf")),
+        }
+
     # -- modeled fetch ----------------------------------------------------------
     def fetch_ms(self, oid: int, now_s: float,
-                 nbytes: Optional[float] = None) -> float:
-        """Sample a fetch latency and record the access (warming the object)."""
+                 nbytes: Optional[float] = None,
+                 seq: Optional[int] = None) -> float:
+        """Sample a fetch latency and record the access (warming the object).
+
+        With the default ``seq=None`` samples come from one shared RNG
+        stream, so the latency an individual request sees depends on global
+        request ordering.  Passing a per-call ``seq`` (e.g. the request's
+        trace index) draws from an independent stream keyed on
+        ``(store seed, oid, seq)`` instead, making each request's sample
+        reproducible under request reordering.
+        """
         m = self.latency
         warm = (now_s - self._last_fetch_s.get(oid, -np.inf)) <= m.warm_window_s
         median = m.warm_ms if warm else m.cold_ms
-        base = float(self._rng.lognormal(np.log(median), m.sigma))
+        rng = self._rng if seq is None else np.random.default_rng(
+            (self._seed, int(oid) & 0xFFFFFFFF, int(seq)))
+        base = float(rng.lognormal(np.log(median), m.sigma))
         base = max(base, m.first_byte_floor_ms)
         size = self.size_of(oid) if nbytes is None else float(nbytes)
         transfer = size / (m.bandwidth_mb_s * 1e6) * 1e3

@@ -7,7 +7,8 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
-OUTCOME_CODES = {"image_hit": 0, "latent_hit": 1, "full_miss": 2}
+OUTCOME_CODES = {"image_hit": 0, "latent_hit": 1, "full_miss": 2,
+                 "regen_miss": 3}          # recipe-only object regenerated
 OUTCOME_NAMES = {v: k for k, v in OUTCOME_CODES.items()}
 
 

@@ -31,6 +31,41 @@ import numpy as np
 
 
 @dataclasses.dataclass(frozen=True)
+class Recipe:
+    """The few hundred bytes that regenerate an object bit-exactly on the
+    same stack: generation seed + output geometry + model/version pin.
+
+    In production this is (prompt, sampler seed, model id); this repo's
+    stand-in "diffusion" is a seeded Gaussian draw, so the recipe is exactly
+    the reproducibility contract — same recipe, same image, same latent.
+    """
+
+    seed: int
+    height: int
+    width: int
+    channels: int = 3
+    scale: float = 1.0             # amplitude of the stand-in generator
+    model: str = "demo"
+    prompt: str = ""
+
+    @property
+    def nbytes(self) -> int:
+        return 4 * 8 + len(self.model.encode()) + len(self.prompt.encode())
+
+
+def synthesize_image(recipe: Recipe) -> np.ndarray:
+    """Deterministic stand-in for the diffusion pipeline: recipe -> pixels.
+
+    Returns ``[1, H, W, C]`` float32.  Same recipe => bit-identical pixels,
+    which is what makes recipe-only storage a durability class at all.
+    """
+    rng = np.random.default_rng(recipe.seed)
+    img = rng.standard_normal(
+        (1, recipe.height, recipe.width, recipe.channels)) * recipe.scale
+    return img.astype(np.float32)
+
+
+@dataclasses.dataclass(frozen=True)
 class RegenPolicy:
     s_lat_mb: float = 0.29
     p_s3_gb_mo: float = 0.023
@@ -74,13 +109,43 @@ class RegenTierStore:
         self.policy = policy or RegenPolicy()
         self._latents: Dict[int, float] = {}     # oid -> bytes
         self._recipes: Dict[int, float] = {}
+        self._recipe_payloads: Dict[int, Recipe] = {}
         self._last_access_mo: Dict[int, float] = {}
         self.n_regens = 0
 
-    def put(self, oid: int, latent_bytes: float, now_mo: float = 0.0) -> None:
+    def put(self, oid: int, latent_bytes: float, now_mo: float = 0.0,
+            recipe: Optional[Recipe] = None) -> None:
         self._latents[oid] = latent_bytes
-        self._recipes[oid] = self.policy.recipe_bytes
+        self._recipes[oid] = (float(recipe.nbytes) if recipe is not None
+                              else self.policy.recipe_bytes)
+        if recipe is not None:
+            self._recipe_payloads[oid] = recipe
         self._last_access_mo[oid] = now_mo
+
+    def recipe_of(self, oid: int) -> Optional[Recipe]:
+        return self._recipe_payloads.get(oid)
+
+    def __contains__(self, oid: int) -> bool:
+        return oid in self._recipes
+
+    def is_demoted(self, oid: int) -> bool:
+        return oid in self._recipes and oid not in self._latents
+
+    def demote(self, oid: int) -> bool:
+        """Demote one object to recipe-only storage; True if a latent was
+        actually dropped (False: already demoted / unknown)."""
+        if oid not in self._latents or oid not in self._recipes:
+            return False
+        del self._latents[oid]
+        return True
+
+    def delete(self, oid: int) -> bool:
+        found = oid in self._recipes or oid in self._latents
+        self._latents.pop(oid, None)
+        self._recipes.pop(oid, None)
+        self._recipe_payloads.pop(oid, None)
+        self._last_access_mo.pop(oid, None)
+        return found
 
     def fetch(self, oid: int, now_mo: float) -> Tuple[float, bool]:
         """Returns (bytes_to_transfer, needs_regen)."""
@@ -98,9 +163,12 @@ class RegenTierStore:
         self._latents[oid] = latent_bytes
         self._last_access_mo[oid] = now_mo
 
-    def run_demotion(self, now_mo: float) -> int:
-        """Demote every latent idle past the break-even age."""
-        cutoff = self.policy.demotion_age_months()
+    def run_demotion(self, now_mo: float,
+                     age_override_mo: Optional[float] = None) -> int:
+        """Demote every latent idle past the break-even age (or an explicit
+        sweep age, for tradeoff curves off the economic break-even)."""
+        cutoff = (self.policy.demotion_age_months()
+                  if age_override_mo is None else float(age_override_mo))
         victims = [oid for oid, t in self._last_access_mo.items()
                    if oid in self._latents and now_mo - t > cutoff]
         for oid in victims:

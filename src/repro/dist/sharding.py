@@ -1,0 +1,141 @@
+"""In-model sharding constraints (minimal subset).
+
+The model code (``models/lm.py``, ``models/blocks.py``, ``models/encdec.py``)
+pins residual-stream and attention layouts through a process-global
+"constraint mesh": ``None`` (the default, and the only configuration a
+1-device container ever uses) turns every constraint into the identity, so
+single-host tests and examples run unchanged, while a launcher that builds a
+real mesh calls :func:`set_constraint_mesh` once and every ``constrain``
+call lowers to ``jax.lax.with_sharding_constraint``.
+
+Axis names that are absent from the mesh (or have extent 1) are dropped to
+``None`` in the spec, so the same model code runs under data-only,
+model-only, or 2D meshes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_CONSTRAINT_MESH: Optional[Mesh] = None
+
+
+def set_constraint_mesh(mesh: Optional[Mesh]) -> Optional[Mesh]:
+    """Install (or clear, with ``None``) the process-global constraint mesh."""
+    global _CONSTRAINT_MESH
+    _CONSTRAINT_MESH = mesh
+    return mesh
+
+
+def get_constraint_mesh() -> Optional[Mesh]:
+    return _CONSTRAINT_MESH
+
+
+def _resolve_axis(mesh: Mesh, axis) -> Optional[str]:
+    if axis is None:
+        return None
+    if axis in mesh.axis_names and mesh.shape[axis] > 1:
+        return axis
+    return None
+
+
+def constrain(x: jax.Array, *axes) -> jax.Array:
+    """Constrain ``x`` to ``PartitionSpec(*axes)`` on the global mesh.
+
+    Identity when no mesh is installed.  ``axes`` must have one entry per
+    dimension of ``x``; entries naming axes the mesh doesn't have collapse
+    to replication instead of erroring.
+    """
+    mesh = _CONSTRAINT_MESH
+    if mesh is None:
+        return x
+    if len(axes) != x.ndim:
+        raise ValueError(
+            f"constrain: got {len(axes)} axes for rank-{x.ndim} array")
+    spec = P(*[_resolve_axis(mesh, a) for a in axes])
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+# ---------------------------------------------------------------------------
+# PartitionSpec plumbing for launchers (ZeRO-1 moments, multi-pod retarget)
+# ---------------------------------------------------------------------------
+
+
+def _spec_entries(spec: P):
+    return tuple(spec)
+
+
+def _mentions(entry, axis: str) -> bool:
+    if entry is None:
+        return False
+    if isinstance(entry, (tuple, list)):
+        return axis in entry
+    return entry == axis
+
+
+def _zero1_leaf(spec: P) -> P:
+    """Shard an optimizer-moment leaf over the data axis for ZeRO-1.
+
+    Leaves whose parameter spec already carries ``data`` (FSDP leaves) are
+    left untouched — double-sharding them over data would over-partition.
+    Otherwise the first replicated dim picks up the data axis; fully
+    sharded leaves stay as-is.
+    """
+    entries = list(_spec_entries(spec))
+    if any(_mentions(e, "data") for e in entries):
+        return spec
+    for i, e in enumerate(entries):
+        if e is None:
+            entries[i] = "data"
+            return P(*entries)
+    return spec
+
+
+@dataclasses.dataclass(frozen=True)
+class OptStatePSpecs:
+    """PartitionSpecs for AdamW-style (m, v) moment trees."""
+
+    m: Any
+    v: Any
+
+
+def opt_state_pspecs(param_pspecs, zero1: bool = False) -> OptStatePSpecs:
+    """Moment specs from parameter specs; ``zero1`` shards replicated
+    moments over the data axis (optimizer-state partitioning)."""
+    leaf = _zero1_leaf if zero1 else (lambda s: s)
+    is_p = lambda x: isinstance(x, P)  # noqa: E731
+    m = jax.tree.map(leaf, param_pspecs, is_leaf=is_p)
+    v = jax.tree.map(leaf, param_pspecs, is_leaf=is_p)
+    return OptStatePSpecs(m=m, v=v)
+
+
+def dp_axes(mesh: Mesh):
+    """Every mesh axis that carries the batch (all but ``model``)."""
+    axes = tuple(a for a in mesh.axis_names if a != "model")
+    return axes if len(axes) != 1 else axes[0]
+
+
+def retarget_pspec(spec: P, mesh: Mesh) -> P:
+    """Rewrite a (data, model)-world spec for ``mesh``: every ``data``
+    entry expands to the mesh's full set of data-parallel axes (e.g.
+    ``("pod", "data")`` on a multi-pod mesh)."""
+    dp = dp_axes(mesh)
+    out = []
+    for e in _spec_entries(spec):
+        out.append(dp if _mentions(e, "data") or e == "data" else e)
+    return P(*out)
+
+
+def retarget_tree(tree, mesh: Mesh):
+    return jax.tree.map(lambda s: retarget_pspec(s, mesh), tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def batch_pspecs_for(mesh: Mesh, batch_tree):
+    """Batch arrays shard their leading dim over the data-parallel axes."""
+    dp = dp_axes(mesh)
+    return jax.tree.map(lambda _: P(dp), batch_tree)

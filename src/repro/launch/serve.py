@@ -1,8 +1,10 @@
-"""Serving launcher — the paper's end-to-end path on real compute.
+"""Serving launcher — the paper's end-to-end path on real compute, through
+the ``LatentBox`` object-store facade.
 
-Builds a corpus of generated images, persists compressed latents in the
-object store, then serves a trace slice through the LatentBox engine
-(router + dual-format cache + adaptive tuner + real VAE decode fleet).
+Builds a corpus of generated images, ``put``s them (encode -> compress ->
+durable latent write), then replays a trace slice with windowed
+``get_many`` — consistent-hash routing, dual-format caching, adaptive
+tuning, and microbatched jitted decodes all behind the one facade.
 
     PYTHONPATH=src python -m repro.launch.serve --requests 800 --objects 60
 """
@@ -14,12 +16,9 @@ import time
 
 import numpy as np
 
-import jax.numpy as jnp
-
-from repro.compression.latentcodec import compress_latent
-from repro.core.latent_store import LatentStore
+from repro.core.regen_tier import Recipe
 from repro.core.tuner import TunerConfig
-from repro.serve.engine import EngineConfig, ServingEngine
+from repro.store import LatentBox, StoreConfig
 from repro.trace.synth import TraceConfig, generate_trace
 from repro.vae.model import VAE, VAEConfig
 
@@ -35,22 +34,22 @@ def main() -> None:
                          "decode scheduler (1 = sequential gets)")
     args = ap.parse_args()
 
-    rng = np.random.default_rng(0)
     vae = VAE(VAEConfig(name="demo", latent_channels=4,
                         block_out_channels=(16, 32), layers_per_block=1,
                         groups=4), seed=0)
+    img_bytes = args.res * args.res * 3
+    box = LatentBox.engine(vae=vae, config=StoreConfig(
+        n_nodes=args.nodes,
+        cache_bytes_per_node=args.objects * img_bytes * 0.15,
+        image_bytes=float(img_bytes), latent_bytes=float(img_bytes) / 5,
+        tuner=TunerConfig(window=100, step=0.02)))
 
-    print(f"[serve] generating {args.objects} images -> latents -> store")
-    store = LatentStore(seed=1)
+    print(f"[serve] putting {args.objects} generated images -> latents")
     lat_bytes = []
     for oid in range(args.objects):
-        img = jnp.asarray(rng.standard_normal((1, args.res, args.res, 3)),
-                          jnp.float32)
-        z = np.asarray(vae.encode_mean(img)).astype(np.float16)[0]
-        blob = compress_latent(z)
-        lat_bytes.append(len(blob))
-        store.put(oid, blob)
-    img_bytes = args.res * args.res * 3
+        res = box.put(oid, recipe=Recipe(seed=oid, height=args.res,
+                                         width=args.res))
+        lat_bytes.append(res.stored_bytes)
     print(f"[serve] mean compressed latent {np.mean(lat_bytes):.0f} B "
           f"vs raw pixels {img_bytes} B")
 
@@ -59,18 +58,12 @@ def main() -> None:
                                     span_days=5, seed=3))
     ids = tr.object_ids[:args.requests]
 
-    eng = ServingEngine(vae, store, EngineConfig(
-        n_nodes=args.nodes,
-        cache_bytes_per_node=args.objects * img_bytes * 0.15,
-        tuner=TunerConfig(window=100, step=0.02)),
-        image_bytes=float(img_bytes), latent_bytes=float(np.mean(lat_bytes)))
-
     t0 = time.perf_counter()
     window = max(1, args.batch)
     for start in range(0, len(ids), window):
-        eng.get_many([int(oid) for oid in ids[start:start + window]])
+        box.get_many([int(oid) for oid in ids[start:start + window]])
     dt = time.perf_counter() - t0
-    s = eng.summary()
+    s = box.summary()
     print(f"[serve] {len(ids)} requests in {dt:.1f}s "
           f"({1e3 * dt / len(ids):.1f} ms/req on CPU, "
           f"window={window})")

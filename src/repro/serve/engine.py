@@ -1,11 +1,15 @@
-"""Serving engine: LatentBox's routing/cache layer driving a real JAX
-decode fleet, with a microbatching decode scheduler on the miss path.
+"""The ENGINE backend of the LatentBox object-store API: real jitted
+decode behind the shared tier-walk read path.
 
-This is the non-simulated end-to-end path (examples/serve_trace_replay.py):
-requests -> Router (coalescing, consistent hashing, spillover w/ pinning)
--> per-node DualFormatCache -> on miss, the *real* VAE decode (jitted,
-batched) reconstructs pixels from compressed latents fetched from the
-LatentStore.
+Since the store refactor there is exactly one read path —
+:class:`repro.store.walk.TierWalk` (pixel cache -> latent cache -> durable
+latent -> recipe regeneration) — and two backends of the same ``LatentBox``
+facade: this module supplies *real compute* (jitted VAE decode, measured
+wall-clock feeding the tuner EWMAs), while ``core/cluster.py`` supplies
+*latency events* for the same walk.  ``ServingEngine`` keeps its direct
+``get``/``get_many`` surface for existing callers/tests, but every
+classification, admission, promotion, and spillover decision now comes from
+the shared walk, so the engine can no longer drift from the simulator.
 
 Misses do not decode one-by-one: they accumulate in a ``DecodeBatcher``
 queue where duplicate in-flight object ids coalesce into a single decode
@@ -27,11 +31,14 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 import jax.numpy as jnp
 import numpy as np
 
-from repro.compression.latentcodec import decompress_latent
-from repro.core.dual_cache import DualFormatCache, IMAGE_HIT, LATENT_HIT
+from repro.compression.latentcodec import compress_latent, decompress_latent
+from repro.core.dual_cache import IMAGE_HIT, LATENT_HIT
 from repro.core.latent_store import LatentStore
-from repro.core.router import Router
+from repro.core.regen_tier import Recipe, RegenTierStore, synthesize_image
 from repro.core.tuner import MarginalHitTuner, TunerConfig
+from repro.store.api import StoreConfig
+from repro.store.tiers import DurableTier, RecipeTier
+from repro.store.walk import TierWalk
 from repro.vae.model import VAE
 
 
@@ -41,26 +48,53 @@ class EngineConfig:
     cache_bytes_per_node: float = 64e6
     alpha0: float = 0.5
     tau: float = 0.1
+    #: Paper parameter ``h``: latent hits before promotion to the pixel
+    #: tier; doubles as the spillover queue-depth bound (the deprecated
+    #: ``theta`` alias encoded the same value).
     promote_threshold: int = 4
-    theta: int = 4
     decode_buckets: Tuple[int, ...] = (1, 2, 4, 8)
+    adaptive: bool = True               # run the marginal-hit tuner
     tuner: TunerConfig = dataclasses.field(
         default_factory=lambda: TunerConfig(window=500, step=0.02))
+    #: Deprecated alias of ``promote_threshold`` — passing it is an error.
+    theta: dataclasses.InitVar[Optional[int]] = None
+
+    def __post_init__(self, theta: Optional[int]) -> None:
+        if theta is not None:
+            raise TypeError(
+                "EngineConfig.theta was merged into promote_threshold "
+                "(both encode the paper's h); pass promote_threshold "
+                "instead")
+
+    def store_config(self, image_bytes: float,
+                     latent_bytes: float) -> StoreConfig:
+        """The cache/routing half of this config, for the shared walk."""
+        return StoreConfig(
+            n_nodes=self.n_nodes,
+            cache_bytes_per_node=self.cache_bytes_per_node,
+            alpha0=self.alpha0, tau=self.tau,
+            promote_threshold=self.promote_threshold,
+            image_bytes=image_bytes, latent_bytes=latent_bytes,
+            adaptive=self.adaptive, tuner=self.tuner,
+            decode_buckets=self.decode_buckets)
 
 
 class _Node:
-    def __init__(self, idx: int, cfg: EngineConfig, image_bytes: float,
-                 latent_bytes: float):
+    """Engine-side view of one walk node: payload dicts + decode queue
+    depth around the walk's cache/tuner."""
+
+    def __init__(self, idx: int, tier) -> None:
         self.idx = idx
-        self.cache = DualFormatCache(
-            cfg.cache_bytes_per_node, alpha=cfg.alpha0, tau=cfg.tau,
-            promote_threshold=cfg.promote_threshold,
-            image_size_fn=lambda _: image_bytes,
-            latent_size_fn=lambda _: latent_bytes)
-        self.tuner = MarginalHitTuner(self.cache, cfg.tuner)
+        self.tier = tier
+        self.cache = tier.cache
+        self.tuner: Optional[MarginalHitTuner] = tier.tuner
         self.images: Dict[int, np.ndarray] = {}     # decoded-image payloads
         self.latents: Dict[int, bytes] = {}         # compressed payloads
         self.queue_depth = 0
+
+    def drop_payloads(self, oid: int) -> None:
+        self.images.pop(oid, None)
+        self.latents.pop(oid, None)
 
 
 def _node_index(name: str) -> int:
@@ -97,6 +131,7 @@ class DecodeBatcher:
         self._warm: set = set()       # buckets whose decode shape is compiled
         self.stats = {"decodes": 0, "batches": 0, "coalesced": 0,
                       "padded_slots": 0}
+        self.last_per_image_ms: Dict[int, float] = {}
 
     def __len__(self) -> int:
         return len(self._pending)
@@ -129,6 +164,7 @@ class DecodeBatcher:
         results: Dict[int, np.ndarray] = {}
         items = list(self._pending.items())
         self._pending.clear()
+        self.last_per_image_ms = {}
         for start in range(0, len(items), self.max_batch):
             chunk = items[start:start + self.max_batch]
             results.update(self._decode_chunk(chunk))
@@ -154,7 +190,9 @@ class DecodeBatcher:
         self.stats["padded_slots"] += bucket - n_real
         out = {}
         for i, (oid, (_, node)) in enumerate(chunk):
-            node.tuner.observe_decode_ms(per_image_ms)
+            if node.tuner is not None:
+                node.tuner.observe_decode_ms(per_image_ms)
+            self.last_per_image_ms[oid] = per_image_ms
             out[oid] = imgs[i]
         return out
 
@@ -168,38 +206,127 @@ class _Ticket:
     exec_node: Optional[_Node] = None
     img: Optional[np.ndarray] = None          # set on image hit
     write_image: bool = False                 # promote/pin decision at lookup
+    spilled: bool = False
+    fetch_ms: float = 0.0                     # measured durable-fetch wall
+    regen_ms: float = 0.0                     # measured regeneration wall
+    decode_ms: float = 0.0                    # per-image share of its batch
 
 
 class ServingEngine:
     """Single-process stand-in for the Ray fleet: N logical nodes share one
-    device, but the cache/routing/tuning logic is the production code."""
+    device, but the cache/routing/tuning logic is the production code —
+    and, since the store refactor, the exact same ``TierWalk`` the
+    simulator backend classifies with."""
 
     def __init__(self, vae: VAE, store: LatentStore,
-                 cfg: Optional[EngineConfig] = None,
-                 image_bytes: float = 64e3, latent_bytes: float = 13e3):
+                 cfg=None, image_bytes: float = 64e3,
+                 latent_bytes: float = 13e3,
+                 recipes: Optional[RegenTierStore] = None):
+        """``cfg`` is either a :class:`StoreConfig` (the facade path — its
+        ``image_bytes``/``latent_bytes`` fields win) or a legacy
+        :class:`EngineConfig` combined with the explicit size arguments."""
         self.vae = vae
         self.store = store
-        self.cfg = cfg or EngineConfig()
-        self.nodes = [_Node(i, self.cfg, image_bytes, latent_bytes)
-                      for i in range(self.cfg.n_nodes)]
-        self.router = Router([f"node{i}" for i in range(self.cfg.n_nodes)],
-                             theta=self.cfg.theta)
+        if isinstance(cfg, StoreConfig):
+            self.cfg = cfg
+        else:
+            self.cfg = (cfg or EngineConfig()).store_config(
+                image_bytes, latent_bytes)
+        self.recipes = recipes
+        self.walk = TierWalk(
+            self.cfg,
+            durable=DurableTier(store),
+            recipes=RecipeTier(recipes) if recipes is not None else None)
+        self.nodes = [_Node(i, t) for i, t in enumerate(self.walk.caches)]
+        for node in self.nodes:
+            # capacity evictions drop the decoded/compressed payload too
+            node.tier.evict_cb(node.drop_payloads)
+        self.router = self.walk.router
         self.batcher = DecodeBatcher(vae, self.cfg.decode_buckets)
-        self.stats = {"image_hit": 0, "latent_hit": 0, "full_miss": 0,
-                      "spilled": 0}
+        self.stats = self.walk.counts           # shared hit/spill accounting
+
+    # -- writes ---------------------------------------------------------------
+
+    def put(self, oid: int, image: Optional[np.ndarray] = None,
+            latent: Optional[np.ndarray] = None,
+            recipe: Optional[Recipe] = None) -> int:
+        """Durable write: encode (if given pixels) -> compress -> latent
+        store; the recipe (if any) becomes the coldest durability class.
+        Returns the durable byte count."""
+        if latent is None:
+            if image is None:
+                if recipe is None:
+                    raise ValueError("put needs an image, latent, or recipe")
+                image = synthesize_image(recipe)
+            img4 = np.asarray(image, np.float32)
+            if img4.ndim == 3:
+                img4 = img4[None]
+            latent = np.asarray(
+                self.vae.encode_mean(jnp.asarray(img4)))[0].astype(np.float16)
+        blob = compress_latent(np.asarray(latent))
+        self.store.put(oid, blob)
+        if recipe is not None and self.recipes is not None:
+            self.recipes.put(oid, float(len(blob)), recipe=recipe)
+        return len(blob)
+
+    def delete(self, oid: int) -> bool:
+        """Remove from every tier, payload dicts included."""
+        found = self.walk.delete(oid)
+        for node in self.nodes:
+            node.drop_payloads(oid)
+        return found
+
+    def demote(self, oid: int) -> bool:
+        """Drop the durable latent, keep the recipe (recipe-only class).
+        Cached copies are purged so the next read exercises regeneration;
+        the eviction listeners drop the decoded payloads with them."""
+        return self.walk.demote(oid)
+
+    def promote(self, oid: int) -> bool:
+        """Regenerate a demoted object's latent back into the durable tier
+        without waiting for a read to pay the regen latency."""
+        if self.recipes is None or not self.recipes.is_demoted(oid):
+            return False
+        self._regenerate(oid)
+        return True
+
+    def prewarm(self, oid: int) -> bool:
+        """Decode now and pin pixels at the hash owner (no stats impact)."""
+        blob = self.store.get(oid)
+        if blob is None:
+            return False
+        z = np.asarray(decompress_latent(blob), np.float32)
+        img = np.asarray(self.vae.decode(z[None]))[0]
+        owner = self.nodes[_node_index(self.walk.router.ring.owner(oid))]
+        owner.cache.insert_image(oid)
+        owner.images[oid] = img
+        return True
+
+    def _regenerate(self, oid: int) -> bytes:
+        """Recipe -> pixels -> latent -> durable re-admission (bit-exact on
+        the same stack, which is what makes recipes a durability class)."""
+        recipe = self.recipes.recipe_of(oid) if self.recipes else None
+        if recipe is None:
+            raise KeyError(f"object {oid} has no recipe to regenerate from")
+        z = np.asarray(self.vae.encode_mean(
+            jnp.asarray(synthesize_image(recipe))))[0].astype(np.float16)
+        blob = compress_latent(z)
+        self.store.put(oid, blob)
+        self.recipes.readmit(oid, float(len(blob)), now_mo=0.0)
+        return blob
 
     # -- request admission ---------------------------------------------------
 
     def _lookup(self, oid: int) -> _Ticket:
-        """Route one request up to (but excluding) the decode: cache lookup,
-        spillover pick, latent fetch/admission, and decode enqueue."""
-        owner_name = self.router.ring.owner(oid)
-        owner = self.nodes[_node_index(owner_name)]
-        res = owner.cache.lookup(oid)
-        owner.tuner.on_request()
+        """Route one request up to (but excluding) the decode: the shared
+        tier-walk classifies and admits; this method materializes payloads
+        (durable fetch / regeneration) and enqueues the decode."""
+        ticket = self.walk.lookup(
+            oid, depth_of=lambda i: self.nodes[i].queue_depth)
+        owner = self.nodes[ticket.owner]
+        exec_node = self.nodes[ticket.exec_node]
 
-        if res.outcome == IMAGE_HIT:
-            self.stats["image_hit"] += 1
+        if ticket.hit_class == IMAGE_HIT:
             img = owner.images.get(oid)
             if img is not None:
                 return _Ticket(oid, IMAGE_HIT, owner, img=img)
@@ -214,38 +341,39 @@ class ServingEngine:
             return _Ticket(oid, IMAGE_HIT, owner, exec_node=owner,
                            write_image=True)
 
-        # pick the execution node (spillover with cache pinning)
-        for n in self.nodes:
-            self.router.report_depth(f"node{n.idx}", n.queue_depth)
-        exec_node = owner
-        if owner.queue_depth > self.cfg.theta:
-            cand = self.nodes[_node_index(
-                self.router.least_loaded(exclude=owner_name))]
-            if cand.queue_depth < owner.queue_depth:
-                exec_node = cand
-                self.stats["spilled"] += 1
-
-        if res.outcome == LATENT_HIT:
-            self.stats["latent_hit"] += 1
-            blob = owner.latents[oid]
-        else:
-            self.stats["full_miss"] += 1
+        fetch_ms = regen_ms = 0.0
+        if ticket.hit_class == LATENT_HIT:
+            blob = owner.latents.get(oid) or self.store.get(oid)
+            if blob is None:
+                raise KeyError(f"object {oid} lost its latent payload")
+        elif ticket.needs_regen:
+            t0 = time.perf_counter()
+            blob = self._regenerate(oid)
+            regen_ms = (time.perf_counter() - t0) * 1e3
+            # regen replaces the durable fetch on the miss path, so it
+            # feeds the fetch EWMA (same signal class on both backends)
+            if owner.tuner is not None:
+                owner.tuner.observe_fetch_ms(regen_ms)
+            if self.walk.admit_latent(ticket.owner, oid):
+                owner.latents[oid] = blob
+        else:                                         # durable fetch
             t0 = time.perf_counter()
             blob = self.store.get(oid)
             if blob is None:
-                raise KeyError(f"object {oid} not in store")
-            owner.tuner.observe_fetch_ms(
-                (time.perf_counter() - t0) * 1e3
-                + self.store.fetch_ms(oid, time.time()))
-            owner.cache.admit_latent(oid)
-            if oid in owner.cache.latent_tier:
+                raise KeyError(f"object {oid} has no durable payload "
+                               "(size-only registration?)")
+            fetch_ms = ((time.perf_counter() - t0) * 1e3
+                        + self.store.fetch_ms(oid, time.time()))
+            if owner.tuner is not None:
+                owner.tuner.observe_fetch_ms(fetch_ms)
+            if self.walk.admit_latent(ticket.owner, oid):
                 owner.latents[oid] = blob
 
         if self.batcher.submit(oid, blob, exec_node):
             exec_node.queue_depth += 1          # one slot per unique decode
-        return _Ticket(
-            oid, res.outcome, owner, exec_node=exec_node,
-            write_image=res.promoted or owner.cache.contains(oid) == "image")
+        return _Ticket(oid, ticket.hit_class, owner, exec_node=exec_node,
+                       write_image=ticket.write_image, spilled=ticket.spilled,
+                       fetch_ms=fetch_ms, regen_ms=regen_ms)
 
     # -- public API ----------------------------------------------------------
 
@@ -254,12 +382,18 @@ class ServingEngine:
 
     def get_many(self, oids: Sequence[int]
                  ) -> List[Tuple[np.ndarray, str]]:
+        """Serve a window of requests with one batched decode flush;
+        returns ``(pixels, hit_class)`` pairs in request order."""
+        return [(t.img, t.outcome) for t in self.serve_window(oids)]
+
+    def serve_window(self, oids: Sequence[int]) -> List[_Ticket]:
         """Serve a window of requests with one batched decode flush.
 
         Lookups/routing run in request order (cache state evolves exactly
         as with sequential ``get`` calls); all resulting misses decode in
         bucketed microbatches, then results write back to their hash
-        owners (cache pinning) in request order.
+        owners (cache pinning) in request order.  Tickets carry the
+        measured per-request latency components for ``GetResult``.
         """
         try:
             tickets = [self._lookup(int(oid)) for oid in oids]
@@ -271,21 +405,20 @@ class ServingEngine:
                 n.queue_depth = 0
             raise
         decoded = self._flush()
-        out: List[Tuple[np.ndarray, str]] = []
         touched = {}
         for t in tickets:
             if t.img is not None:
-                out.append((t.img, t.outcome))
                 continue
             img = decoded[t.oid]
+            t.decode_ms = self.batcher.last_per_image_ms.get(t.oid, 0.0)
             # cache pinning: decoded result written back to the OWNER node
             if t.write_image or t.owner.cache.contains(t.oid) == "image":
                 t.owner.images[t.oid] = img
             touched[id(t.owner)] = t.owner
-            out.append((img, t.outcome))
+            t.img = img
         for node in touched.values():
             self._gc(node)
-        return out
+        return tickets
 
     def _flush(self) -> Dict[int, np.ndarray]:
         try:
@@ -304,15 +437,7 @@ class ServingEngine:
                             if k in live}
 
     def summary(self) -> Dict[str, Any]:
-        total = sum(self.stats[k] for k in
-                    ("image_hit", "latent_hit", "full_miss"))
-        out = dict(self.stats)
-        out["total"] = total
-        if total:
-            out["image_hit_frac"] = self.stats["image_hit"] / total
-            out["decode_frac"] = (self.stats["latent_hit"]
-                                  + self.stats["full_miss"]) / total
-        out["alpha"] = [round(n.cache.alpha, 3) for n in self.nodes]
+        out = self.walk.summary()
         out["decode_batches"] = self.batcher.stats["batches"]
         out["decodes"] = self.batcher.stats["decodes"]
         out["coalesced_decodes"] = self.batcher.stats["coalesced"]

@@ -1,0 +1,30 @@
+"""LatentBox object-store API (the paper's storage system, as a library).
+
+One client-facing facade — :class:`LatentBox` — exposes the full object
+lifecycle (``put`` / ``get`` / ``get_many`` / ``delete`` / ``stat`` /
+``demote`` / ``promote``) over a tier-walk read path
+
+    pixel cache -> latent cache -> durable latent store -> recipe regen
+
+with two interchangeable backends: the **engine** backend runs real jitted
+VAE decodes through the microbatching scheduler, the **sim** backend runs
+the same tier walk against the discrete-latency plant.  Both classify every
+request identically; they differ only in how payloads and latencies are
+produced.
+"""
+
+from repro.store.api import (GetResult, ObjectStat, PutResult, StoreConfig,
+                             IMAGE_HIT, LATENT_HIT, FULL_MISS, REGEN_MISS)
+from repro.store.backends import EngineBackend, SimBackend
+from repro.store.facade import LatentBox
+from repro.store.tiers import (DualCacheTier, DurableTier, RecipeTier, Tier,
+                               TierHit)
+from repro.store.walk import TierWalk, WalkTicket
+
+__all__ = [
+    "LatentBox", "StoreConfig", "GetResult", "PutResult", "ObjectStat",
+    "EngineBackend", "SimBackend",
+    "Tier", "TierHit", "DualCacheTier", "DurableTier", "RecipeTier",
+    "TierWalk", "WalkTicket",
+    "IMAGE_HIT", "LATENT_HIT", "FULL_MISS", "REGEN_MISS",
+]

@@ -1,0 +1,94 @@
+"""Public value types of the LatentBox object-store API.
+
+Kept import-light (numpy + core configs only) so every store module —
+tiers, walk, backends, facade — and both serving stacks can depend on it
+without cycles.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.dual_cache import FULL_MISS, IMAGE_HIT, LATENT_HIT
+from repro.core.latent_store import StoreLatencyModel
+from repro.core.tuner import TunerConfig
+
+#: Fourth hit class beyond the paper's three: the object was demoted to
+#: recipe-only storage and must be regenerated before decode.
+REGEN_MISS = "regen_miss"
+
+HIT_CLASSES = (IMAGE_HIT, LATENT_HIT, FULL_MISS, REGEN_MISS)
+
+
+@dataclasses.dataclass
+class StoreConfig:
+    """One config for both backends.
+
+    The cache/routing half (everything through ``latent_bytes``) drives the
+    shared tier walk, so an engine box and a sim box built from the same
+    ``StoreConfig`` classify a shared trace identically.  The plant half
+    (``gpus_per_node`` onward) is only consumed by the simulator backend.
+    """
+
+    n_nodes: int = 2
+    cache_bytes_per_node: float = 64e6
+    alpha0: float = 0.5                 # initial image-tier fraction
+    tau: float = 0.1                    # tail-segment fraction (tuner signal)
+    promote_threshold: int = 4          # paper h: latent hits before promote;
+                                        # doubles as the spillover depth bound
+    image_bytes: float = 64e3           # per-object accounting sizes
+    latent_bytes: float = 13e3
+    adaptive: bool = True               # run the marginal-hit tuner
+    tuner: TunerConfig = dataclasses.field(
+        default_factory=lambda: TunerConfig(window=500, step=0.02))
+    decode_buckets: Tuple[int, ...] = (1, 2, 4, 8)
+    # -- simulator plant ----------------------------------------------------
+    gpus_per_node: int = 1
+    decode_ms: float = 31.0
+    generation_ms: float = 3905.0       # full diffusion pipeline (regen cost)
+    net_ms: float = 10.0
+    latent_ship_ms: float = 1.0
+    decode_jitter_sigma: float = 0.0    # 0 => deterministic sim latencies
+    store_latency: StoreLatencyModel = dataclasses.field(
+        default_factory=StoreLatencyModel)
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class PutResult:
+    oid: int
+    stored_bytes: float                 # durable latent bytes written
+    recipe_bytes: float = 0.0           # recipe payload bytes (0: none)
+    format: str = "latent"              # 'latent' | 'size' (sim, size-only)
+    prewarmed: bool = False
+
+
+@dataclasses.dataclass
+class GetResult:
+    """One request's answer: payload + hit class + latency breakdown."""
+
+    oid: int
+    hit_class: str                        # one of HIT_CLASSES
+    payload: Optional[np.ndarray] = None  # decoded pixels (engine); None (sim)
+    node: int = -1                        # cache owner (hash-pinned home)
+    exec_node: int = -1                   # where the decode ran
+    spilled: bool = False
+    regenerated: bool = False
+    latency_ms: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+    @property
+    def total_ms(self) -> float:
+        return self.latency_ms.get("total", 0.0)
+
+
+@dataclasses.dataclass
+class ObjectStat:
+    oid: int
+    residency: List[str]                  # e.g. ['image@node0', 'durable']
+    durable_bytes: float = 0.0
+    recipe_bytes: float = 0.0
+    demoted: bool = False                 # recipe-only durability class
+    meta: Optional[Dict[str, Any]] = None

@@ -1,0 +1,262 @@
+"""The two backends of the ``LatentBox`` facade.
+
+Both run the identical :class:`~repro.store.walk.TierWalk` read path, so
+they classify a shared trace identically; they differ only in how payloads
+and latencies are produced:
+
+* :class:`EngineBackend` — real compute: jitted VAE decode through the
+  microbatching scheduler (``serve/engine.py``), measured wall-clock in the
+  latency breakdown, true pixels in ``GetResult.payload``.
+* :class:`SimBackend` — the discrete latency plant from ``core/cluster.py``
+  (:class:`~repro.core.cluster.GpuQueue` + the S3 latency model): no pixels,
+  but queue/fetch/decode/regen milliseconds for capacity planning at trace
+  scale.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.cluster import GpuQueue
+from repro.core.dual_cache import IMAGE_HIT, LATENT_HIT
+from repro.core.latent_store import LatentStore
+from repro.core.metrics import RequestLog
+from repro.core.regen_tier import Recipe, RegenTierStore
+from repro.store.api import (GetResult, ObjectStat, PutResult, StoreConfig)
+from repro.store.tiers import DurableTier, RecipeTier
+from repro.store.walk import TierWalk
+
+MS_PER_MONTH = 30 * 86_400.0 * 1e3
+
+
+def _stat(walk: TierWalk, store: LatentStore, regen: RegenTierStore,
+          oid: int) -> Optional[ObjectStat]:
+    residency = walk.residency(oid)
+    if not residency:
+        return None
+    st = store.stat(oid)
+    return ObjectStat(
+        oid=oid,
+        residency=residency,
+        durable_bytes=st["nbytes"] if st else 0.0,
+        recipe_bytes=(regen.recipe_of(oid).nbytes
+                      if regen.recipe_of(oid) else 0.0),
+        demoted=regen.is_demoted(oid))
+
+
+class EngineBackend:
+    """Real-decode backend: wraps :class:`repro.serve.engine.ServingEngine`."""
+
+    name = "engine"
+
+    def __init__(self, vae, cfg: Optional[StoreConfig] = None):
+        # deferred import: serve.engine imports the store package too
+        from repro.serve.engine import ServingEngine
+        self.cfg = cfg or StoreConfig()
+        self.store = LatentStore(self.cfg.store_latency, seed=self.cfg.seed + 1)
+        self.regen = RegenTierStore()
+        # ServingEngine consumes the StoreConfig directly — no per-field
+        # copying that could drift from the simulator backend
+        self.engine = ServingEngine(vae, self.store, self.cfg,
+                                    recipes=self.regen)
+        self.walk = self.engine.walk
+
+    # -- object lifecycle ---------------------------------------------------
+    def put(self, oid: int, image=None, latent=None,
+            recipe: Optional[Recipe] = None, nbytes: Optional[float] = None,
+            prewarm: bool = False) -> PutResult:
+        if image is None and latent is None and recipe is None:
+            raise ValueError(
+                "the engine backend stores real payloads: pass an image, "
+                "a latent, or a recipe (nbytes-only puts are sim-only)")
+        stored = self.engine.put(oid, image=image, latent=latent,
+                                 recipe=recipe)
+        if prewarm:
+            self.engine.prewarm(oid)
+        return PutResult(oid, float(stored),
+                         recipe_bytes=float(recipe.nbytes) if recipe else 0.0,
+                         format="latent", prewarmed=prewarm)
+
+    def get_many(self, oids: Sequence[int],
+                 timestamps_ms=None) -> List[GetResult]:
+        # timestamps are a simulator concept; the engine serves at wall-clock
+        tickets = self.engine.serve_window(oids)
+        out = []
+        for t in tickets:
+            total = t.fetch_ms + t.regen_ms + t.decode_ms
+            out.append(GetResult(
+                oid=t.oid, hit_class=t.outcome, payload=t.img,
+                node=t.owner.idx,
+                exec_node=t.exec_node.idx if t.exec_node else t.owner.idx,
+                spilled=t.spilled, regenerated=t.regen_ms > 0,
+                latency_ms={"fetch": t.fetch_ms, "regen": t.regen_ms,
+                            "decode": t.decode_ms, "total": total}))
+        return out
+
+    def delete(self, oid: int) -> bool:
+        return self.engine.delete(oid)
+
+    def demote(self, oid: int) -> bool:
+        return self.engine.demote(oid)
+
+    def promote(self, oid: int) -> bool:
+        return self.engine.promote(oid)
+
+    def stat(self, oid: int) -> Optional[ObjectStat]:
+        return _stat(self.walk, self.store, self.regen, oid)
+
+    def summary(self) -> Dict:
+        return self.engine.summary()
+
+
+class SimBackend:
+    """Latency-plant backend: the same tier walk, no real decode.
+
+    Requests replay sequentially; with no explicit timestamps the replay
+    is closed-loop (each request arrives when the previous completed).
+    Store-fetch latencies use the per-call seed path, so a request's
+    sample depends only on ``(seed, oid, arrival index)`` — reproducible
+    under request reordering.
+    """
+
+    name = "sim"
+
+    def __init__(self, cfg: Optional[StoreConfig] = None):
+        self.cfg = cfg or StoreConfig()
+        self.store = LatentStore(self.cfg.store_latency, seed=self.cfg.seed + 1)
+        self.regen = RegenTierStore()
+        self.walk = TierWalk(self.cfg, DurableTier(self.store),
+                             RecipeTier(self.regen))
+        self.gpus = [GpuQueue(self.cfg.gpus_per_node)
+                     for _ in range(self.cfg.n_nodes)]
+        self.clock_ms = 0.0
+        self._seq = 0
+        self.log = RequestLog()
+
+    # -- object lifecycle ---------------------------------------------------
+    def put(self, oid: int, image=None, latent=None,
+            recipe: Optional[Recipe] = None, nbytes: Optional[float] = None,
+            prewarm: bool = False) -> PutResult:
+        if nbytes is None:
+            if latent is not None and hasattr(latent, "nbytes"):
+                nbytes = float(latent.nbytes)
+            elif isinstance(latent, (bytes, bytearray)):
+                nbytes = float(len(latent))
+            else:
+                nbytes = self.cfg.latent_bytes
+        self.store.put_size(oid, float(nbytes))
+        if recipe is not None:
+            self.regen.put(oid, float(nbytes),
+                           now_mo=self.clock_ms / MS_PER_MONTH, recipe=recipe)
+        if prewarm:
+            owner = self.walk._idx[self.walk.router.ring.owner(oid)]
+            self.walk.caches[owner].store(oid, format="image")
+        return PutResult(oid, float(nbytes),
+                         recipe_bytes=float(recipe.nbytes) if recipe else 0.0,
+                         format="size", prewarmed=prewarm)
+
+    def _decode_time(self, oid: int, seq: int) -> float:
+        c = self.cfg
+        if c.decode_jitter_sigma <= 0:
+            return c.decode_ms
+        rng = np.random.default_rng((c.seed, 0xDEC0DE, oid & 0xFFFFFFFF, seq))
+        return float(c.decode_ms * rng.lognormal(0.0, c.decode_jitter_sigma))
+
+    def get_many(self, oids: Sequence[int],
+                 timestamps_ms: Optional[Sequence[float]] = None
+                 ) -> List[GetResult]:
+        cfg = self.cfg
+        out: List[GetResult] = []
+        for k, oid in enumerate(oids):
+            if timestamps_ms is not None:
+                self.clock_ms = max(self.clock_ms, float(timestamps_ms[k]))
+            t = self.clock_ms
+            for q in self.gpus:
+                q.release(t)
+            ticket = self.walk.lookup(
+                oid, depth_of=lambda i: self.gpus[i].depth())
+            seq = self._seq
+            self._seq += 1
+            owner_tier = self.walk.caches[ticket.owner]
+            lat = {"queue": 0.0, "fetch": 0.0, "decode": 0.0, "regen": 0.0,
+                   "net": cfg.net_ms}
+
+            if ticket.hit_class == IMAGE_HIT:
+                done = t + cfg.net_ms
+            else:
+                t_ready = t
+                if ticket.needs_fetch:
+                    f = self.store.fetch_ms(oid, t / 1e3,
+                                            nbytes=cfg.latent_bytes, seq=seq)
+                    lat["fetch"] = f
+                    t_ready += f
+                    if owner_tier.tuner is not None:
+                        owner_tier.tuner.observe_fetch_ms(f)
+                if ticket.hit_class == LATENT_HIT and ticket.spilled:
+                    t_ready += cfg.latent_ship_ms   # owner -> spill transfer
+                if ticket.needs_regen:
+                    # the generation pipeline (which includes the decode)
+                    # occupies the exec GPU; the latent becomes durable again
+                    dur = cfg.generation_ms
+                    lat["regen"] = dur
+                    self.store.put_size(oid, cfg.latent_bytes)
+                    self.regen.readmit(oid, cfg.latent_bytes,
+                                       now_mo=t / MS_PER_MONTH)
+                else:
+                    dur = self._decode_time(oid, seq)
+                    lat["decode"] = dur
+                if ticket.needs_fetch or ticket.needs_regen:
+                    self.walk.admit_latent(ticket.owner, oid)
+                _, start = self.gpus[ticket.exec_node].start(t_ready, dur)
+                lat["queue"] = start - t_ready
+                if owner_tier.tuner is not None:
+                    if ticket.needs_regen:
+                        # regen replaces the durable fetch on the miss
+                        # path: same EWMA class as the engine backend
+                        owner_tier.tuner.observe_fetch_ms(dur)
+                    else:
+                        owner_tier.tuner.observe_decode_ms(
+                            dur + lat["queue"])
+                done = start + dur + cfg.net_ms
+
+            lat["total"] = done - t
+            self.log.add(t, done - t, ticket.hit_class,
+                         queue_ms=lat["queue"], fetch_ms=lat["fetch"],
+                         decode_ms=lat["decode"], net_ms=cfg.net_ms,
+                         spilled=ticket.spilled, node=ticket.exec_node)
+            if timestamps_ms is None:
+                self.clock_ms = done                  # closed-loop replay
+            out.append(GetResult(
+                oid=int(oid), hit_class=ticket.hit_class, payload=None,
+                node=ticket.owner, exec_node=ticket.exec_node,
+                spilled=ticket.spilled, regenerated=ticket.needs_regen,
+                latency_ms=lat))
+        return out
+
+    def delete(self, oid: int) -> bool:
+        return self.walk.delete(oid)
+
+    def demote(self, oid: int) -> bool:
+        return self.walk.demote(oid)
+
+    def promote(self, oid: int) -> bool:
+        if not self.regen.is_demoted(oid):
+            return False
+        self.store.put_size(oid, self.cfg.latent_bytes)
+        self.regen.readmit(oid, self.cfg.latent_bytes,
+                           now_mo=self.clock_ms / MS_PER_MONTH)
+        return True
+
+    def stat(self, oid: int) -> Optional[ObjectStat]:
+        return _stat(self.walk, self.store, self.regen, oid)
+
+    def summary(self) -> Dict:
+        out = self.walk.summary()
+        out["sim_clock_ms"] = self.clock_ms
+        s = self.log.summarize()
+        for key in ("mean_ms", "p50_ms", "p95_ms", "p99_ms"):
+            if key in s:
+                out[key] = s[key]
+        return out

@@ -1,0 +1,123 @@
+"""``LatentBox`` — the single client-facing facade of the object store.
+
+The paper's system is *storage*: objects are put once, read billions of
+times, and demoted across durability classes as they cool.  This class is
+that contract as an API:
+
+    box = LatentBox.engine()                      # real jitted decode
+    box.put(42, image=img, recipe=Recipe(seed=7, height=64, width=64))
+    r = box.get(42)                               # GetResult: pixels +
+    #                                               hit class + latency
+    box.demote(42)                                # recipe-only durability
+    box.get(42).regenerated                       # True: cold regen path
+    box.stat(42), box.delete(42), box.summary()
+
+``LatentBox.simulated()`` swaps the backend for the discrete latency plant
+— same tier walk, same classifications, no GPU — which is how trace-scale
+capacity studies and unit tests drive the identical read path the real
+engine serves with.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.regen_tier import Recipe
+from repro.store.api import GetResult, ObjectStat, PutResult, StoreConfig
+
+
+class LatentBox:
+    """Unified object-store facade over a pluggable tier backend."""
+
+    def __init__(self, backend):
+        self._backend = backend
+        self._meta: Dict[int, Dict[str, Any]] = {}
+
+    # -- constructors --------------------------------------------------------
+    @classmethod
+    def engine(cls, vae=None, config: Optional[StoreConfig] = None,
+               seed: int = 0) -> "LatentBox":
+        """Real-decode box.  Without an explicit ``vae`` a small demo VAE
+        is built (the paper-scale decoder swaps in transparently)."""
+        from repro.store.backends import EngineBackend
+        if vae is None:
+            from repro.vae.model import VAE, VAEConfig
+            vae = VAE(VAEConfig(name="demo", latent_channels=4,
+                                block_out_channels=(16, 32),
+                                layers_per_block=1, groups=4), seed=seed)
+        return cls(EngineBackend(vae, config))
+
+    @classmethod
+    def simulated(cls, config: Optional[StoreConfig] = None) -> "LatentBox":
+        """Latency-plant box: identical classifications, modeled latency."""
+        from repro.store.backends import SimBackend
+        return cls(SimBackend(config))
+
+    @property
+    def backend(self):
+        return self._backend
+
+    # -- writes --------------------------------------------------------------
+    def put(self, oid: int, image: Optional[np.ndarray] = None,
+            latent: Optional[np.ndarray] = None,
+            recipe: Optional[Recipe] = None,
+            nbytes: Optional[float] = None,
+            meta: Optional[Dict[str, Any]] = None,
+            prewarm: bool = False) -> PutResult:
+        """Durable write: encode (pixels) -> compress -> latent store.
+
+        Any one of ``image`` / ``latent`` / ``recipe`` suffices on the
+        engine backend (a lone recipe is synthesized first); the simulator
+        additionally accepts ``nbytes``-only registrations.  ``prewarm``
+        pins decoded pixels at the hash owner so the first read is an
+        image hit.
+        """
+        res = self._backend.put(int(oid), image=image, latent=latent,
+                                recipe=recipe, nbytes=nbytes, prewarm=prewarm)
+        if meta is not None:
+            self._meta[int(oid)] = dict(meta)
+        return res
+
+    # -- reads ---------------------------------------------------------------
+    def get(self, oid: int) -> GetResult:
+        return self.get_many([oid])[0]
+
+    def get_many(self, oids: Sequence[int],
+                 timestamps_ms: Optional[Sequence[float]] = None
+                 ) -> List[GetResult]:
+        """Serve a request window through the tier walk.  ``timestamps_ms``
+        drives open-loop trace replay on the simulator backend; the engine
+        serves at wall-clock and ignores it."""
+        return self._backend.get_many(oids, timestamps_ms=timestamps_ms)
+
+    # -- lifecycle -----------------------------------------------------------
+    def delete(self, oid: int) -> bool:
+        """Remove the object from every tier (pixels, latents, durable,
+        recipe) and forget its metadata."""
+        self._meta.pop(int(oid), None)
+        return self._backend.delete(int(oid))
+
+    def stat(self, oid: int) -> Optional[ObjectStat]:
+        st = self._backend.stat(int(oid))
+        if st is not None:
+            st.meta = self._meta.get(int(oid))
+        return st
+
+    def demote(self, oid: int) -> bool:
+        """Durability-class demotion: drop the durable latent, keep the
+        recipe.  The next cold read regenerates (and re-admits) it."""
+        return self._backend.demote(int(oid))
+
+    def promote(self, oid: int) -> bool:
+        """Undo a demotion ahead of traffic: regenerate the latent into
+        the durable tier now, off the read path."""
+        return self._backend.promote(int(oid))
+
+    # -- introspection -------------------------------------------------------
+    def summary(self) -> Dict[str, Any]:
+        return self._backend.summary()
+
+    def __contains__(self, oid: int) -> bool:
+        return self._backend.stat(int(oid)) is not None

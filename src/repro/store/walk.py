@@ -1,0 +1,184 @@
+"""The one tier-walk read path shared by every LatentBox backend.
+
+Before this module the hit/miss classification logic lived twice — once in
+``serve/engine.py`` (real decode fleet) and once in ``core/cluster.py``
+(discrete-event plant) — and the two drifted.  :class:`TierWalk` owns the
+parts of a request that are *backend-independent*: consistent-hash
+ownership, per-node dual-format cache lookup (stats, promotion, tuner
+hook), queue-depth spillover choice, latent admission on a durable fetch,
+and regen detection on the recipe tier.  Backends consume the resulting
+:class:`WalkTicket` and supply only what differs: real decodes and
+wall-clock on the engine, latency events on the simulator.
+
+Two backends built from the same :class:`~repro.store.api.StoreConfig`
+therefore classify a shared trace identically — the property
+``tests/test_store_api.py`` locks in.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional
+
+from repro.core.dual_cache import IMAGE_HIT, LATENT_HIT, FULL_MISS
+from repro.core.router import Router
+from repro.store.api import REGEN_MISS, StoreConfig
+from repro.store.tiers import DualCacheTier, DurableTier, RecipeTier
+
+
+@dataclasses.dataclass
+class WalkTicket:
+    """One request's backend-independent routing/classification decision."""
+
+    oid: int
+    hit_class: str              # image_hit | latent_hit | full_miss | regen_miss
+    owner: int                  # cache home (hash-pinned)
+    exec_node: int              # where the decode should run
+    spilled: bool = False
+    tail_hit: bool = False
+    promoted: bool = False
+    write_image: bool = False   # pixel write-back decision made at lookup
+    needs_fetch: bool = False   # durable fetch on the critical path
+    needs_regen: bool = False   # generation pipeline on the critical path
+
+
+class TierWalk:
+    """Pixel cache -> latent cache -> durable store -> recipe regen."""
+
+    def __init__(self, cfg: StoreConfig, durable: DurableTier,
+                 recipes: Optional[RecipeTier] = None):
+        self.cfg = cfg
+        self.caches: List[DualCacheTier] = [
+            DualCacheTier(cfg.cache_bytes_per_node, alpha=cfg.alpha0,
+                          tau=cfg.tau,
+                          promote_threshold=cfg.promote_threshold,
+                          image_bytes=cfg.image_bytes,
+                          latent_bytes=cfg.latent_bytes,
+                          adaptive=cfg.adaptive, tuner=cfg.tuner,
+                          name=f"cache@node{i}")
+            for i in range(cfg.n_nodes)]
+        self.durable = durable
+        self.recipes = recipes
+        names = [f"node{i}" for i in range(cfg.n_nodes)]
+        self.router = Router(names, theta=cfg.promote_threshold)
+        self._idx: Dict[str, int] = {n: i for i, n in enumerate(names)}
+        self.counts: Dict[str, int] = {
+            IMAGE_HIT: 0, LATENT_HIT: 0, FULL_MISS: 0, REGEN_MISS: 0,
+            "spilled": 0}
+
+    # -- read path -----------------------------------------------------------
+    def lookup(self, oid: int,
+               depth_of: Optional[Callable[[int], int]] = None) -> WalkTicket:
+        """Classify one request and evolve cache state.
+
+        ``depth_of(node_idx)`` reports decode queue depth for the spillover
+        decision (engine: pending unique decodes; sim: GPU outstanding);
+        ``None`` disables spillover.  Raises ``KeyError`` when the object
+        is in no tier at all.
+        """
+        owner = self._idx[self.router.ring.owner(oid)]
+        cache = self.caches[owner]
+        hit = cache.load(oid)
+
+        if hit is not None and hit.hit_class == IMAGE_HIT:
+            self.counts[IMAGE_HIT] += 1
+            return WalkTicket(oid, IMAGE_HIT, owner, owner,
+                              tail_hit=hit.tail_hit, write_image=True)
+
+        # decode required: pick the execution node (spillover w/ pinning)
+        exec_node, spilled = owner, False
+        if depth_of is not None and self.cfg.n_nodes > 1:
+            for name, i in self._idx.items():
+                self.router.report_depth(name, depth_of(i))
+            if depth_of(owner) > self.router.theta:
+                cand = self._idx[self.router.least_loaded(
+                    exclude=f"node{owner}")]
+                if depth_of(cand) < depth_of(owner):
+                    exec_node, spilled = cand, True
+                    self.counts["spilled"] += 1
+                    self.router.n_spillover += 1
+
+        if hit is not None:                           # latent cache hit
+            self.counts[LATENT_HIT] += 1
+            return WalkTicket(
+                oid, LATENT_HIT, owner, exec_node, spilled=spilled,
+                tail_hit=hit.tail_hit, promoted=hit.promoted,
+                write_image=(hit.promoted
+                             or cache.cache.contains(oid) == "image"))
+
+        # NOTE: admission into the latent cache is the backend's job via
+        # :meth:`admit_latent` AFTER the payload materializes — admitting
+        # here would poison cache state when the fetch/regen fails.
+        dh = self.durable.load(oid)
+        if dh is not None:                            # durable latent fetch
+            self.counts[FULL_MISS] += 1
+            return WalkTicket(oid, FULL_MISS, owner, exec_node,
+                              spilled=spilled, needs_fetch=True)
+
+        rh = self.recipes.load(oid) if self.recipes is not None else None
+        if rh is not None:                            # recipe-only: regenerate
+            self.counts[REGEN_MISS] += 1
+            return WalkTicket(oid, REGEN_MISS, owner, exec_node,
+                              spilled=spilled, needs_regen=True)
+
+        raise KeyError(f"object {oid} not in any tier")
+
+    def admit_latent(self, owner: int, oid: int) -> bool:
+        """Admit a successfully fetched/regenerated latent into the owner's
+        cache; returns True when it is latent-tier resident afterwards."""
+        cache = self.caches[owner]
+        cache.store(oid, format="latent")
+        return oid in cache.cache.latent_tier
+
+    # -- lifecycle -----------------------------------------------------------
+    def delete(self, oid: int) -> bool:
+        """Remove an object from every tier (caches, durable, recipes)."""
+        found = False
+        for tier in self.caches:
+            found |= tier.evict(oid)
+        found |= self.durable.evict(oid)
+        if self.recipes is not None:
+            found |= self.recipes.evict(oid)
+        return found
+
+    def demote(self, oid: int) -> bool:
+        """Durability-class demotion: drop the durable latent and every
+        cached copy, keep the recipe.  Refuses when there is no recipe to
+        regenerate from (that would strand the object)."""
+        if self.recipes is None or self.recipes.recipe_of(oid) is None:
+            return False
+        if not self.durable.contains(oid):
+            return False                      # already demoted / unknown
+        self.durable.evict(oid)
+        self.recipes.regen.demote(oid)
+        for tier in self.caches:
+            tier.evict(oid)
+        return True
+
+    def residency(self, oid: int) -> List[str]:
+        out: List[str] = []
+        for i, tier in enumerate(self.caches):
+            where = tier.cache.contains(oid)
+            if where is not None:
+                out.append(f"{where}@node{i}")
+        if self.durable.contains(oid):
+            out.append("durable")
+        if self.recipes is not None and self.recipes.contains(oid):
+            out.append("recipe")
+        return out
+
+    def summary(self) -> Dict[str, float]:
+        total = sum(self.counts[k] for k in
+                    (IMAGE_HIT, LATENT_HIT, FULL_MISS, REGEN_MISS))
+        out: Dict[str, float] = dict(self.counts)
+        out["total"] = total
+        if total:
+            out["image_hit_frac"] = self.counts[IMAGE_HIT] / total
+            out["decode_frac"] = 1.0 - out["image_hit_frac"]
+        out["alpha"] = [round(t.cache.alpha, 3) for t in self.caches]
+        out["cache_resident_bytes"] = float(
+            sum(t.resident_bytes for t in self.caches))
+        out["durable_bytes"] = self.durable.resident_bytes
+        if self.recipes is not None:
+            out["recipe_bytes"] = self.recipes.resident_bytes
+        return out

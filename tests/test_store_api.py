@@ -1,0 +1,268 @@
+"""LatentBox object-store API: put/get round-trip bit-identity, tier-walk
+hit-class accounting, engine-vs-simulator classification parity on a shared
+trace, lifecycle ops (delete/stat/demote/promote), the deprecated
+``EngineConfig.theta`` alias, and the latent store's reorder-stable
+per-call latency seeding."""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core.latent_store import LatentStore
+from repro.core.regen_tier import Recipe, synthesize_image
+from repro.core.tuner import TunerConfig
+from repro.store import (FULL_MISS, IMAGE_HIT, LATENT_HIT, REGEN_MISS,
+                         LatentBox, StoreConfig)
+from repro.vae.model import VAE, VAEConfig
+
+TINY = VAEConfig(name="tiny", latent_channels=4, block_out_channels=(16, 32),
+                 layers_per_block=1, groups=4)
+
+N_OBJECTS = 12
+
+
+def small_cfg(**kw):
+    base = dict(n_nodes=2, cache_bytes_per_node=2e4, image_bytes=3e3,
+                latent_bytes=6e2, promote_threshold=2,
+                tuner=TunerConfig(window=10**9))
+    base.update(kw)
+    return StoreConfig(**base)
+
+
+@pytest.fixture(scope="module")
+def vae():
+    return VAE(TINY, seed=0)
+
+
+def fill(box, n=N_OBJECTS, res=16):
+    for oid in range(n):
+        box.put(oid, recipe=Recipe(seed=1000 + oid, height=res, width=res))
+
+
+class TestRoundTrip:
+    def test_put_get_bit_identical_to_direct_decode(self, vae):
+        """put(image) -> get() returns exactly decode(encode(image))
+        through the whole facade (compress/store/fetch/batch included)."""
+        box = LatentBox.engine(vae=vae, config=small_cfg())
+        img = synthesize_image(Recipe(seed=3, height=16, width=16))
+        box.put(7, image=img)
+        z = np.asarray(vae.encode_mean(jnp.asarray(img)))[0].astype(np.float16)
+        direct = np.asarray(vae.decode(jnp.asarray(z, jnp.float32)[None]))[0]
+        got = box.get(7)
+        assert got.hit_class == FULL_MISS
+        np.testing.assert_array_equal(got.payload, direct)
+        # repeated reads serve the same bits from warmer tiers
+        again = box.get(7)
+        assert again.hit_class in (LATENT_HIT, IMAGE_HIT)
+        np.testing.assert_array_equal(again.payload, got.payload)
+
+    def test_recipe_only_put_synthesizes(self, vae):
+        box = LatentBox.engine(vae=vae, config=small_cfg())
+        rec = Recipe(seed=11, height=16, width=16)
+        box.put(1, recipe=rec)
+        manual = LatentBox.engine(vae=vae, config=small_cfg())
+        manual.put(1, image=synthesize_image(rec))
+        np.testing.assert_array_equal(box.get(1).payload,
+                                      manual.get(1).payload)
+
+    def test_prewarm_makes_first_read_an_image_hit(self, vae):
+        box = LatentBox.engine(vae=vae, config=small_cfg())
+        box.put(2, recipe=Recipe(seed=5, height=16, width=16), prewarm=True)
+        assert box.get(2).hit_class == IMAGE_HIT
+
+
+class TestHitClassAccounting:
+    def test_tier_walk_progression(self, vae):
+        """cold -> full miss; warm -> latent hits; past h -> image hit."""
+        box = LatentBox.engine(vae=vae, config=small_cfg(promote_threshold=2))
+        fill(box, n=1)
+        classes = [box.get(0).hit_class for _ in range(4)]
+        assert classes[0] == FULL_MISS
+        assert classes[1] == LATENT_HIT
+        # promotion fired on the h-th latent hit; later reads hit pixels
+        assert classes[-1] == IMAGE_HIT
+
+    def test_summary_counts_match_results(self, vae):
+        box = LatentBox.engine(vae=vae, config=small_cfg())
+        fill(box)
+        rng = np.random.default_rng(1)
+        ids = (rng.zipf(1.4, 120) % N_OBJECTS).tolist()
+        results = []
+        for s in range(0, len(ids), 8):
+            results += box.get_many(ids[s:s + 8])
+        s = box.summary()
+        for cls in (IMAGE_HIT, LATENT_HIT, FULL_MISS, REGEN_MISS):
+            assert s[cls] == sum(1 for r in results if r.hit_class == cls)
+        assert s["total"] == len(ids)
+
+    def test_latency_breakdown_populated(self, vae):
+        box = LatentBox.engine(vae=vae, config=small_cfg())
+        fill(box, n=1)
+        r = box.get(0)
+        assert r.latency_ms["fetch"] > 0 and r.latency_ms["decode"] > 0
+        assert r.total_ms >= r.latency_ms["decode"]
+
+
+class TestBackendParity:
+    def test_engine_and_sim_classify_identically(self, vae):
+        """The acceptance property: both backends of the facade report the
+        same hit/miss classification for every request of a shared
+        synthetic trace."""
+        cfg = small_cfg()
+        eng = LatentBox.engine(vae=vae, config=cfg)
+        sim = LatentBox.simulated(small_cfg())
+        for oid in range(N_OBJECTS):
+            rec = Recipe(seed=1000 + oid, height=16, width=16)
+            eng.put(oid, recipe=rec)
+            sim.put(oid, recipe=rec)
+        rng = np.random.default_rng(0)
+        ids = (rng.zipf(1.3, 300) % N_OBJECTS).tolist()
+        eng_cls, sim_cls = [], []
+        for s in range(0, len(ids), 8):
+            w = ids[s:s + 8]
+            eng_cls += [r.hit_class for r in eng.get_many(w)]
+            sim_cls += [r.hit_class for r in sim.get_many(w)]
+        assert eng_cls == sim_cls
+        # and the aggregate accounting agrees
+        es, ss = eng.summary(), sim.summary()
+        for cls in (IMAGE_HIT, LATENT_HIT, FULL_MISS, REGEN_MISS):
+            assert es[cls] == ss[cls]
+
+    def test_parity_survives_demotion(self, vae):
+        cfg = small_cfg()
+        eng = LatentBox.engine(vae=vae, config=cfg)
+        sim = LatentBox.simulated(small_cfg())
+        for box in (eng, sim):
+            fill(box, n=4)
+            for oid in range(4):
+                box.get(oid)
+            assert box.demote(2)
+        ids = [2, 0, 2, 1, 3, 2]
+        ecls = [r.hit_class for r in eng.get_many(ids)]
+        scls = [r.hit_class for r in sim.get_many(ids)]
+        assert ecls == scls
+        assert REGEN_MISS in ecls
+
+    def test_engine_honors_adaptive_false(self, vae):
+        """StoreConfig.adaptive=False must disable the tuner on BOTH
+        backends (a tuner running on only one side would drift alpha and
+        break classification parity)."""
+        eng = LatentBox.engine(vae=vae, config=small_cfg(adaptive=False))
+        sim = LatentBox.simulated(small_cfg(adaptive=False))
+        assert all(t.tuner is None for t in eng.backend.walk.caches)
+        assert all(t.tuner is None for t in sim.backend.walk.caches)
+        fill(eng, n=2)
+        eng.get_many([0, 1, 0, 1])            # no tuner crash on the path
+        assert eng.summary()["alpha"] == [0.5, 0.5]
+
+    def test_sim_closed_loop_latencies_are_deterministic(self):
+        def replay():
+            sim = LatentBox.simulated(small_cfg(
+                store_latency=LatentStore().latency))
+            fill(sim, n=6)
+            rng = np.random.default_rng(3)
+            ids = (rng.integers(0, 6, 60)).tolist()
+            return [r.total_ms for r in sim.get_many(ids)]
+        assert replay() == replay()
+
+
+class TestLifecycle:
+    def test_delete_purges_every_tier(self, vae):
+        box = LatentBox.engine(vae=vae, config=small_cfg())
+        fill(box, n=2)
+        box.get(0), box.get(0)
+        assert box.stat(0) is not None
+        assert box.delete(0)
+        assert box.stat(0) is None and 0 not in box
+        with pytest.raises(KeyError):
+            box.get(0)
+
+    def test_stat_residency_and_meta(self, vae):
+        box = LatentBox.engine(vae=vae, config=small_cfg())
+        box.put(5, recipe=Recipe(seed=9, height=16, width=16),
+                meta={"model": "demo"})
+        st = box.stat(5)
+        assert st.residency == ["durable", "recipe"]
+        assert st.meta == {"model": "demo"}
+        box.get(5)
+        assert any(r.startswith("latent@") for r in box.stat(5).residency)
+
+    def test_demote_then_promote_restores_durability(self, vae):
+        box = LatentBox.engine(vae=vae, config=small_cfg())
+        fill(box, n=1)
+        before = box.get(0).payload
+        assert box.demote(0)
+        assert box.stat(0).demoted
+        assert box.promote(0)
+        st = box.stat(0)
+        assert not st.demoted and "durable" in st.residency
+        r = box.get(0)
+        assert r.hit_class == FULL_MISS and not r.regenerated
+        np.testing.assert_array_equal(r.payload, before)
+
+    def test_demote_without_recipe_refuses(self, vae):
+        box = LatentBox.engine(vae=vae, config=small_cfg())
+        box.put(3, image=synthesize_image(Recipe(seed=2, height=16,
+                                                 width=16)))
+        assert not box.demote(3)        # nothing to regenerate from
+
+
+class TestFailedFetchDoesNotPoison:
+    def test_size_only_object_keeps_classifying_full_miss(self, vae):
+        """A durable entry whose payload can't materialize (size-only
+        registration) must not be admitted to the latent cache by the
+        failed read — the next read must classify FULL_MISS again, not a
+        phantom LATENT_HIT."""
+        from repro.serve.engine import ServingEngine
+        store = LatentStore()
+        store.put_size(1, 640.0)                 # size, no payload
+        eng = ServingEngine(vae, store, small_cfg())
+        for _ in range(2):
+            with pytest.raises(KeyError, match="durable payload"):
+                eng.get(1)
+        assert eng.summary()[FULL_MISS] == 2     # never a latent hit
+        assert all(1 not in n.cache.latent_tier for n in eng.nodes)
+
+
+class TestConfigDedup:
+    def test_theta_alias_raises(self):
+        from repro.serve.engine import EngineConfig
+        with pytest.raises(TypeError, match="promote_threshold"):
+            EngineConfig(theta=4)
+
+    def test_promote_threshold_drives_spillover_bound(self):
+        from repro.serve.engine import EngineConfig
+        cfg = EngineConfig(promote_threshold=7)
+        assert cfg.store_config(1e3, 1e2).promote_threshold == 7
+
+
+class TestStoreLatencySeeding:
+    def test_per_call_seed_is_reorder_stable(self):
+        a, b = LatentStore(seed=4), LatentStore(seed=4)
+        a.put_size(1, 100), a.put_size(2, 100)
+        b.put_size(1, 100), b.put_size(2, 100)
+        # same (oid, seq) pairs, opposite global order -> same samples
+        a1 = a.fetch_ms(1, 0.0, seq=10)
+        a2 = a.fetch_ms(2, 0.0, seq=11)
+        b2 = b.fetch_ms(2, 0.0, seq=11)
+        b1 = b.fetch_ms(1, 0.0, seq=10)
+        assert a1 == b1 and a2 == b2
+
+    def test_shared_stream_is_order_sensitive(self):
+        a, b = LatentStore(seed=4), LatentStore(seed=4)
+        for st in (a, b):
+            st.put_size(1, 100), st.put_size(2, 100)
+        x = [a.fetch_ms(1, 0.0), a.fetch_ms(2, 0.0)]
+        y = [b.fetch_ms(2, 0.0), b.fetch_ms(1, 0.0)]
+        assert x[0] != y[1] or x[1] != y[0]   # shared RNG: order leaks in
+
+    def test_delete_clears_warmth(self):
+        st = LatentStore(seed=0)
+        st.put(1, b"x" * 64)
+        st.fetch_ms(1, 100.0)
+        assert st.stat(1)["last_fetch_s"] == 100.0
+        st.delete(1)
+        assert st.stat(1) is None
+        st.put(1, b"x" * 64)
+        assert st.stat(1)["last_fetch_s"] == float("-inf")   # cold again
