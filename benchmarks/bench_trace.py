@@ -12,7 +12,11 @@ Paper reference points: top1=39%, top10=71%, <10 views=69%, once=15%;
 re-access 38% <1 h, 68% <1 d, 6% >30 d; S3-FIFO ~12% misses at 10%.
 
 ``--smoke`` runs only the facade replay at toy scale (CI exercises the
-put -> tier-walk -> get_many path end-to-end on every push).
+put -> tier-walk -> get_many path end-to-end on every push); ``--smoke
+--shards 2`` additionally replays the identical trace through a sharded
+cluster and asserts shard-conformant classification.  ``--scenario NAME``
+replays one named workload from the scenario suite instead of the
+CompanyX baseline (``--scenario list`` prints the names).
 """
 
 from __future__ import annotations
@@ -25,19 +29,25 @@ from benchmarks.common import Rows, Timer, bench_trace, scale
 from repro.core.policies import BeladyCache, LRUCache, S3FIFOCache, miss_ratio
 from repro.store import (FULL_MISS, IMAGE_HIT, LATENT_HIT, REGEN_MISS,
                          LatentBox, StoreConfig)
-from repro.trace.synth import TraceConfig, generate_trace
+from repro.trace.synth import (TraceConfig, generate_trace, list_scenarios,
+                               make_trace)
 
 
 def facade_replay(ids: np.ndarray, timestamps_ms: np.ndarray,
-                  n_nodes: int = 3, cache_frac: float = 0.05):
+                  n_nodes: int = 3, cache_frac: float = 0.05,
+                  shards: int = 1, label: str = "facade"):
     """Replay a trace slice through the LatentBox facade only; returns
-    ``(rows, summary)``."""
+    ``(rows, summary)``.  ``n_nodes`` is the TOTAL fleet size; with
+    ``shards > 1`` the same fleet is split across a sharded cluster
+    (``n_nodes`` must divide evenly)."""
     rows = Rows()
     wss = int(len(np.unique(ids)))
+    if n_nodes % shards:
+        raise ValueError(f"{shards} shards must evenly split {n_nodes} nodes")
     box = LatentBox.simulated(StoreConfig(
-        n_nodes=n_nodes,
+        n_nodes=n_nodes // shards,
         cache_bytes_per_node=max(wss * 1.4e6 * cache_frac / n_nodes, 2e6),
-        image_bytes=1.4e6, latent_bytes=0.28e6))
+        image_bytes=1.4e6, latent_bytes=0.28e6), shards=shards)
     for oid in np.unique(ids):
         box.put(int(oid))
     with Timer() as t:
@@ -46,14 +56,17 @@ def facade_replay(ids: np.ndarray, timestamps_ms: np.ndarray,
     s = box.summary()
     total = max(s["total"], 1)
     for cls in (IMAGE_HIT, LATENT_HIT, FULL_MISS, REGEN_MISS):
-        rows.add(f"facade.{cls}_frac", t.us / total,
+        rows.add(f"{label}.{cls}_frac", t.us / total,
                  round(s[cls] / total, 4))
-    rows.add("facade.p95_ms", derived=round(s.get("p95_ms", 0.0), 2))
+    rows.add(f"{label}.p95_ms", derived=round(s.get("p95_ms", 0.0), 2))
     return rows, s
 
 
-def smoke() -> Rows:
-    """CI-sized end-to-end pass over the facade (seconds, not minutes)."""
+def smoke(shards: int = 1) -> Rows:
+    """CI-sized end-to-end pass over the facade (seconds, not minutes).
+    With ``shards > 1`` the same trace additionally replays through a
+    sharded cluster and the run asserts conformant classification counts
+    (the cheap half of ``tests/test_shard_conformance.py``)."""
     tr = generate_trace(TraceConfig(n_objects=300, n_requests=4_000,
                                     span_days=3, seed=11))
     ids = tr.object_ids[:2_000]
@@ -63,6 +76,27 @@ def smoke() -> Rows:
                (IMAGE_HIT, LATENT_HIT, FULL_MISS, REGEN_MISS))
     assert s["total"] == len(ids) and hits == s["total"], \
         "hit classes must partition requests"
+    if shards > 1:
+        srows, ss = facade_replay(ids, ts, n_nodes=2 * shards,
+                                  cache_frac=0.05, shards=shards,
+                                  label=f"facade@{shards}shards")
+        rows.extend(srows)
+        urows, us = facade_replay(ids, ts, n_nodes=2 * shards,
+                                  cache_frac=0.05, shards=1,
+                                  label="facade@unsharded")
+        for cls in (IMAGE_HIT, LATENT_HIT, FULL_MISS, REGEN_MISS):
+            assert ss[cls] == us[cls], \
+                f"sharding changed {cls} classification: " \
+                f"{ss[cls]} != {us[cls]}"
+    return rows
+
+
+def scenario_rows(scenario: str, n_requests: int = 200_000) -> Rows:
+    """Replay one named workload through the facade tier walk."""
+    tr = make_trace(scenario, n_objects=max(n_requests // 20, 1000),
+                    n_requests=n_requests, span_days=14, seed=0)
+    rows, _ = facade_replay(tr.object_ids, tr.timestamps * 1e3,
+                            label=f"scenario.{scenario}")
     return rows
 
 
@@ -113,8 +147,20 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="facade-only end-to-end pass at CI scale")
+    ap.add_argument("--shards", type=int, default=1,
+                    help="also replay through a sharded cluster and assert "
+                         "shard-conformant classification (smoke mode)")
+    ap.add_argument("--scenario", default=None,
+                    help="replay one named workload from the scenario "
+                         "suite ('list' prints the names)")
     args = ap.parse_args()
-    (smoke() if args.smoke else run()).print()
+    if args.scenario == "list":
+        print("\n".join(list_scenarios()))
+        return
+    if args.scenario is not None:
+        scenario_rows(args.scenario).print()
+        return
+    (smoke(shards=args.shards) if args.smoke else run()).print()
 
 
 if __name__ == "__main__":

@@ -342,3 +342,15 @@ def replay_cluster(cfg: ClusterConfig, timestamps_s: np.ndarray,
     ts_ms = np.asarray(timestamps_s, dtype=np.float64) * 1e3 / speedup
     log = sim.run(ts_ms, np.asarray(object_ids), limit=limit)
     return log, sim
+
+
+def replay_scenario(cfg: ClusterConfig, scenario: str, speedup: float = 1.0,
+                    limit: Optional[int] = None,
+                    **trace_knobs) -> Tuple[RequestLog, ClusterSim]:
+    """Replay a named workload from the scenario suite
+    (:func:`repro.trace.synth.make_trace`) through the event-driven
+    cluster: ``replay_scenario(cfg, "flash_crowd", n_objects=10_000)``."""
+    from repro.trace.synth import make_trace
+    tr = make_trace(scenario, **trace_knobs)
+    return replay_cluster(cfg, tr.timestamps, tr.object_ids,
+                          speedup=speedup, limit=limit)

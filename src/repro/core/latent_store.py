@@ -41,6 +41,8 @@ class LatentStore:
         self._blobs: Dict[int, bytes] = {}
         self._sizes: Dict[int, float] = {}
         self._last_fetch_s: Dict[int, float] = {}
+        self._epoch: Dict[int, int] = {}    # bumped on delete: re-put objects
+        #                                     draw from a fresh latency stream
         self.n_fetches = 0
         self.bytes_fetched = 0.0
 
@@ -71,11 +73,16 @@ class LatentStore:
         """Remove an object's durable payload AND size record (presence is
         ``size or blob``, so a demoted object must lose both to read as
         absent).  Clears ``_last_fetch_s`` too, so a re-created object
-        starts cold instead of inheriting warmth from a deleted namesake."""
+        starts cold instead of inheriting warmth from a deleted namesake —
+        and bumps the object's latency epoch, so a re-put namesake draws
+        from a fresh per-call seed stream instead of replaying the deleted
+        object's fetch-latency samples."""
         found = oid in self
         self._blobs.pop(oid, None)
         self._sizes.pop(oid, None)
         self._last_fetch_s.pop(oid, None)
+        if found:
+            self._epoch[oid] = self._epoch.get(oid, 0) + 1
         return found
 
     def stat(self, oid: int) -> Optional[Dict[str, float]]:
@@ -87,6 +94,7 @@ class LatentStore:
             "nbytes": self.size_of(oid),
             "has_payload": oid in self._blobs,
             "last_fetch_s": self._last_fetch_s.get(oid, float("-inf")),
+            "epoch": self._epoch.get(oid, 0),
         }
 
     # -- modeled fetch ----------------------------------------------------------
@@ -99,14 +107,18 @@ class LatentStore:
         stream, so the latency an individual request sees depends on global
         request ordering.  Passing a per-call ``seq`` (e.g. the request's
         trace index) draws from an independent stream keyed on
-        ``(store seed, oid, seq)`` instead, making each request's sample
-        reproducible under request reordering.
+        ``(store seed, oid epoch, oid, seq)`` instead, making each
+        request's sample reproducible under request reordering.  The epoch
+        bumps on :meth:`delete`, so deleting and re-putting an object id
+        yields fresh (but still reorder-stable) latencies rather than a
+        replay of the dead object's stream.
         """
         m = self.latency
         warm = (now_s - self._last_fetch_s.get(oid, -np.inf)) <= m.warm_window_s
         median = m.warm_ms if warm else m.cold_ms
         rng = self._rng if seq is None else np.random.default_rng(
-            (self._seed, int(oid) & 0xFFFFFFFF, int(seq)))
+            (self._seed, self._epoch.get(oid, 0),
+             int(oid) & 0xFFFFFFFF, int(seq)))
         base = float(rng.lognormal(np.log(median), m.sigma))
         base = max(base, m.first_byte_floor_ms)
         size = self.size_of(oid) if nbytes is None else float(nbytes)

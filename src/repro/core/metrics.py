@@ -62,6 +62,7 @@ class RequestLog:
             "image_hit_frac": float(np.mean(out == 0)),
             "latent_hit_frac": float(np.mean(out == 1)),
             "full_miss_frac": float(np.mean(out == 2)),
+            "regen_miss_frac": float(np.mean(out == 3)),
             "spill_frac": float(np.mean(self.spilled)) if self.spilled else 0.0,
             "coalesced_frac": float(np.mean(self.coalesced)) if self.coalesced else 0.0,
         }
@@ -73,7 +74,8 @@ class RequestLog:
                             "latency_ms"):
                     v = np.asarray(getattr(self, col))[mask]
                     summary[f"{name}.{col.replace('_ms', '')}_ms"] = float(v.mean())
-        hit_mask = out != 2
+        hit_mask = out < 2               # both miss classes (durable, regen)
+        #                                  pay the slow path; neither is a hit
         if hit_mask.any():
             summary["hit.queue_ms"] = float(
                 np.asarray(self.queue_ms)[hit_mask].mean())

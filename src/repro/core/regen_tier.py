@@ -114,16 +114,31 @@ class RegenTierStore:
         self.n_regens = 0
 
     def put(self, oid: int, latent_bytes: float, now_mo: float = 0.0,
-            recipe: Optional[Recipe] = None) -> None:
+            recipe: Optional[Recipe] = None,
+            recipe_nbytes: Optional[float] = None) -> None:
         self._latents[oid] = latent_bytes
-        self._recipes[oid] = (float(recipe.nbytes) if recipe is not None
-                              else self.policy.recipe_bytes)
+        self._recipes[oid] = (
+            float(recipe_nbytes) if recipe_nbytes is not None
+            else float(recipe.nbytes) if recipe is not None
+            else self.policy.recipe_bytes)
         if recipe is not None:
             self._recipe_payloads[oid] = recipe
         self._last_access_mo[oid] = now_mo
 
     def recipe_of(self, oid: int) -> Optional[Recipe]:
         return self._recipe_payloads.get(oid)
+
+    def recipe_bytes_of(self, oid: int) -> Optional[float]:
+        """Accounted recipe bytes for one object (None: not in this tier);
+        shard migration uses this to move accounting losslessly even for
+        entries registered without a :class:`Recipe` payload."""
+        return self._recipes.get(oid)
+
+    def last_access_mo_of(self, oid: int) -> Optional[float]:
+        """Last recorded access (months); shard migration carries it over
+        so :meth:`run_demotion` never sees a migrated object as
+        maximally idle."""
+        return self._last_access_mo.get(oid)
 
     def __contains__(self, oid: int) -> bool:
         return oid in self._recipes

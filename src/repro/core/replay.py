@@ -132,6 +132,17 @@ def replay(object_ids: np.ndarray, cfg: Optional[ReplayConfig] = None,
         window_alpha=np.asarray(window_alphas))
 
 
+def replay_scenario(scenario: str, cfg: Optional[ReplayConfig] = None,
+                    limit: Optional[int] = None,
+                    **trace_knobs) -> ReplayResult:
+    """Replay a named workload from the scenario suite
+    (:func:`repro.trace.synth.make_trace`) through the cache-only
+    simulator: ``replay_scenario("zipf_drift", n_objects=2_000, ...)``."""
+    from repro.trace.synth import make_trace
+    tr = make_trace(scenario, **trace_knobs)
+    return replay(tr.object_ids, cfg, limit=limit)
+
+
 def sweep_static_alpha(object_ids: np.ndarray, alphas,
                        base: Optional[ReplayConfig] = None,
                        limit: Optional[int] = None

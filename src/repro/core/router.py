@@ -18,6 +18,19 @@ def _hash64(key: str) -> int:
                           "big")
 
 
+def parse_node_index(name: str) -> int:
+    """Parse a ``node<idx>`` ring/router name into a fleet index — the one
+    parse point for the naming convention the engine fleet and the sharded
+    cluster's global namespace both rely on."""
+    if not name.startswith("node"):
+        raise ValueError(f"malformed node name {name!r} (want 'node<idx>')")
+    try:
+        return int(name[4:])
+    except ValueError as e:
+        raise ValueError(
+            f"malformed node name {name!r} (want 'node<idx>')") from e
+
+
 class ConsistentHashRing:
     """Classic ring with virtual nodes; stable under node add/remove so the
     serving fleet can scale elastically with minimal cache-ownership churn."""

@@ -135,6 +135,12 @@ def retarget_tree(tree, mesh: Mesh):
                         is_leaf=lambda x: isinstance(x, P))
 
 
+def batch_pspec(mesh: Mesh, ndim: int = 1) -> P:
+    """Spec for one batch array: leading dim sharded over the data-parallel
+    axes, the remaining ``ndim - 1`` dims replicated."""
+    return P(dp_axes(mesh), *([None] * (max(ndim, 1) - 1)))
+
+
 def batch_pspecs_for(mesh: Mesh, batch_tree):
     """Batch arrays shard their leading dim over the data-parallel axes."""
     dp = dp_axes(mesh)

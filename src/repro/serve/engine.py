@@ -35,6 +35,7 @@ from repro.compression.latentcodec import compress_latent, decompress_latent
 from repro.core.dual_cache import IMAGE_HIT, LATENT_HIT
 from repro.core.latent_store import LatentStore
 from repro.core.regen_tier import Recipe, RegenTierStore, synthesize_image
+from repro.core.router import parse_node_index
 from repro.core.tuner import MarginalHitTuner, TunerConfig
 from repro.store.api import StoreConfig
 from repro.store.tiers import DurableTier, RecipeTier
@@ -97,15 +98,9 @@ class _Node:
         self.latents.pop(oid, None)
 
 
-def _node_index(name: str) -> int:
-    """Parse a ``node<idx>`` ring/router name into a fleet index."""
-    if not name.startswith("node"):
-        raise ValueError(f"malformed node name {name!r} (want 'node<idx>')")
-    try:
-        return int(name[4:])
-    except ValueError as e:
-        raise ValueError(
-            f"malformed node name {name!r} (want 'node<idx>')") from e
+# legacy alias: the parser moved to core.router (the sharded cluster's
+# global namespace relies on it too)
+_node_index = parse_node_index
 
 
 class DecodeBatcher:
@@ -297,7 +292,7 @@ class ServingEngine:
             return False
         z = np.asarray(decompress_latent(blob), np.float32)
         img = np.asarray(self.vae.decode(z[None]))[0]
-        owner = self.nodes[_node_index(self.walk.router.ring.owner(oid))]
+        owner = self.nodes[self.walk._idx[self.walk.router.ring.owner(oid)]]
         owner.cache.insert_image(oid)
         owner.images[oid] = img
         return True

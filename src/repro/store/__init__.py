@@ -13,18 +13,20 @@ request identically; they differ only in how payloads and latencies are
 produced.
 """
 
-from repro.store.api import (GetResult, ObjectStat, PutResult, StoreConfig,
-                             IMAGE_HIT, LATENT_HIT, FULL_MISS, REGEN_MISS)
+from repro.store.api import (GetResult, HIT_CLASSES, ObjectStat, PutResult,
+                             StoreConfig, IMAGE_HIT, LATENT_HIT, FULL_MISS,
+                             REGEN_MISS)
 from repro.store.backends import EngineBackend, SimBackend
 from repro.store.facade import LatentBox
+from repro.store.sharding import ReshardReport, ShardedLatentBox
 from repro.store.tiers import (DualCacheTier, DurableTier, RecipeTier, Tier,
                                TierHit)
 from repro.store.walk import TierWalk, WalkTicket
 
 __all__ = [
     "LatentBox", "StoreConfig", "GetResult", "PutResult", "ObjectStat",
-    "EngineBackend", "SimBackend",
+    "EngineBackend", "SimBackend", "ShardedLatentBox", "ReshardReport",
     "Tier", "TierHit", "DualCacheTier", "DurableTier", "RecipeTier",
     "TierWalk", "WalkTicket",
-    "IMAGE_HIT", "LATENT_HIT", "FULL_MISS", "REGEN_MISS",
+    "IMAGE_HIT", "LATENT_HIT", "FULL_MISS", "REGEN_MISS", "HIT_CLASSES",
 ]

@@ -34,6 +34,13 @@ class StoreConfig:
     """
 
     n_nodes: int = 2
+    #: Explicit node names for the walk's ring (default: ``node0..node{N-1}``).
+    #: A sharded cluster hands each shard a *slice of one global namespace*
+    #: (e.g. shard 1 of a 2x2 fleet gets ``("node2", "node3")``): consistent
+    #: hashing guarantees the owner among a subset of the ring is the global
+    #: owner whenever it lies in that subset, so sharding never moves an
+    #: object to a different node than the unsharded fleet would pick.
+    node_names: Optional[Tuple[str, ...]] = None
     cache_bytes_per_node: float = 64e6
     alpha0: float = 0.5                 # initial image-tier fraction
     tau: float = 0.1                    # tail-segment fraction (tuner signal)
@@ -55,6 +62,13 @@ class StoreConfig:
     store_latency: StoreLatencyModel = dataclasses.field(
         default_factory=StoreLatencyModel)
     seed: int = 0
+
+    def __post_init__(self) -> None:
+        if self.node_names is not None:
+            self.node_names = tuple(self.node_names)
+            if len(set(self.node_names)) != len(self.node_names):
+                raise ValueError(f"duplicate node names: {self.node_names}")
+            self.n_nodes = len(self.node_names)
 
 
 @dataclasses.dataclass

@@ -130,7 +130,7 @@ class SimBackend:
         self.walk = TierWalk(self.cfg, DurableTier(self.store),
                              RecipeTier(self.regen))
         self.gpus = [GpuQueue(self.cfg.gpus_per_node)
-                     for _ in range(self.cfg.n_nodes)]
+                     for _ in self.walk.caches]
         self.clock_ms = 0.0
         self._seq = 0
         self.log = RequestLog()

@@ -38,21 +38,32 @@ class LatentBox:
     # -- constructors --------------------------------------------------------
     @classmethod
     def engine(cls, vae=None, config: Optional[StoreConfig] = None,
-               seed: int = 0) -> "LatentBox":
+               seed: int = 0, shards: int = 1) -> "LatentBox":
         """Real-decode box.  Without an explicit ``vae`` a small demo VAE
-        is built (the paper-scale decoder swaps in transparently)."""
+        is built (the paper-scale decoder swaps in transparently).
+        ``shards > 1`` serves a consistent-hash-sharded cluster of engine
+        backends with ``config.n_nodes`` nodes per shard."""
         from repro.store.backends import EngineBackend
         if vae is None:
             from repro.vae.model import VAE, VAEConfig
             vae = VAE(VAEConfig(name="demo", latent_channels=4,
                                 block_out_channels=(16, 32),
                                 layers_per_block=1, groups=4), seed=seed)
+        if shards > 1:
+            from repro.store.sharding import ShardedLatentBox
+            return cls(ShardedLatentBox.engine(vae, shards, config))
         return cls(EngineBackend(vae, config))
 
     @classmethod
-    def simulated(cls, config: Optional[StoreConfig] = None) -> "LatentBox":
-        """Latency-plant box: identical classifications, modeled latency."""
+    def simulated(cls, config: Optional[StoreConfig] = None,
+                  shards: int = 1) -> "LatentBox":
+        """Latency-plant box: identical classifications, modeled latency.
+        ``shards > 1`` serves a consistent-hash-sharded cluster of sim
+        backends, each with its own GPU plant and tuner state."""
         from repro.store.backends import SimBackend
+        if shards > 1:
+            from repro.store.sharding import ShardedLatentBox
+            return cls(ShardedLatentBox.simulated(shards, config))
         return cls(SimBackend(config))
 
     @property

@@ -1,0 +1,321 @@
+"""``ShardedLatentBox`` — a multi-node LatentBox cluster as one backend.
+
+The paper's fleet serves billions of requests by consistent-hash-placing
+objects across independent store nodes; this module scales the single
+``LatentBox`` backend the same way.  A sharded box owns S *shard backends*
+(each a full :class:`~repro.store.backends.SimBackend` or
+:class:`~repro.store.backends.EngineBackend` with its own GPU plant, caches
+and tuner state) and routes every facade call to the shard that owns the
+object.
+
+The load-bearing design decision is the **global node namespace**: the
+cluster has one flat fleet of nodes ``node0 .. node{S*K-1}`` and one global
+consistent-hash ring over all of them; shard ``s`` simply *hosts* nodes
+``[s*K, (s+1)*K)``, and an object's shard is the shard hosting its
+globally-hashed owner node.  Because the owner among any subset of a
+consistent-hash ring equals the global owner whenever the global owner is
+in that subset, each shard's internal :class:`~repro.store.walk.TierWalk`
+(built over its slice of the namespace via ``StoreConfig.node_names``)
+resolves every object to exactly the node the *unsharded* fleet would pick.
+Two consequences, both locked down by
+``tests/test_shard_conformance.py``:
+
+* **conformance** — per-node request subsequences are identical for any
+  shard count, so a 1-shard and a 4-shard cluster classify every request
+  of every scenario identically (the differential property);
+* **bounded resharding** — adding a shard adds K nodes to the global ring,
+  so only ~K/(N+K) of keys remap (consistent hashing), far below naive
+  mod-N rehashing.
+
+Shard add/remove migrates exactly the remapped keys: durable payload (or
+size registration), recipe payload/accounting, and the demoted flag move;
+cache warmth intentionally does not (a migrated key restarts cold on its
+new shard, as it would in production).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.regen_tier import Recipe
+from repro.core.router import ConsistentHashRing, parse_node_index
+from repro.store.api import GetResult, ObjectStat, PutResult, StoreConfig
+
+#: vnode count shared with the walks' internal :class:`Router` rings — the
+#: subset-owner property needs identical vnode hashing on every ring.
+_VNODES = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class ReshardReport:
+    """Key-movement accounting of one shard add/remove."""
+
+    n_keys: int                      # keys tracked before the reshard
+    n_moved: int                     # keys whose owner shard changed
+    n_shards: int                    # shard count AFTER the reshard
+    shard_id: int                    # the added / removed shard
+
+    @property
+    def moved_fraction(self) -> float:
+        return self.n_moved / self.n_keys if self.n_keys else 0.0
+
+
+@dataclasses.dataclass
+class _Shard:
+    """One shard: a full backend hosting a slice of the node namespace."""
+
+    shard_id: int
+    backend: Any
+    node_names: Tuple[str, ...]
+
+
+_global_node_index = parse_node_index    # names are 'node<global idx>'
+
+
+class ShardedLatentBox:
+    """Consistent-hash placement of objects over N per-shard backends.
+
+    Implements the full backend protocol of the :class:`LatentBox` facade
+    (``put/get_many/delete/demote/promote/stat/summary``), so
+    ``LatentBox.simulated(cfg, shards=4)`` / ``LatentBox.engine(shards=4)``
+    is a drop-in multi-node cluster.  ``config.n_nodes`` is the node count
+    *per shard*.
+    """
+
+    name = "sharded"
+
+    def __init__(self, backend_factory: Callable[[StoreConfig], Any],
+                 n_shards: int, config: Optional[StoreConfig] = None):
+        if n_shards < 1:
+            raise ValueError("need at least one shard")
+        self.cfg = config or StoreConfig()
+        if self.cfg.node_names is not None:
+            raise ValueError("the sharded box owns the node namespace; "
+                             "leave StoreConfig.node_names unset")
+        self._factory = backend_factory
+        self._nodes_per_shard = self.cfg.n_nodes
+        self._next_node = 0
+        self._next_shard_id = 0
+        self.shards: Dict[int, _Shard] = {}
+        self._shard_of_node: Dict[str, int] = {}
+        self.ring = ConsistentHashRing([], vnodes=_VNODES)
+        self._keys: Dict[int, int] = {}          # oid -> owning shard id
+        for _ in range(n_shards):
+            self._spawn_shard()
+
+    # -- constructors --------------------------------------------------------
+    @classmethod
+    def simulated(cls, n_shards: int,
+                  config: Optional[StoreConfig] = None) -> "ShardedLatentBox":
+        from repro.store.backends import SimBackend
+        return cls(SimBackend, n_shards, config)
+
+    @classmethod
+    def engine(cls, vae, n_shards: int,
+               config: Optional[StoreConfig] = None) -> "ShardedLatentBox":
+        """All shards share one ``vae`` instance, so the jitted decode
+        compiles once per batch-bucket shape for the whole cluster."""
+        from repro.store.backends import EngineBackend
+        return cls(lambda cfg: EngineBackend(vae, cfg), n_shards, config)
+
+    # -- topology ------------------------------------------------------------
+    @property
+    def n_shards(self) -> int:
+        return len(self.shards)
+
+    @property
+    def shard_ids(self) -> List[int]:
+        return sorted(self.shards)
+
+    @property
+    def n_nodes(self) -> int:
+        return sum(len(s.node_names) for s in self.shards.values())
+
+    def shard_of(self, oid: int) -> int:
+        """The shard hosting this object's globally-hashed owner node."""
+        return self._shard_of_node[self.ring.owner(int(oid))]
+
+    def _spawn_shard(self) -> _Shard:
+        k = self._nodes_per_shard
+        names = tuple(f"node{self._next_node + i}" for i in range(k))
+        self._next_node += k
+        sid = self._next_shard_id
+        self._next_shard_id += 1
+        cfg = dataclasses.replace(self.cfg, node_names=names)
+        shard = _Shard(sid, self._factory(cfg), names)
+        self.shards[sid] = shard
+        for n in names:
+            self.ring.add_node(n)
+            self._shard_of_node[n] = sid
+        return shard
+
+    # -- elastic resharding --------------------------------------------------
+    def add_shard(self) -> ReshardReport:
+        """Grow the cluster by one shard (K fresh global nodes); migrates
+        exactly the keys whose ring owner moved onto the new nodes."""
+        shard = self._spawn_shard()
+        moved = self._migrate_remapped()
+        return ReshardReport(n_keys=len(self._keys), n_moved=moved,
+                             n_shards=self.n_shards, shard_id=shard.shard_id)
+
+    def remove_shard(self, shard_id: int) -> ReshardReport:
+        """Drain and drop one shard: its nodes leave the global ring and
+        every key it owned migrates to the key's new owner shard."""
+        if shard_id not in self.shards:
+            raise KeyError(f"no shard {shard_id}")
+        if self.n_shards == 1:
+            raise ValueError("cannot remove the last shard")
+        victim = self.shards[shard_id]
+        for n in victim.node_names:
+            self.ring.remove_node(n)
+            del self._shard_of_node[n]
+        moved = self._migrate_remapped()
+        del self.shards[shard_id]
+        return ReshardReport(n_keys=len(self._keys), n_moved=moved,
+                             n_shards=self.n_shards, shard_id=shard_id)
+
+    def _migrate_remapped(self) -> int:
+        moved = 0
+        for oid, old_sid in list(self._keys.items()):
+            new_sid = self.shard_of(oid)
+            if new_sid == old_sid:
+                continue
+            self._move(oid, self.shards[old_sid].backend,
+                       self.shards[new_sid].backend)
+            self._keys[oid] = new_sid
+            moved += 1
+        return moved
+
+    @staticmethod
+    def _move(oid: int, src, dst) -> None:
+        """Move one object's durable/recipe state between shard backends.
+
+        Cache residency and store warmth do NOT move: the key restarts
+        cold at its new home, exactly like a production reshard.
+        """
+        st = src.store.stat(oid)
+        blob = src.store.get(oid)
+        recipe: Optional[Recipe] = src.regen.recipe_of(oid)
+        recipe_nbytes = src.regen.recipe_bytes_of(oid)
+        last_access_mo = src.regen.last_access_mo_of(oid)
+        demoted = src.regen.is_demoted(oid)
+        nbytes = st["nbytes"] if st else 0.0
+        src.delete(oid)
+        if st is not None:
+            if blob is not None:
+                dst.store.put(oid, blob)
+            else:
+                dst.store.put_size(oid, nbytes)
+        if recipe_nbytes is not None:
+            dst.regen.put(oid, nbytes, recipe=recipe,
+                          recipe_nbytes=recipe_nbytes,
+                          now_mo=last_access_mo or 0.0)
+            if demoted:
+                dst.regen.demote(oid)
+
+    # -- backend protocol ----------------------------------------------------
+    def put(self, oid: int, image=None, latent=None,
+            recipe: Optional[Recipe] = None, nbytes: Optional[float] = None,
+            prewarm: bool = False) -> PutResult:
+        sid = self.shard_of(oid)
+        res = self.shards[sid].backend.put(
+            int(oid), image=image, latent=latent, recipe=recipe,
+            nbytes=nbytes, prewarm=prewarm)
+        self._keys[int(oid)] = sid
+        return res
+
+    def get_many(self, oids: Sequence[int],
+                 timestamps_ms: Optional[Sequence[float]] = None
+                 ) -> List[GetResult]:
+        """Scatter a request window to the owning shards (order preserved
+        within each shard) and gather results back into request order,
+        with node indices remapped into the global namespace."""
+        groups: Dict[int, List[int]] = {}
+        for k, oid in enumerate(oids):
+            groups.setdefault(self.shard_of(oid), []).append(k)
+        out: List[Optional[GetResult]] = [None] * len(oids)
+        for sid, idxs in groups.items():
+            shard = self.shards[sid]
+            sub = [int(oids[k]) for k in idxs]
+            ts = ([float(timestamps_ms[k]) for k in idxs]
+                  if timestamps_ms is not None else None)
+            for k, r in zip(idxs,
+                            shard.backend.get_many(sub, timestamps_ms=ts)):
+                r.node = _global_node_index(shard.node_names[r.node])
+                if r.exec_node >= 0:
+                    r.exec_node = _global_node_index(
+                        shard.node_names[r.exec_node])
+                out[k] = r
+        return out  # type: ignore[return-value]
+
+    def delete(self, oid: int) -> bool:
+        self._keys.pop(int(oid), None)
+        return self.shards[self.shard_of(oid)].backend.delete(int(oid))
+
+    def demote(self, oid: int) -> bool:
+        return self.shards[self.shard_of(oid)].backend.demote(int(oid))
+
+    def promote(self, oid: int) -> bool:
+        return self.shards[self.shard_of(oid)].backend.promote(int(oid))
+
+    def stat(self, oid: int) -> Optional[ObjectStat]:
+        return self.shards[self.shard_of(oid)].backend.stat(int(oid))
+
+    # -- introspection -------------------------------------------------------
+    def residency_shards(self, oid: int) -> List[int]:
+        """Every shard holding ANY residency for ``oid`` — the conformance
+        harness asserts this is at most the one owning shard (no
+        cross-shard key leakage)."""
+        return [sid for sid in self.shard_ids
+                if self.shards[sid].backend.stat(int(oid)) is not None]
+
+    def shard_summaries(self) -> Dict[int, Dict[str, Any]]:
+        return {sid: self.shards[sid].backend.summary()
+                for sid in self.shard_ids}
+
+    _SUMMED = ("image_hit", "latent_hit", "full_miss", "regen_miss",
+               "spilled", "total", "cache_resident_bytes", "durable_bytes",
+               "recipe_bytes", "decode_batches", "decodes",
+               "coalesced_decodes")
+
+    def summary(self) -> Dict[str, Any]:
+        """Cluster-level stats: additive counters sum across shards, alpha
+        reports per node in global order, hit fractions recompute from the
+        summed counts (``shard_summaries()`` keeps the per-shard view)."""
+        per = [self.shards[sid].backend.summary() for sid in self.shard_ids]
+        out: Dict[str, Any] = {"n_shards": self.n_shards,
+                               "n_nodes": self.n_nodes}
+        for key in self._SUMMED:
+            vals = [s[key] for s in per if key in s]
+            if vals:
+                out[key] = type(vals[0])(sum(vals))
+        out["alpha"] = [a for s in per for a in s.get("alpha", [])]
+        if "sim_clock_ms" in per[0]:
+            out["sim_clock_ms"] = max(s["sim_clock_ms"] for s in per)
+        total = out.get("total", 0)
+        if total:
+            out["image_hit_frac"] = out["image_hit"] / total
+            out["decode_frac"] = 1.0 - out["image_hit_frac"]
+        out.update(self._latency_stats())
+        return out
+
+    def _latency_stats(self) -> Dict[str, float]:
+        """Exact cluster-level latency stats from the union of the shard
+        backends' request logs (percentiles cannot be aggregated from
+        per-shard summaries).  Empty for backends without a log (engine)."""
+        lats: List[float] = []
+        for sid in self.shard_ids:
+            log = getattr(self.shards[sid].backend, "log", None)
+            if log is None:
+                return {}
+            lats.extend(log.latency_ms)
+        if not lats:
+            return {}
+        arr = np.asarray(lats)
+        return {"mean_ms": float(arr.mean()),
+                "p50_ms": float(np.percentile(arr, 50)),
+                "p95_ms": float(np.percentile(arr, 95)),
+                "p99_ms": float(np.percentile(arr, 99))}

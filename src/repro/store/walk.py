@@ -48,6 +48,9 @@ class TierWalk:
     def __init__(self, cfg: StoreConfig, durable: DurableTier,
                  recipes: Optional[RecipeTier] = None):
         self.cfg = cfg
+        names = (list(cfg.node_names) if cfg.node_names is not None
+                 else [f"node{i}" for i in range(cfg.n_nodes)])
+        self.node_names = names
         self.caches: List[DualCacheTier] = [
             DualCacheTier(cfg.cache_bytes_per_node, alpha=cfg.alpha0,
                           tau=cfg.tau,
@@ -55,11 +58,10 @@ class TierWalk:
                           image_bytes=cfg.image_bytes,
                           latent_bytes=cfg.latent_bytes,
                           adaptive=cfg.adaptive, tuner=cfg.tuner,
-                          name=f"cache@node{i}")
-            for i in range(cfg.n_nodes)]
+                          name=f"cache@{name}")
+            for name in names]
         self.durable = durable
         self.recipes = recipes
-        names = [f"node{i}" for i in range(cfg.n_nodes)]
         self.router = Router(names, theta=cfg.promote_threshold)
         self._idx: Dict[str, int] = {n: i for i, n in enumerate(names)}
         self.counts: Dict[str, int] = {
@@ -87,12 +89,12 @@ class TierWalk:
 
         # decode required: pick the execution node (spillover w/ pinning)
         exec_node, spilled = owner, False
-        if depth_of is not None and self.cfg.n_nodes > 1:
+        if depth_of is not None and len(self.caches) > 1:
             for name, i in self._idx.items():
                 self.router.report_depth(name, depth_of(i))
             if depth_of(owner) > self.router.theta:
                 cand = self._idx[self.router.least_loaded(
-                    exclude=f"node{owner}")]
+                    exclude=self.node_names[owner])]
                 if depth_of(cand) < depth_of(owner):
                     exec_node, spilled = cand, True
                     self.counts["spilled"] += 1
@@ -160,7 +162,7 @@ class TierWalk:
         for i, tier in enumerate(self.caches):
             where = tier.cache.contains(oid)
             if where is not None:
-                out.append(f"{where}@node{i}")
+                out.append(f"{where}@{self.node_names[i]}")
         if self.durable.contains(oid):
             out.append("durable")
         if self.recipes is not None and self.recipes.contains(oid):

@@ -1,3 +1,5 @@
-from repro.trace.synth import SyntheticTrace, TraceConfig, generate_trace
+from repro.trace.synth import (SCENARIOS, SyntheticTrace, TraceConfig,
+                               generate_trace, list_scenarios, make_trace)
 
-__all__ = ["SyntheticTrace", "TraceConfig", "generate_trace"]
+__all__ = ["SCENARIOS", "SyntheticTrace", "TraceConfig", "generate_trace",
+           "list_scenarios", "make_trace"]

@@ -16,12 +16,17 @@ Construction: objects are born over the trace window with slowly growing
 intensity; each object gets a Zipf lifetime weight and its accesses are
 placed at post-birth ages drawn from a truncated Lomax (power-law) decay.
 Everything is vectorized numpy; ~5 M requests generate in a few seconds.
+
+Beyond the stationary baseline, :func:`make_trace` exposes a suite of
+named scenarios (diurnal load cycle, flash-crowd spike, Zipf-popularity
+drift, sequential scan, multi-tenant mix) that stress the cache/tuner in
+ways a single Zipf stream cannot — see :data:`SCENARIOS`.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional
+from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
@@ -153,6 +158,212 @@ def _sample_lomax_trunc(a0_s: float, beta: float, max_age_s: np.ndarray,
     u = rng.random(len(max_age_s)) * fmax
     a = a0_s * ((1.0 - u) ** (1.0 / (1.0 - beta)) - 1.0)
     return np.clip(a, 0.0, max_age_s)
+
+
+def _finalize(timestamps: np.ndarray, object_ids: np.ndarray,
+              n_objects: int, model_ids: Optional[np.ndarray],
+              birth_time: Optional[np.ndarray],
+              cfg: TraceConfig) -> SyntheticTrace:
+    """Sort a (timestamps, ids) pair into a SyntheticTrace, filling the
+    per-object arrays scenarios don't model (births at t=0, one model)."""
+    order = np.argsort(timestamps, kind="stable")
+    if birth_time is None:
+        birth_time = np.zeros(n_objects, dtype=np.float64)
+    if model_ids is None:
+        model_ids = np.zeros(n_objects, dtype=np.int32)
+    return SyntheticTrace(np.asarray(timestamps, np.float64)[order],
+                          np.asarray(object_ids, np.int64)[order],
+                          birth_time, model_ids, cfg)
+
+
+def _zipf_choice(n_objects: int, n_requests: int, alpha: float,
+                 rng: np.random.Generator,
+                 weights: Optional[np.ndarray] = None) -> np.ndarray:
+    w = _zipf_weights(n_objects, alpha, rng) if weights is None else weights
+    return rng.choice(n_objects, size=n_requests, p=w).astype(np.int64)
+
+
+# ---------------------------------------------------------------------------
+# named scenarios — the workload suite beyond the stationary CompanyX trace
+# ---------------------------------------------------------------------------
+
+def _scenario_companyx(cfg: TraceConfig, rng: np.random.Generator,
+                       **_kw) -> SyntheticTrace:
+    """The paper-calibrated stationary baseline (O1-O4)."""
+    return generate_trace(cfg)
+
+
+def _scenario_diurnal(cfg: TraceConfig, rng: np.random.Generator,
+                      amplitude: float = 0.8, period_days: float = 1.0,
+                      **_kw) -> SyntheticTrace:
+    """Daily load cycle: arrival intensity lambda(t) = 1 + A sin(2 pi t/P)
+    over Zipf-popular objects.  Sampled by inverting the cumulative
+    intensity on a dense grid (exact up to grid resolution)."""
+    span_s = cfg.span_days * DAY_S
+    period_s = period_days * DAY_S
+    a = float(np.clip(amplitude, 0.0, 1.0))
+    grid = np.linspace(0.0, span_s, 8192)
+    cum = grid + a * (period_s / (2 * np.pi)) * (
+        1.0 - np.cos(2 * np.pi * grid / period_s))
+    u = np.sort(rng.random(cfg.n_requests)) * cum[-1]
+    ts = np.interp(u, cum, grid)
+    ids = _zipf_choice(cfg.n_objects, cfg.n_requests, cfg.zipf_alpha, rng)
+    return _finalize(ts, ids, cfg.n_objects, None, None, cfg)
+
+
+def _scenario_flash_crowd(cfg: TraceConfig, rng: np.random.Generator,
+                          spike_start_frac: float = 0.5,
+                          spike_dur_frac: float = 0.05,
+                          spike_frac: float = 0.3,
+                          n_viral: int = 8, **_kw) -> SyntheticTrace:
+    """Steady Zipf background plus a short spike in which ``spike_frac`` of
+    all requests hammer ``n_viral`` previously-cold objects (a post going
+    viral).  The viral objects are born at the spike start."""
+    if cfg.n_objects < 2:
+        raise ValueError("flash_crowd needs >= 2 objects (a viral set and "
+                         "a background population)")
+    span_s = cfg.span_days * DAY_S
+    n_spike = int(cfg.n_requests * spike_frac)
+    n_base = cfg.n_requests - n_spike
+    n_viral = min(n_viral, cfg.n_objects - 1)   # keep background mass > 0
+    # background avoids the viral ids so they are genuinely cold pre-spike
+    w = _zipf_weights(cfg.n_objects, cfg.zipf_alpha, rng)
+    viral = np.arange(cfg.n_objects - n_viral, cfg.n_objects, dtype=np.int64)
+    w[viral] = 0.0
+    w /= w.sum()
+    base_ids = _zipf_choice(cfg.n_objects, n_base, cfg.zipf_alpha, rng,
+                            weights=w)
+    base_ts = rng.random(n_base) * span_s
+    t0 = spike_start_frac * span_s
+    dur = max(spike_dur_frac * span_s, 1.0)
+    spike_ids = viral[rng.integers(0, n_viral, size=n_spike)]
+    spike_ts = t0 + rng.random(n_spike) * dur
+    ts = np.concatenate([base_ts, spike_ts])
+    ids = np.concatenate([base_ids, spike_ids])
+    births = np.zeros(cfg.n_objects)
+    births[viral] = t0
+    return _finalize(ts, ids, cfg.n_objects, None, births, cfg)
+
+
+def _scenario_zipf_drift(cfg: TraceConfig, rng: np.random.Generator,
+                         n_phases: int = 2, **_kw) -> SyntheticTrace:
+    """Popularity drift: the span splits into ``n_phases`` equal phases and
+    the Zipf rank order flips between consecutive phases (phase 1's hottest
+    objects become phase 2's coldest).  The marginal-hit tuner must
+    re-converge after each flip — ``tests/test_tuner.py`` locks that in."""
+    span_s = cfg.span_days * DAY_S
+    ranks = np.arange(1, cfg.n_objects + 1, dtype=np.float64)
+    w = ranks ** (-cfg.zipf_alpha)
+    perm = rng.permutation(cfg.n_objects)       # id -> rank decoupling
+    per_phase = np.array_split(np.arange(cfg.n_requests), n_phases)
+    ts_parts, id_parts = [], []
+    for p, idx in enumerate(per_phase):
+        wp = w if p % 2 == 0 else w[::-1]       # the popularity flip
+        weights = np.empty(cfg.n_objects)
+        weights[perm] = wp / wp.sum()
+        id_parts.append(_zipf_choice(cfg.n_objects, len(idx),
+                                     cfg.zipf_alpha, rng, weights=weights))
+        lo, hi = p / n_phases, (p + 1) / n_phases
+        ts_parts.append((lo + rng.random(len(idx)) * (hi - lo)) * span_s)
+    return _finalize(np.concatenate(ts_parts), np.concatenate(id_parts),
+                     cfg.n_objects, None, None, cfg)
+
+
+def _scenario_scan(cfg: TraceConfig, rng: np.random.Generator,
+                   passes: Optional[int] = None, **_kw) -> SyntheticTrace:
+    """Sequential sweep over the whole object space (batch re-encode /
+    integrity audit): the cache-adversarial workload — every request is
+    maximally far from its previous access.  Default: exactly
+    ``n_requests`` requests (the last pass may be partial); with an
+    explicit ``passes`` the trace is exactly ``passes * n_objects``."""
+    if passes is None:
+        n_total = cfg.n_requests
+    else:
+        n_total = int(passes) * cfg.n_objects
+    n_passes = -(-n_total // cfg.n_objects)          # ceil
+    ids = np.tile(np.arange(cfg.n_objects, dtype=np.int64),
+                  n_passes)[:n_total]
+    ts = np.linspace(0.0, cfg.span_days * DAY_S, len(ids), endpoint=False)
+    return _finalize(ts, ids, cfg.n_objects, None, None, cfg)
+
+
+def _scenario_multi_tenant(cfg: TraceConfig, rng: np.random.Generator,
+                           n_tenants: int = 4,
+                           tenant_alphas: Optional[Sequence[float]] = None,
+                           tenant_share_alpha: float = 1.0,
+                           **_kw) -> SyntheticTrace:
+    """T tenants with disjoint object pools: tenant traffic shares follow a
+    Zipf over tenants, and each tenant has its own per-pool skew (some
+    tenants serve one viral asset, others a flat archive).  ``model_ids``
+    carries the owning tenant of every object."""
+    n_tenants = max(1, min(n_tenants, cfg.n_objects))
+    if tenant_alphas is None:
+        # spread skews from heavy (first tenant) to near-uniform (last)
+        tenant_alphas = np.linspace(cfg.zipf_alpha + 0.3, 0.2, n_tenants)
+    pools = np.array_split(np.arange(cfg.n_objects, dtype=np.int64),
+                           n_tenants)
+    shares = np.arange(1, n_tenants + 1, dtype=np.float64) \
+        ** (-tenant_share_alpha)
+    shares /= shares.sum()
+    tenant_of_req = rng.choice(n_tenants, size=cfg.n_requests, p=shares)
+    ids = np.empty(cfg.n_requests, dtype=np.int64)
+    for t in range(n_tenants):
+        mask = tenant_of_req == t
+        pool = pools[t]
+        local = _zipf_choice(len(pool), int(mask.sum()),
+                             float(tenant_alphas[t]), rng)
+        ids[mask] = pool[local]
+    ts = rng.random(cfg.n_requests) * cfg.span_days * DAY_S
+    model_ids = np.empty(cfg.n_objects, dtype=np.int32)
+    for t, pool in enumerate(pools):
+        model_ids[pool] = t
+    return _finalize(ts, ids, cfg.n_objects, model_ids, None, cfg)
+
+
+#: Named workloads of the scenario suite.  Every generator takes
+#: ``(TraceConfig, rng, **knobs)`` and returns a :class:`SyntheticTrace`;
+#: ``make_trace`` is the one public entry point.
+SCENARIOS = {
+    "companyx": _scenario_companyx,
+    "diurnal": _scenario_diurnal,
+    "flash_crowd": _scenario_flash_crowd,
+    "zipf_drift": _scenario_zipf_drift,
+    "scan": _scenario_scan,
+    "multi_tenant": _scenario_multi_tenant,
+}
+
+
+def list_scenarios() -> List[str]:
+    return sorted(SCENARIOS)
+
+
+def make_trace(scenario: str = "companyx",
+               config: Optional[TraceConfig] = None,
+               n_objects: Optional[int] = None,
+               n_requests: Optional[int] = None,
+               span_days: Optional[float] = None,
+               seed: Optional[int] = None,
+               **knobs) -> SyntheticTrace:
+    """Generate a named workload: ``make_trace("flash_crowd", n_objects=...)``.
+
+    The common size knobs override ``config`` fields; scenario-specific
+    knobs (``amplitude``, ``spike_frac``, ``n_phases``, ``passes``,
+    ``n_tenants``, ...) pass through to the generator.  Consumed by
+    ``core/replay.py``, ``core/cluster.py``, ``benchmarks/bench_trace.py``
+    and the shard-conformance harness.
+    """
+    if scenario not in SCENARIOS:
+        raise KeyError(f"unknown scenario {scenario!r}; "
+                       f"pick one of {list_scenarios()}")
+    cfg = config or TraceConfig()
+    overrides = {k: v for k, v in (("n_objects", n_objects),
+                                   ("n_requests", n_requests),
+                                   ("span_days", span_days),
+                                   ("seed", seed)) if v is not None}
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    rng = np.random.default_rng(cfg.seed)
+    return SCENARIOS[scenario](cfg, rng, **knobs)
 
 
 def generate_trace(config: Optional[TraceConfig] = None) -> SyntheticTrace:

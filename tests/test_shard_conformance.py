@@ -1,0 +1,271 @@
+"""Differential conformance harness for the sharded LatentBox cluster.
+
+Every scenario of the workload suite replays through {1-shard, 4-shard} x
+{SimBackend, EngineBackend} cells built over the SAME global node fleet
+(8 nodes: 1x8 vs 4x2).  Because a shard's tier walk runs over its slice of
+one global node namespace, consistent hashing guarantees sharding never
+changes an object's owner node — so every cell must produce the identical
+per-request (hit class, owner node) signature.  On top of the differential
+matrix the harness locks down zero cross-shard key leakage, bounded key
+remap on elastic reshard (<= 2/N for a single-shard add), and that the
+cluster-level ``summary`` equals the sum of per-shard stats.
+
+The full 4-cell x all-scenarios matrix is ``@pytest.mark.slow`` (scheduled
+CI); push CI runs the sim matrix plus one engine smoke cell.
+"""
+
+import numpy as np
+import pytest
+
+from conftest import (classify, conformance_config, fill_and_demote,
+                      make_box)
+from repro.store import (FULL_MISS, IMAGE_HIT, LATENT_HIT, REGEN_MISS,
+                         LatentBox, ShardedLatentBox)
+from repro.trace.synth import list_scenarios, make_trace
+
+N_OBJECTS = 24
+N_REQUESTS = 240
+TOTAL_NODES = 8
+SHARD_COUNTS = (1, 4)
+COUNTER_KEYS = (IMAGE_HIT, LATENT_HIT, FULL_MISS, REGEN_MISS,
+                "spilled", "total")
+
+
+def scenario_ids(name: str):
+    tr = make_trace(name, n_objects=N_OBJECTS, n_requests=N_REQUESTS,
+                    span_days=2.0, seed=7)
+    return tr.object_ids, tr.timestamps * 1e3
+
+
+def run_cell(kind: str, shards: int, ids, vae=None):
+    box = make_box(kind, shards, TOTAL_NODES, vae=vae)
+    fill_and_demote(box, N_OBJECTS)
+    return classify(box, ids), box
+
+
+@pytest.mark.parametrize("scenario", list_scenarios())
+class TestSimShardingInvariance:
+    """Fast half of the matrix: {1,4} shards on the simulator backend."""
+
+    def test_classification_and_owner_identical(self, scenario):
+        ids, _ = scenario_ids(scenario)
+        sig1, _ = run_cell("sim", 1, ids)
+        sig4, _ = run_cell("sim", 4, ids)
+        assert sig1 == sig4
+
+    def test_open_loop_replay_identical(self, scenario):
+        """Same property under timestamped (open-loop) replay."""
+        ids, ts = scenario_ids(scenario)
+        out = []
+        for shards in SHARD_COUNTS:
+            box = make_box("sim", shards, TOTAL_NODES)
+            fill_and_demote(box, N_OBJECTS)
+            rs = box.get_many([int(i) for i in ids],
+                              timestamps_ms=ts.tolist())
+            out.append([(r.hit_class, r.node) for r in rs])
+        assert out[0] == out[1]
+
+    def test_aggregate_stat_is_sum_of_shards(self, scenario):
+        ids, _ = scenario_ids(scenario)
+        _, box = run_cell("sim", 4, ids)
+        agg = box.summary()
+        per = box.backend.shard_summaries()
+        assert len(per) == 4
+        for key in COUNTER_KEYS:
+            assert agg[key] == sum(s[key] for s in per.values()), key
+        assert agg["cache_resident_bytes"] == pytest.approx(
+            sum(s["cache_resident_bytes"] for s in per.values()))
+        assert agg["durable_bytes"] == pytest.approx(
+            sum(s["durable_bytes"] for s in per.values()))
+        assert len(agg["alpha"]) == TOTAL_NODES
+
+    def test_no_cross_shard_key_leakage(self, scenario):
+        ids, _ = scenario_ids(scenario)
+        _, box = run_cell("sim", 4, ids)
+        cluster: ShardedLatentBox = box.backend
+        for oid in range(N_OBJECTS):
+            holders = cluster.residency_shards(oid)
+            assert holders == [cluster.shard_of(oid)], \
+                f"object {oid} leaked to shards {holders}"
+
+
+class TestEngineShardingSmoke:
+    """One engine cell on every push: the 4-cell matrix on one scenario."""
+
+    def test_four_cells_agree(self, tiny_vae):
+        ids, _ = scenario_ids("flash_crowd")
+        ref, _ = run_cell("sim", 1, ids)
+        for kind, shards in (("sim", 4), ("engine", 1), ("engine", 4)):
+            sig, _ = run_cell(kind, shards, ids, vae=tiny_vae)
+            assert sig == ref, f"{kind}@{shards} diverged"
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("scenario", list_scenarios())
+class TestFullDifferentialMatrix:
+    """The acceptance matrix: {1,4} shards x {sim, engine} x all scenarios
+    must agree on every request's (hit class, owner node) — and on the
+    aggregate hit-class accounting."""
+
+    def test_matrix(self, scenario, tiny_vae):
+        ids, _ = scenario_ids(scenario)
+        cells = {}
+        for kind in ("sim", "engine"):
+            for shards in SHARD_COUNTS:
+                cells[(kind, shards)] = run_cell(kind, shards, ids,
+                                                 vae=tiny_vae)
+        ref_sig, ref_box = cells[("sim", 1)]
+        ref_sum = ref_box.summary()
+        for key, (sig, box) in cells.items():
+            assert sig == ref_sig, f"{key} diverged from sim@1"
+            s = box.summary()
+            for cls in (IMAGE_HIT, LATENT_HIT, FULL_MISS, REGEN_MISS):
+                assert s[cls] == ref_sum[cls], (key, cls)
+
+
+class TestElasticResharding:
+    def _loaded_cluster(self, n_keys=2000, shards=4):
+        box = make_box("sim", shards, TOTAL_NODES)
+        for oid in range(n_keys):
+            box.put(oid)
+        return box, box.backend
+
+    def test_single_shard_add_moves_bounded_fraction(self):
+        box, cluster = self._loaded_cluster()
+        before = {oid: cluster.shard_of(oid) for oid in range(2000)}
+        rep = cluster.add_shard()
+        assert rep.n_keys == 2000 and rep.n_shards == 5
+        # consistent hashing: ~1/N of keys remap; 2/N is the hard bound
+        assert 0 < rep.moved_fraction <= 2 / rep.n_shards
+        # every moved key landed on the new shard; nothing else moved
+        for oid in range(2000):
+            now = cluster.shard_of(oid)
+            if now != before[oid]:
+                assert now == rep.shard_id
+        assert rep.n_moved == sum(
+            1 for oid in range(2000) if cluster.shard_of(oid) != before[oid])
+
+    def test_reshard_keeps_every_key_readable_and_leak_free(self):
+        box, cluster = self._loaded_cluster(n_keys=300)
+        box.get_many(list(range(300)))            # warm some cache state
+        rep = cluster.add_shard()
+        rs = box.get_many(list(range(300)))
+        assert len(rs) == 300
+        assert all(r.hit_class in (IMAGE_HIT, LATENT_HIT, FULL_MISS)
+                   for r in rs)
+        for oid in range(300):
+            assert cluster.residency_shards(oid) == [cluster.shard_of(oid)]
+        assert rep.n_moved > 0
+
+    def test_remove_shard_drains_exactly_its_keys(self):
+        box, cluster = self._loaded_cluster(n_keys=1000)
+        victim = cluster.shard_ids[-1]
+        owned = [oid for oid in range(1000) if cluster.shard_of(oid) == victim]
+        rep = cluster.remove_shard(victim)
+        assert rep.n_moved == len(owned) and rep.n_shards == 3
+        assert victim not in cluster.shard_ids
+        rs = box.get_many(list(range(1000)))
+        assert len(rs) == 1000
+        for oid in owned[:50]:
+            assert cluster.residency_shards(oid) == [cluster.shard_of(oid)]
+
+    def test_remove_last_shard_refuses(self):
+        cluster = ShardedLatentBox.simulated(1, conformance_config(2))
+        with pytest.raises(ValueError, match="last shard"):
+            cluster.remove_shard(cluster.shard_ids[0])
+
+    def test_migration_preserves_demotion_and_recipes(self):
+        from repro.core.regen_tier import Recipe
+        box, cluster = self._loaded_cluster(n_keys=0)
+        n = 80
+        for oid in range(n):
+            box.put(oid, recipe=Recipe(seed=oid, height=16, width=16))
+            assert box.demote(oid)
+        before = {oid: cluster.shard_of(oid) for oid in range(n)}
+        rep = cluster.add_shard()
+        moved = [oid for oid in range(n) if cluster.shard_of(oid) != before[oid]]
+        assert moved and rep.n_moved == len(moved)
+        for oid in moved:
+            st = box.stat(oid)
+            assert st.demoted and st.residency == ["recipe"]
+            assert st.recipe_bytes > 0
+        # a read regenerates on the new shard, exactly like before the move
+        r = box.get(moved[0])
+        assert r.hit_class == REGEN_MISS and r.regenerated
+
+    def test_migration_preserves_last_access_time(self):
+        """A migrated object must not look maximally idle to the demotion
+        sweep on its new shard."""
+        from repro.core.regen_tier import Recipe
+        box, cluster = self._loaded_cluster(n_keys=0)
+        n = 60
+        for oid in range(n):
+            box.put(oid, recipe=Recipe(seed=oid, height=16, width=16))
+        # stamp a recent access on every shard's regen tier
+        for sid in cluster.shard_ids:
+            regen = cluster.shards[sid].backend.regen
+            for oid in range(n):
+                if oid in regen:
+                    regen._last_access_mo[oid] = 11.0
+        before = {oid: cluster.shard_of(oid) for oid in range(n)}
+        cluster.add_shard()
+        moved = [oid for oid in range(n)
+                 if cluster.shard_of(oid) != before[oid]]
+        assert moved
+        new_shard = cluster.shards[cluster.shard_of(moved[0])].backend
+        for oid in moved:
+            assert new_shard.regen.last_access_mo_of(oid) == 11.0
+        # demotion sweep 1 month later: nothing migrated is 6-months idle
+        assert new_shard.regen.run_demotion(12.0, age_override_mo=6.0) == 0
+
+    def test_engine_payloads_survive_migration(self, tiny_vae):
+        """Real pixel bit-identity across a reshard: the durable blob moves
+        with the key, so the new shard decodes the exact same image."""
+        from repro.core.regen_tier import Recipe
+        box = make_box("engine", 2, 4, vae=tiny_vae)
+        cluster = box.backend
+        n = 24
+        for oid in range(n):
+            box.put(oid, recipe=Recipe(seed=500 + oid, height=16, width=16))
+        baseline = {oid: box.get(oid).payload for oid in range(n)}
+        before = {oid: cluster.shard_of(oid) for oid in range(n)}
+        cluster.add_shard()
+        moved = [oid for oid in range(n) if cluster.shard_of(oid) != before[oid]]
+        assert moved, "no key moved — enlarge n"
+        for oid in moved:
+            r = box.get(oid)
+            assert r.hit_class == FULL_MISS      # cold on the new shard
+            np.testing.assert_array_equal(r.payload, baseline[oid])
+
+
+class TestShardedFacadeSurface:
+    """The facade surface works transparently over shards."""
+
+    def test_lifecycle_over_shards(self):
+        from repro.core.regen_tier import Recipe
+        box = LatentBox.simulated(conformance_config(2), shards=3)
+        fill_and_demote(box, 12, demote=(5,))
+        assert box.stat(5).demoted
+        assert box.promote(5) and not box.stat(5).demoted
+        assert box.delete(4)
+        assert box.stat(4) is None and 4 not in box
+        with pytest.raises(KeyError):
+            box.get(4)
+        box.put(4, recipe=Recipe(seed=9, height=16, width=16))
+        assert box.get(4).hit_class == FULL_MISS
+        s = box.summary()
+        assert s["n_shards"] == 3 and s["n_nodes"] == 6
+
+    def test_residency_uses_global_node_names(self):
+        box = make_box("sim", 4, TOTAL_NODES)
+        fill_and_demote(box, N_OBJECTS, demote=())
+        box.get_many(list(range(N_OBJECTS)))
+        names = set()
+        for oid in range(N_OBJECTS):
+            for r in box.stat(oid).residency:
+                if "@" in r:
+                    names.add(r.split("@")[1])
+        # cache residency reports global node ids spread across shards
+        assert len(names) > 2
+        assert all(n.startswith("node") and int(n[4:]) < TOTAL_NODES
+                   for n in names)

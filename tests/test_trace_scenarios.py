@@ -1,0 +1,156 @@
+"""Scenario workload suite (`make_trace`): structural invariants of every
+named scenario plus the shape properties that make each one a distinct
+stressor — diurnal intensity modulation, flash-crowd cold-before-spike,
+drift's popularity flip, scan's full coverage, multi-tenant skew."""
+
+import numpy as np
+import pytest
+
+from repro.trace.synth import (DAY_S, SCENARIOS, TraceConfig, list_scenarios,
+                               make_trace)
+
+SMALL = dict(n_objects=400, n_requests=8_000, span_days=4.0, seed=3)
+
+
+@pytest.mark.parametrize("name", list_scenarios())
+class TestEveryScenario:
+    def test_structural_invariants(self, name):
+        tr = make_trace(name, **SMALL)
+        assert len(tr.timestamps) == len(tr.object_ids)
+        assert np.all(np.diff(tr.timestamps) >= 0)          # sorted
+        assert tr.timestamps[0] >= 0.0
+        assert tr.timestamps[-1] <= SMALL["span_days"] * DAY_S
+        assert tr.object_ids.min() >= 0
+        assert tr.object_ids.max() < SMALL["n_objects"]
+        assert len(tr.birth_time) == SMALL["n_objects"]
+        assert len(tr.model_ids) == SMALL["n_objects"]
+
+    def test_deterministic_per_seed(self, name):
+        a = make_trace(name, **SMALL)
+        b = make_trace(name, **SMALL)
+        np.testing.assert_array_equal(a.object_ids, b.object_ids)
+        np.testing.assert_array_equal(a.timestamps, b.timestamps)
+        c = make_trace(name, **{**SMALL, "seed": 4})
+        if name != "scan":                      # scan is seed-independent
+            assert not np.array_equal(a.object_ids, c.object_ids) or \
+                not np.array_equal(a.timestamps, c.timestamps)
+
+
+class TestScenarioShapes:
+    def test_unknown_scenario_raises(self):
+        with pytest.raises(KeyError, match="unknown scenario"):
+            make_trace("nope")
+
+    def test_registry_matches_listing(self):
+        assert sorted(SCENARIOS) == list_scenarios()
+
+    def test_config_passthrough_and_overrides(self):
+        base = TraceConfig(n_objects=123, n_requests=500, span_days=2.0)
+        tr = make_trace("diurnal", config=base, n_requests=900)
+        assert tr.config.n_objects == 123 and tr.config.n_requests == 900
+
+    def test_diurnal_modulates_intensity(self):
+        tr = make_trace("diurnal", **{**SMALL, "n_requests": 40_000},
+                        amplitude=0.9)
+        hour = ((tr.timestamps % DAY_S) // 3600).astype(int)
+        per_hour = np.bincount(hour, minlength=24)
+        assert per_hour.max() > 3 * per_hour.min()
+        flat = make_trace("diurnal", **{**SMALL, "n_requests": 40_000},
+                          amplitude=0.0)
+        per_hour = np.bincount(
+            ((flat.timestamps % DAY_S) // 3600).astype(int), minlength=24)
+        assert per_hour.max() < 1.3 * per_hour.min()
+
+    def test_flash_crowd_viral_objects_cold_before_spike(self):
+        tr = make_trace("flash_crowd", **SMALL, n_viral=6, spike_frac=0.3,
+                        spike_start_frac=0.5)
+        viral = np.arange(SMALL["n_objects"] - 6, SMALL["n_objects"])
+        mask = np.isin(tr.object_ids, viral)
+        assert mask.mean() == pytest.approx(0.3, abs=0.02)
+        # no viral access before the spike start; birth pinned to the spike
+        assert tr.timestamps[mask].min() >= 0.5 * SMALL["span_days"] * DAY_S
+        assert np.all(tr.birth_time[viral] == 0.5 * SMALL["span_days"] * DAY_S)
+
+    def test_flash_crowd_tiny_object_space(self):
+        # n_viral clamps below n_objects so background mass never zeroes
+        tr = make_trace("flash_crowd", n_objects=3, n_requests=200,
+                        span_days=1.0, seed=0)
+        assert tr.object_ids.max() < 3
+        with pytest.raises(ValueError, match=">= 2 objects"):
+            make_trace("flash_crowd", n_objects=1, n_requests=10,
+                       span_days=1.0, seed=0)
+
+    def test_zipf_drift_flips_popularity(self):
+        tr = make_trace("zipf_drift", **{**SMALL, "n_requests": 40_000})
+        h = len(tr.object_ids) // 2
+        n = SMALL["n_objects"]
+
+        def top(ids, k=20):
+            return set(np.argsort(np.bincount(ids, minlength=n))[-k:])
+
+        assert len(top(tr.object_ids[:h]) & top(tr.object_ids[h:])) <= 2
+
+    def test_scan_covers_every_object_sequentially(self):
+        tr = make_trace("scan", **SMALL)
+        n = SMALL["n_objects"]
+        np.testing.assert_array_equal(tr.object_ids[:n],
+                                      np.arange(n, dtype=np.int64))
+        assert set(np.unique(tr.object_ids)) == set(range(n))
+
+    def test_scan_honors_exact_request_count(self):
+        # non-multiple n_requests: exactly n_requests, last pass partial
+        tr = make_trace("scan", n_objects=1000, n_requests=1400,
+                        span_days=1.0, seed=0)
+        assert len(tr.object_ids) == 1400
+        assert tr.object_ids[-1] == 399
+        # explicit passes win over n_requests
+        tr = make_trace("scan", n_objects=100, n_requests=1400,
+                        span_days=1.0, seed=0, passes=2)
+        assert len(tr.object_ids) == 200
+
+    def test_multi_tenant_shares_are_skewed_and_pools_disjoint(self):
+        tr = make_trace("multi_tenant", **{**SMALL, "n_requests": 20_000},
+                        n_tenants=4)
+        tenant_of_req = tr.model_ids[tr.object_ids]
+        shares = np.bincount(tenant_of_req, minlength=4) / len(tenant_of_req)
+        assert np.all(np.diff(shares) < 0)       # Zipf over tenants
+        for t in range(4):
+            pool = np.nonzero(tr.model_ids == t)[0]
+            assert len(pool) > 0
+        assert len(np.unique(tr.model_ids)) == 4
+
+
+class TestScenarioConsumers:
+    def test_cache_replay_consumes_scenarios(self):
+        from repro.core.replay import ReplayConfig, replay_scenario
+        res = replay_scenario(
+            "scan", ReplayConfig(cache_bytes=50 * 1.4e6, adaptive=False),
+            n_objects=200, n_requests=1_000, span_days=1.0, seed=0)
+        assert res.n == 1_000
+        # a scan over 200 objects with a 50-object cache can't image-hit
+        assert res.image_hit_frac == 0.0
+
+    def test_cluster_sim_consumes_scenarios(self):
+        from repro.core.cluster import ClusterConfig, replay_scenario
+        log, sim = replay_scenario(
+            ClusterConfig(n_nodes=2, cache_bytes_per_node=20 * 1.4e6,
+                          adaptive=False),
+            "flash_crowd", n_objects=150, n_requests=800, span_days=0.2,
+            seed=1)
+        s = log.summarize()
+        assert s["n"] == 800 and s["mean_ms"] > 0
+
+    def test_request_log_accounts_regen_misses(self):
+        """Hit-class fractions in RequestLog.summarize partition to 1.0
+        with regen_miss included, and regens never count as hits."""
+        from repro.core.metrics import RequestLog
+        log = RequestLog()
+        log.add(0.0, 1.0, "image_hit", queue_ms=1.0)
+        log.add(1.0, 2.0, "latent_hit", queue_ms=2.0)
+        log.add(2.0, 150.0, "full_miss", queue_ms=30.0)
+        log.add(3.0, 4000.0, "regen_miss", queue_ms=40.0)
+        s = log.summarize()
+        assert s["regen_miss_frac"] == 0.25
+        assert (s["image_hit_frac"] + s["latent_hit_frac"]
+                + s["full_miss_frac"] + s["regen_miss_frac"]) == 1.0
+        assert s["hit.queue_ms"] == 1.5          # regen queue excluded

@@ -1,11 +1,12 @@
 """Marginal-hit tuner (paper §4.3): gradient sign algebra, EWMA feedback,
-and convergence toward the better tier on synthetic workloads."""
+convergence toward the better tier on synthetic workloads, and
+re-convergence after the Zipf-drift scenario's popularity flip."""
 
 import numpy as np
 import pytest
 
 from repro.core.dual_cache import DualFormatCache, WindowStats
-from repro.core.replay import ReplayConfig, replay
+from repro.core.replay import ReplayConfig, replay, replay_scenario
 from repro.core.tuner import Ewma, MarginalHitTuner, TunerConfig
 
 
@@ -78,6 +79,48 @@ class TestEwma:
             tuner.observe_decode_ms(500.0)     # overloaded GPU
         rec = tuner.end_window()
         assert rec.gradient < 0                # image tier favored
+
+
+class TestZipfDriftReconvergence:
+    """Regression: under the drift scenario's mid-trace popularity flip
+    (phase-2 hot set = phase-1 cold set) the tuner must absorb the
+    perturbation and return alpha to its pre-flip operating point —
+    a tuner that latches onto stale per-object state would diverge."""
+
+    N_OBJ = 1_500
+    KNOBS = dict(n_objects=N_OBJ, n_requests=400_000, span_days=10, seed=0)
+
+    def _drift_cfg(self, **kw):
+        base = dict(cache_bytes=self.N_OBJ * 1.4e6 * 0.3,
+                    image_bytes=1.4e6, latent_bytes=0.28e6, adaptive=True,
+                    tuner=TunerConfig(window=4_000, step=0.03))
+        base.update(kw)
+        return ReplayConfig(**base)
+
+    def test_alpha_reconverges_after_flip(self):
+        res = replay_scenario("zipf_drift", self._drift_cfg(), **self.KNOBS)
+        wa, wm = res.window_alpha, res.window_mean_ms
+        half = len(wa) // 2                       # the flip window
+        pre_alpha = wa[half - 10:half].mean()
+        pre_ms = wm[half - 5:half].mean()
+        # the flip visibly perturbs the plant (miss spike on the new hot set)
+        assert wm[half:half + 3].max() > 1.2 * pre_ms
+        # ... and the tuner walks alpha back to the same operating point
+        post_alpha = wa[-10:].mean()
+        assert post_alpha == pytest.approx(pre_alpha, abs=0.06)
+        # ... restoring the pre-flip latency level
+        assert wm[-5:].mean() <= 1.1 * pre_ms
+        # the equilibrium is interior, not a clamp artifact
+        assert 0.1 < post_alpha < 0.9
+
+    def test_adaptive_tracks_drift_better_than_worst_static(self):
+        ad = replay_scenario("zipf_drift", self._drift_cfg(), **self.KNOBS)
+        worst = max(
+            replay_scenario("zipf_drift",
+                            self._drift_cfg(alpha0=a, adaptive=False),
+                            **self.KNOBS).mean_ms
+            for a in (0.1, 0.9))
+        assert ad.mean_ms <= worst * 1.05
 
 
 class TestEndToEndAdaptation:
