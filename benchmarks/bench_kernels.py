@@ -1,9 +1,13 @@
 """Kernel-layer microbenchmark: Pallas (interpret) vs jnp oracle
 correctness at bench shapes + the analytic HBM-traffic win of each fusion
 on the decode hot path.  Rows persist as JSON under artifacts/ (local,
-untracked) so a rerun on a later checkout can be diffed against them."""
+untracked); ``--smoke`` additionally writes ``BENCH_kernels.json`` at the
+repo root (the perf-trajectory artifact CI uploads)."""
 
 from __future__ import annotations
+
+import argparse
+import os
 
 import numpy as np
 
@@ -12,6 +16,8 @@ import jax.numpy as jnp
 
 from benchmarks.common import Rows, Timer
 from repro.kernels import ops, ref
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
 def run() -> Rows:
@@ -83,6 +89,47 @@ def run() -> Rows:
         # passes the fusion keeps in VMEM
         rows.add(f"{tag}.traffic_saved_mb", derived=round(2 * act / 1e6, 2))
 
+    # fused nearest-2x upsample + conv3x3 (decoder upsampler): the phase
+    # decomposition never materializes the 4x intermediate in HBM and
+    # collapses 9 taps over 4x pixels into 16 taps over 1x pixels
+    from repro.kernels.upsample_conv import upsample_conv3x3
+    for (n, hh, ww, cin, cout) in ((1, 16, 16, 64, 64), (2, 8, 12, 32, 64)):
+        x = jnp.asarray(rng.standard_normal((n, hh, ww, cin)), jnp.float32)
+        wt = jnp.asarray(rng.standard_normal((3, 3, cin, cout)) * 0.1,
+                         jnp.float32)
+        bc = jnp.asarray(rng.standard_normal(cout), jnp.float32)
+        with Timer() as t:
+            o = upsample_conv3x3(x, wt, bc, rows=8, interpret=True)
+        err = float(jnp.abs(o - ref.upsample_conv3x3_ref(x, wt, bc)).max())
+        tag = f"kernel.upsample_conv.{n}x{hh}x{ww}x{cin}to{cout}"
+        rows.add(f"{tag}.max_err", t.us, f"{err:.1e}")
+        # unfused: the upsampled [2h, 2w, c] intermediate is written by
+        # the repeat and re-read by the conv
+        inter = n * 4 * hh * ww * cin * 4
+        rows.add(f"{tag}.intermediate_saved_mb",
+                 derived=round(2 * inter / 1e6, 2))
+        rows.add(f"{tag}.mac_ratio", derived=round(36 / 16, 2))
+
+    # fused output epilogue (GN+SiLU+conv_out+clamp+uint8): the decode's
+    # last write is the displayable image at 1/4 the float32 bytes
+    from repro.kernels.output_epilogue import output_epilogue
+    for (n, hh, ww, cin, g) in ((1, 16, 16, 64, 8), (2, 8, 8, 32, 8)):
+        x = jnp.asarray(rng.standard_normal((n, hh, ww, cin)), jnp.float32)
+        sc = jnp.asarray(rng.standard_normal(cin), jnp.float32)
+        bi = jnp.asarray(rng.standard_normal(cin), jnp.float32)
+        wt = jnp.asarray(rng.standard_normal((3, 3, cin, 3)) * 0.1,
+                         jnp.float32)
+        bc = jnp.asarray(rng.standard_normal(3) * 0.1, jnp.float32)
+        with Timer() as t:
+            o = output_epilogue(x, sc, bi, wt, bc, groups=g, rows=8,
+                                interpret=True)
+        want = ref.output_epilogue_ref(x, sc, bi, wt, bc, groups=g)
+        lsb = int(np.abs(np.asarray(o, np.int16)
+                         - np.asarray(want, np.int16)).max())
+        tag = f"kernel.output_epilogue.{n}x{hh}x{ww}x{cin}"
+        rows.add(f"{tag}.max_lsb", t.us, lsb)
+        rows.add(f"{tag}.out_bytes_ratio_f32_over_u8", derived=4.0)
+
     # decode attention: streams the KV cache exactly once
     n, hq, hkv, S, d = 2, 8, 2, 512, 64
     q1 = jnp.asarray(rng.standard_normal((n, hq, d)), jnp.float32)
@@ -99,7 +146,23 @@ def run() -> Rows:
     return rows
 
 
+def trajectory(out_dir: str = REPO_ROOT) -> Rows:
+    """The perf-trajectory artifact: ``<out_dir>/BENCH_kernels.json``."""
+    rows = run()
+    path = rows.save_json("BENCH_kernels", out_dir=out_dir)
+    print(f"# saved {path}")
+    return rows
+
+
 def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="interpret-mode kernel sweep; writes "
+                         "BENCH_kernels.json at the repo root")
+    args = ap.parse_args()
+    if args.smoke:
+        trajectory().print()
+        return
     rows = run()
     rows.print()
     print(f"# saved {rows.save_json('bench_kernels')}")

@@ -33,9 +33,17 @@ from repro.trace.synth import (TraceConfig, generate_trace, list_scenarios,
                                make_trace)
 
 
+#: pixel-cache entry sizes at the trace's nominal 1024x1024 object: raw
+#: decoded uint8 HWC (what the fused-epilogue engine actually pins) vs the
+#: float32 arrays the pre-PR engine pinned — the 4x pixel-tier capacity win
+PX_UINT8 = 3.15e6
+PX_FLOAT32 = 4 * PX_UINT8
+
+
 def facade_replay(ids: np.ndarray, timestamps_ms: np.ndarray,
                   n_nodes: int = 3, cache_frac: float = 0.05,
-                  shards: int = 1, label: str = "facade"):
+                  shards: int = 1, label: str = "facade",
+                  image_bytes: float = PX_UINT8):
     """Replay a trace slice through the LatentBox facade only; returns
     ``(rows, summary)``.  ``n_nodes`` is the TOTAL fleet size; with
     ``shards > 1`` the same fleet is split across a sharded cluster
@@ -46,8 +54,9 @@ def facade_replay(ids: np.ndarray, timestamps_ms: np.ndarray,
         raise ValueError(f"{shards} shards must evenly split {n_nodes} nodes")
     box = LatentBox.simulated(StoreConfig(
         n_nodes=n_nodes // shards,
-        cache_bytes_per_node=max(wss * 1.4e6 * cache_frac / n_nodes, 2e6),
-        image_bytes=1.4e6, latent_bytes=0.28e6), shards=shards)
+        cache_bytes_per_node=max(wss * PX_FLOAT32 * cache_frac / n_nodes,
+                                 2e6),
+        image_bytes=image_bytes, latent_bytes=0.28e6), shards=shards)
     for oid in np.unique(ids):
         box.put(int(oid))
     with Timer() as t:
@@ -59,6 +68,8 @@ def facade_replay(ids: np.ndarray, timestamps_ms: np.ndarray,
         rows.add(f"{label}.{cls}_frac", t.us / total,
                  round(s[cls] / total, 4))
     rows.add(f"{label}.p95_ms", derived=round(s.get("p95_ms", 0.0), 2))
+    rows.add(f"{label}.pixel_bytes_per_object",
+             derived=round(s.get("pixel_bytes_per_object", 0.0), 1))
     return rows, s
 
 
@@ -76,6 +87,15 @@ def smoke(shards: int = 1) -> Rows:
                (IMAGE_HIT, LATENT_HIT, FULL_MISS, REGEN_MISS))
     assert s["total"] == len(ids) and hits == s["total"], \
         "hit classes must partition requests"
+    # pixel-tier bytes/object: the uint8 fast path charges 4x below the
+    # float32 arrays the pre-PR engine pinned (same fleet, same trace)
+    px = s.get("pixel_bytes_per_object", 0.0)
+    rows.add("facade.pixel_bytes_per_object.f32_baseline",
+             derived=PX_FLOAT32)
+    drop = PX_FLOAT32 / px if px else 0.0
+    rows.add("facade.pixel_bytes_drop_vs_f32", derived=round(drop, 2))
+    assert 3.5 <= drop <= 4.5, \
+        f"uint8 pixel tier should charge ~4x below float32, got {drop}"
     if shards > 1:
         srows, ss = facade_replay(ids, ts, n_nodes=2 * shards,
                                   cache_frac=0.05, shards=shards,

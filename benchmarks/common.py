@@ -69,10 +69,13 @@ class Rows:
         for r in self.rows:
             print(r)
 
-    def save_json(self, name: str) -> str:
-        """Write the rows as ``artifacts/<name>.json``; returns the path."""
-        os.makedirs(ART, exist_ok=True)
-        path = os.path.join(ART, f"{name}.json")
+    def save_json(self, name: str, out_dir: Optional[str] = None) -> str:
+        """Write the rows as ``<out_dir>/<name>.json`` (default
+        ``artifacts/`` — untracked scratch; the perf-trajectory mode passes
+        the repo root so ``BENCH_*.json`` is versioned); returns the path."""
+        out_dir = ART if out_dir is None else out_dir
+        os.makedirs(out_dir, exist_ok=True)
+        path = os.path.join(out_dir, f"{name}.json")
         with open(path, "w") as f:
             json.dump({"bench": name, "scale": SCALE,
                        "rows": self._records}, f, indent=1, default=str)

@@ -31,10 +31,27 @@ MODULES = [
 ]
 
 
+def trajectory() -> None:
+    """Perf-trajectory mode: write ``BENCH_decode.json`` +
+    ``BENCH_kernels.json`` at the repo root (versioned, unlike the
+    artifacts/ scratch) — per-bucket per-image decode ms, fast-path
+    speedups, kernel-vs-oracle errors and traffic wins, pixel-tier
+    bytes/object — so later checkouts have a trend to regress against."""
+    from benchmarks import bench_decode, bench_kernels
+    bench_decode.trajectory().print()
+    bench_kernels.trajectory().print()
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", nargs="*", default=None)
+    ap.add_argument("--trajectory", action="store_true",
+                    help="write BENCH_decode.json + BENCH_kernels.json at "
+                         "the repo root and exit")
     args = ap.parse_args()
+    if args.trajectory:
+        trajectory()
+        return
     mods = args.only or MODULES
 
     all_rows = Rows()

@@ -53,6 +53,11 @@ class ClusterConfig:
     n_nodes: int = 3
     gpus_per_node: int = 1
     cache_bytes_per_node: float = 2e9
+    #: Pixel-cache entry charge.  The §6.1 ``imgstore`` baseline caches
+    #: encoded PNGs (paper's 1.4 MB average); for the ``lb`` modes compare
+    #: against the facade's ``StoreConfig``, whose uint8 raw-pixel charge
+    #: (H*W*3) is what the serving engine actually pins since the fused
+    #: uint8 decode epilogue.
     image_bytes: float = 1.4e6
     latent_bytes: float = 0.28e6
     # LB cache policy

@@ -23,6 +23,10 @@ import numpy as np
 @dataclasses.dataclass(frozen=True)
 class CostParams:
     s_px_mb: float = 1.5               # average PNG, 1024x1024
+    #: A pixel-cache entry: raw decoded 1024x1024x3 uint8 HWC (the fused
+    #: decode epilogue stores displayable bytes — 4x below the 12.6 MB
+    #: float32 arrays the pre-fusion engine pinned).
+    s_px_cache_mb: float = 3.15
     s_lat_mb: float = 0.29             # compressed latent, SD 3.5
     p_s3_gb_mo: float = 0.023          # S3 Standard
     p_glacier_gb_mo: float = 0.004     # Glacier IR storage
@@ -100,6 +104,7 @@ def project(params: Optional[CostParams] = None,
 
     gb = 1.0 / 1024.0                                           # MB -> GB
     s_px_gb = p.s_px_mb * gb
+    s_px_cache_gb = p.s_px_cache_mb * gb
     s_lat_gb = p.s_lat_mb * gb
 
     # --- ImgStore on S3 Standard (Eq. 3): monthly storage bill, accumulated
@@ -117,7 +122,9 @@ def project(params: Optional[CostParams] = None,
     imgstore_glacier = np.cumsum((hot + cold + retrieval) * sto_mult) * months_step
 
     # --- LatentBox (Eq. 4): latent + pixel-cache storage, plus GPU decode
-    lb_storage = n_t * (s_lat_gb + p.cache_fraction * s_px_gb) * p.p_s3_gb_mo
+    # (the cache term prices raw uint8 pixel-cache entries, not PNGs)
+    lb_storage = n_t * (s_lat_gb
+                        + p.cache_fraction * s_px_cache_gb) * p.p_s3_gb_mo
     decodes_mo = p.m_gpu * p.views_per_image_yr * n_t / 12.0    # M(t) per month
     gpu_hours_mo = decodes_mo * (p.t_dec_ms / 1e3) / 3600.0
     out = {"year": start_year + years, "imgstore": imgstore,

@@ -148,6 +148,27 @@ class SegmentedLRU:
             return True
         return False
 
+    def resize(self, oid: int, nbytes: float) -> bool:
+        """Correct a resident entry's byte charge *in place* — no LRU
+        reorder (unlike :meth:`insert`), so accounting fixes (e.g. the
+        engine charging a decoded image's real dtype bytes) cannot perturb
+        eviction order.  Growth may trigger evictions; returns False when
+        the object is not resident."""
+        if nbytes < 0:
+            raise ValueError("object size must be >= 0")
+        for seg, attr in ((self._main, "_main_bytes"),
+                          (self._tail, "_tail_bytes")):
+            if oid in seg:
+                old = seg[oid]
+                if nbytes == old:
+                    return True
+                seg[oid] = nbytes
+                setattr(self, attr, getattr(self, attr) + nbytes - old)
+                if nbytes > old:
+                    self._rebalance()
+                return True
+        return False
+
     def set_capacity(self, capacity: float) -> List[Tuple[int, float]]:
         if capacity < 0:
             raise ValueError("capacity must be >= 0")
@@ -306,19 +327,32 @@ class DualFormatCache:
         self._latent_hits[oid] = cnt
         return False
 
-    def admit_latent(self, oid: int) -> None:
-        """Admit a freshly fetched object into the latent tier (counter = 0)."""
+    def admit_latent(self, oid: int,
+                     nbytes: Optional[float] = None) -> None:
+        """Admit a freshly fetched object into the latent tier (counter =
+        0).  ``nbytes`` charges the payload's real byte size; default is
+        the configured ``latent_size_fn`` estimate."""
         if oid in self.image_tier:     # raced promotion; keep single residency
             return
-        self.latent_tier.insert(oid, self.latent_size_fn(oid))
+        self.latent_tier.insert(
+            oid, self.latent_size_fn(oid) if nbytes is None else nbytes)
         if oid in self.latent_tier:    # not admitted if larger than the tier
             self._latent_hits[oid] = 0
 
-    def insert_image(self, oid: int) -> None:
-        """Force-insert a decoded image (used by spillover write-back)."""
+    def insert_image(self, oid: int,
+                     nbytes: Optional[float] = None) -> None:
+        """Force-insert a decoded image (used by spillover write-back).
+        ``nbytes`` charges the stored array's real byte size (uint8 on the
+        fast path); default is the ``image_size_fn`` estimate."""
         self.latent_tier.remove(oid)
         self._latent_hits.pop(oid, None)
-        self.image_tier.insert(oid, self.image_size_fn(oid))
+        self.image_tier.insert(
+            oid, self.image_size_fn(oid) if nbytes is None else nbytes)
+
+    def set_image_nbytes(self, oid: int, nbytes: float) -> bool:
+        """Correct a cached image's byte charge to its real stored size
+        without touching LRU order (no-op when not pixel-resident)."""
+        return self.image_tier.resize(oid, float(nbytes))
 
     def evict(self, oid: int) -> bool:
         """Explicitly drop ``oid`` from whichever tier holds it (promotion

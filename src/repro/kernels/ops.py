@@ -64,6 +64,28 @@ def gn_silu_conv3x3(x, scale, bias, w, b=None, groups: int = 32,
                                interpret=impl == "pallas_interpret")
 
 
+def upsample_conv3x3(x, w, b=None, impl: Optional[str] = None):
+    """Fused nearest-2x upsample + 3x3 SAME conv (the decoder upsampler);
+    the Pallas kernel never materializes the 4x upsampled intermediate."""
+    impl = _resolve(impl)
+    if impl == "xla":
+        return ref.upsample_conv3x3_ref(x, w, b)
+    from repro.kernels import upsample_conv as uc
+    return uc.upsample_conv3x3(x, w, b, interpret=impl == "pallas_interpret")
+
+
+def output_epilogue(x, scale, bias, w, b=None, groups: int = 32,
+                    eps: float = 1e-6, impl: Optional[str] = None):
+    """Fused GN + SiLU + conv_out + clamp + uint8 quantize — the decode's
+    final stage, returning displayable uint8 HWC pixels."""
+    impl = _resolve(impl)
+    if impl == "xla":
+        return ref.output_epilogue_ref(x, scale, bias, w, b, groups, eps)
+    from repro.kernels import output_epilogue as oe
+    return oe.output_epilogue(x, scale, bias, w, b, groups=groups, eps=eps,
+                              interpret=impl == "pallas_interpret")
+
+
 def flash_attention(q, k, v, causal: bool = False, scale=None,
                     window: Optional[int] = None, impl: Optional[str] = None):
     impl = _resolve(impl)

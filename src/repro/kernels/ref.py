@@ -33,6 +33,31 @@ def gn_silu_conv3x3_ref(x: jax.Array, scale: jax.Array, bias: jax.Array,
     return conv3x3_ref(group_norm_silu_ref(x, scale, bias, groups, eps), w, b)
 
 
+def upsample_conv3x3_ref(x: jax.Array, w: jax.Array,
+                         b: Optional[jax.Array] = None) -> jax.Array:
+    """``conv3x3(nearest_upsample_2x(x))`` — oracle for the fused
+    upsampler kernel (and the XLA decode path: this IS the unfused
+    upsample, so rewiring the decoder onto the dispatch is bit-neutral
+    on ``impl='xla'``)."""
+    x2 = jnp.repeat(jnp.repeat(x, 2, axis=1), 2, axis=2)
+    return conv3x3_ref(x2, w, b)
+
+
+def quantize_u8_ref(y: jax.Array) -> jax.Array:
+    """[-1, 1] float image -> uint8 display bytes (fp32 math)."""
+    yf = jnp.clip(y.astype(jnp.float32), -1.0, 1.0)
+    return jnp.round((yf + 1.0) * 127.5).astype(jnp.uint8)
+
+
+def output_epilogue_ref(x: jax.Array, scale: jax.Array, bias: jax.Array,
+                        w: jax.Array, b: Optional[jax.Array] = None,
+                        groups: int = 32, eps: float = 1e-6) -> jax.Array:
+    """``quantize_u8(conv3x3(silu(group_norm(x))))`` — oracle for the
+    fused decode output epilogue."""
+    return quantize_u8_ref(gn_silu_conv3x3_ref(x, scale, bias, w, b,
+                                               groups, eps))
+
+
 def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
                         causal: bool = False,
                         scale: Optional[float] = None,

@@ -1,0 +1,133 @@
+"""Fused nearest-2x upsample + 3x3 SAME conv — the decoder's upsampler.
+
+Every decoder level but the last ends in ``conv3x3(nearest_upsample_2x(x))``.
+Unfused, XLA materializes the upsampled ``[N, 2H, 2W, C]`` intermediate in
+HBM (a 4x-sized tensor written once and read once before every upsampler
+conv) — the single largest avoidable traffic term on the decode path after
+the res-block fusion.  This kernel computes the conv *directly from the
+pre-upsample tensor*, so the 4x intermediate never exists in HBM.
+
+The trick is a phase decomposition of the composite op.  An output pixel
+``(2i+pi, 2j+pj)`` (phases ``pi, pj in {0, 1}``) reads a 3x3 window of the
+upsampled image, but nearest upsampling makes those nine taps hit only a
+2x2 neighborhood of ``x`` — with known multiplicities.  Collapsing the
+duplicated taps *into the weights* (done once in the wrapper, not per
+pixel) turns each phase into an independent 2x2 conv on ``x``:
+
+  phase rows  pi=0: x[i-1]*w[0]     + x[i]*(w[1]+w[2])
+              pi=1: x[i]*(w[0]+w[1]) + x[i+1]*w[2]        (cols identical)
+
+so the fused op is 4 phases x 4 taps = 16 MXU matmuls over ``rows*W``
+pixels vs 9 matmuls over ``4*rows*W`` for conv-on-upsampled: **2.25x fewer
+MACs** on top of the traffic win.  The four ``[rows, W, tc]`` phase
+accumulators interleave to the ``[2*rows, 2*W, tc]`` output block in VMEM.
+
+Grid/banding follows :mod:`repro.kernels.conv3x3`: the wrapper stages
+halo-padded input row bands once in HBM; zero halos at image edges are
+exactly the SAME padding of the upsampled image, so no ring masking is
+needed (the input is pre-activation — zeros stay zeros).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.conv3x3 import band_rows, materialize_bands
+
+#: tap groups per phase: phase p sums these dy (dx) taps into its 2 row
+#: (col) offsets — offset index a lands on band row ``p + a``
+_PHASE_TAPS = {0: ((0,), (1, 2)), 1: ((0, 1), (2,))}
+
+
+def phase_weights(w: jax.Array) -> jax.Array:
+    """Collapse a ``[3, 3, Cin, Cout]`` filter into the ``[2, 2, 2, 2,
+    Cin, Cout]`` per-phase 2x2 filters (index order ``[pi, pj, a, b]``)."""
+    rows = []
+    for pi in (0, 1):
+        cols = []
+        for pj in (0, 1):
+            taps_a = []
+            for dys in _PHASE_TAPS[pi]:
+                taps_b = []
+                for dxs in _PHASE_TAPS[pj]:
+                    tap = sum(w[dy, dx] for dy in dys for dx in dxs)
+                    taps_b.append(tap)
+                taps_a.append(jnp.stack(taps_b))
+            cols.append(jnp.stack(taps_a))
+        rows.append(jnp.stack(cols))
+    return jnp.stack(rows)
+
+
+def _upsample_conv_kernel(x_ref, w_ref, b_ref, o_ref, *, rows: int,
+                          width: int):
+    x = x_ref[0]                                     # [rows+2, W+2, Cin]
+    tc = o_ref.shape[-1]
+    bias = b_ref[...].astype(jnp.float32)
+    row_phases = []
+    for pi in range(2):
+        col_phases = []
+        for pj in range(2):
+            acc = jnp.zeros((rows, width, tc), jnp.float32)
+            for a in range(2):
+                for b in range(2):
+                    patch = x[pi + a:pi + a + rows,
+                              pj + b:pj + b + width, :].astype(jnp.float32)
+                    tap = w_ref[pi, pj, a, b].astype(jnp.float32)  # [Cin, tc]
+                    acc += jax.lax.dot_general(
+                        patch.reshape(rows * width, -1), tap,
+                        (((1,), (0,)), ((), ())),
+                        preferred_element_type=jnp.float32,
+                    ).reshape(rows, width, -1)
+            col_phases.append(acc + bias)
+        # column interleave: out[.., 2j+pj] = col_phases[pj][.., j]
+        row_phases.append(jnp.stack(col_phases, axis=2)
+                          .reshape(rows, 2 * width, -1))
+    # row interleave: out[2i+pi] = row_phases[pi][i]
+    out = jnp.stack(row_phases, axis=1).reshape(2 * rows, 2 * width, -1)
+    o_ref[0] = out.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("rows", "block_cout",
+                                             "interpret"))
+def upsample_conv3x3(x: jax.Array, w: jax.Array,
+                     b: Optional[jax.Array] = None, rows: int = 16,
+                     block_cout: int = 128,
+                     interpret: bool = False) -> jax.Array:
+    """``conv3x3(nearest_upsample_2x(x))`` fused.  x [N, H, W, Cin] NHWC,
+    w [3, 3, Cin, Cout], b [Cout] -> [N, 2H, 2W, Cout] (SAME)."""
+    n, h, width, cin = x.shape
+    cout = w.shape[-1]
+    if b is None:
+        b = jnp.zeros((cout,), x.dtype)
+
+    # the output block is 4x the input band's area: budget both by sizing
+    # the band as if the input carried the output's channel load too
+    tc = min(block_cout, cout)
+    while cout % tc:
+        tc //= 2
+    rows = band_rows(h, width, cin + 4 * tc, x.dtype.itemsize, rows)
+    nb = h // rows
+    wc = phase_weights(w)                            # [2, 2, 2, 2, Cin, Cout]
+
+    out = pl.pallas_call(
+        functools.partial(_upsample_conv_kernel, rows=rows, width=width),
+        grid=(n * nb, cout // tc),
+        in_specs=[
+            pl.BlockSpec((1, rows + 2, width + 2, cin),
+                         lambda i, c: (i, 0, 0, 0)),
+            pl.BlockSpec((2, 2, 2, 2, cin, tc),
+                         lambda i, c: (0, 0, 0, 0, 0, c)),
+            pl.BlockSpec((tc,), lambda i, c: (c,)),
+        ],
+        out_specs=pl.BlockSpec((1, 2 * rows, 2 * width, tc),
+                               lambda i, c: (i, 0, 0, c)),
+        out_shape=jax.ShapeDtypeStruct((n * nb, 2 * rows, 2 * width, cout),
+                                       x.dtype),
+        interpret=interpret,
+    )(materialize_bands(x, rows), wc, b)
+    return out.reshape(n, 2 * h, 2 * width, cout)

@@ -26,6 +26,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
+from collections import OrderedDict
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax.numpy as jnp
@@ -54,6 +55,10 @@ class EngineConfig:
     #: ``theta`` alias encoded the same value).
     promote_threshold: int = 4
     decode_buckets: Tuple[int, ...] = (1, 2, 4, 8)
+    #: 'uint8' serves displayable bytes straight off the fused decode
+    #: epilogue (1/4 the transfer + pixel-cache charge); 'float32' keeps
+    #: the legacy [-1, 1] float pixels.
+    pixel_format: str = "uint8"
     adaptive: bool = True               # run the marginal-hit tuner
     tuner: TunerConfig = dataclasses.field(
         default_factory=lambda: TunerConfig(window=500, step=0.02))
@@ -77,7 +82,8 @@ class EngineConfig:
             promote_threshold=self.promote_threshold,
             image_bytes=image_bytes, latent_bytes=latent_bytes,
             adaptive=self.adaptive, tuner=self.tuner,
-            decode_buckets=self.decode_buckets)
+            decode_buckets=self.decode_buckets,
+            pixel_format=self.pixel_format)
 
 
 class _Node:
@@ -113,19 +119,45 @@ class DecodeBatcher:
     ``len(buckets)`` distinct batch shapes.  Padding repeats the last real
     latent — the decode is per-image independent and deterministic, so
     padded slots never perturb the real outputs.
+
+    The regeneration fast path (PR 4) layers three optimizations on top:
+
+    * ``pixel_format='uint8'`` routes through the donated
+      :meth:`VAE.decode_u8` — one compiled graph from normalized latent to
+      displayable uint8 bytes (1/4 the device->host transfer and pixel
+      cache charge of float32);
+    * host DEFLATE decompression is *memoized per oid* (bounded LRU keyed
+      on the exact blob), so repeat decodes of a hot object — and every
+      coalesced duplicate — never pay the codec twice;
+    * ``pipeline=True`` overlaps codec and compute: each chunk's decode
+      dispatches asynchronously, the next chunk's latents decompress while
+      it runs on device, and the result is only awaited when the following
+      dispatch is in flight (no ``block_until_ready`` between chunks).
     """
 
-    def __init__(self, vae: VAE, buckets: Sequence[int] = (1, 2, 4, 8)):
+    def __init__(self, vae: VAE, buckets: Sequence[int] = (1, 2, 4, 8),
+                 pixel_format: str = "uint8", pipeline: bool = True,
+                 memo_entries: int = 256):
         if not buckets or any(b <= 0 for b in buckets):
             raise ValueError(f"buckets must be positive: {buckets!r}")
+        if pixel_format not in ("uint8", "float32"):
+            raise ValueError(f"pixel_format must be uint8|float32: "
+                             f"{pixel_format!r}")
         self.vae = vae
         self.buckets = tuple(sorted(set(int(b) for b in buckets)))
         self.max_batch = self.buckets[-1]
-        # oid -> (latent z [h, w, c] float32, exec node) in arrival order
-        self._pending: Dict[int, Tuple[np.ndarray, Any]] = {}
+        self.pixel_format = pixel_format
+        self.pipeline = bool(pipeline)
+        self.memo_entries = int(memo_entries)
+        # oid -> (compressed blob, exec node) in arrival order; the blob
+        # decompresses lazily at flush (overlapped with the device decode)
+        self._pending: Dict[int, Tuple[bytes, Any]] = {}
+        # oid -> (blob, decompressed z): reused only when the blob matches
+        self._zmemo: "OrderedDict[int, Tuple[bytes, np.ndarray]]" = \
+            OrderedDict()
         self._warm: set = set()       # buckets whose decode shape is compiled
         self.stats = {"decodes": 0, "batches": 0, "coalesced": 0,
-                      "padded_slots": 0}
+                      "padded_slots": 0, "decompressions": 0, "memo_hits": 0}
         self.last_per_image_ms: Dict[int, float] = {}
 
     def __len__(self) -> int:
@@ -135,15 +167,18 @@ class DecodeBatcher:
         """Drop everything pending (a window aborted mid-admission)."""
         self._pending.clear()
 
+    def forget(self, oid: int) -> None:
+        """Invalidate the decompression memo for ``oid`` (its durable blob
+        was deleted or rewritten)."""
+        self._zmemo.pop(oid, None)
+
     def submit(self, oid: int, blob: bytes, node: Any) -> bool:
         """Queue a decode for ``oid``; returns True if newly enqueued,
         False if it coalesced with an in-flight decode of the same oid."""
         if oid in self._pending:
             self.stats["coalesced"] += 1
             return False
-        # fixed decode dtype: determinism holds per (latent, stack) pair
-        z = np.asarray(decompress_latent(blob), np.float32)
-        self._pending[oid] = (z, node)
+        self._pending[oid] = (blob, node)
         return True
 
     def bucket_for(self, n: int) -> int:
@@ -153,33 +188,65 @@ class DecodeBatcher:
                 return b
         return n
 
-    def flush(self) -> Dict[int, np.ndarray]:
-        """Decode everything pending; returns oid -> image and feeds each
-        exec node's tuner the per-image wall clock of its batch."""
-        results: Dict[int, np.ndarray] = {}
-        items = list(self._pending.items())
-        self._pending.clear()
-        self.last_per_image_ms = {}
-        for start in range(0, len(items), self.max_batch):
-            chunk = items[start:start + self.max_batch]
-            results.update(self._decode_chunk(chunk))
-        return results
+    # -- decode plumbing ------------------------------------------------------
 
-    def _decode_chunk(self, chunk) -> Dict[int, np.ndarray]:
+    def _decode_fn(self, zb):
+        if self.pixel_format == "uint8":
+            return self.vae.decode_u8(zb)
+        return self.vae.decode(zb)
+
+    def decode_single(self, z: np.ndarray) -> np.ndarray:
+        """One-off decode of a single latent in the configured pixel
+        format (prewarm / promotion paths outside the batched window)."""
+        return np.asarray(self._decode_fn(jnp.asarray(z, jnp.float32)[None]))[0]
+
+    def prewarm(self, latent_hwc: Tuple[int, int, int]) -> None:
+        """Compile every bucket's decode shape up front so no serving
+        window ever pays jit time (first-flush warmup otherwise compiles
+        lazily, bucket by bucket)."""
+        for b in self.buckets:
+            if b not in self._warm:
+                z = jnp.zeros((b,) + tuple(latent_hwc), jnp.float32)
+                np.asarray(self._decode_fn(z))
+                self._warm.add(b)
+
+    def _latent_of(self, oid: int, blob: bytes) -> np.ndarray:
+        """Memoized host decompression (fixed decode dtype: determinism
+        holds per (latent, stack) pair)."""
+        hit = self._zmemo.get(oid)
+        if hit is not None and hit[0] == blob:
+            self._zmemo.move_to_end(oid)
+            self.stats["memo_hits"] += 1
+            return hit[1]
+        self.stats["decompressions"] += 1
+        z = np.asarray(decompress_latent(blob), np.float32)
+        if self.memo_entries > 0:
+            self._zmemo[oid] = (blob, z)
+            self._zmemo.move_to_end(oid)
+            while len(self._zmemo) > self.memo_entries:
+                self._zmemo.popitem(last=False)
+        return z
+
+    def _assemble(self, chunk):
+        """Host half of one chunk: decompress (memoized), pad to the
+        bucket, stack, and make sure the bucket's shape is compiled."""
         n_real = len(chunk)
         bucket = self.bucket_for(n_real)
-        zs = [z for _, (z, _) in chunk]
+        zs = [self._latent_of(oid, blob) for oid, (blob, _) in chunk]
         zs.extend([zs[-1]] * (bucket - n_real))       # pad with the last real z
         zb = jnp.stack(zs)
         if bucket not in self._warm:
             # compile this bucket's shape outside the timed region so jit
-            # compile time never poisons the tuner's decode EWMA
-            self.vae.decode(zb).block_until_ready()
+            # compile time never poisons the tuner's decode EWMA.  Warm on
+            # a THROWAWAY zeros buffer: the u8 decode donates its input,
+            # so warming on zb itself would delete the buffer the real
+            # decode still needs (CPU ignores donation, accelerators
+            # do not)
+            np.asarray(self._decode_fn(jnp.zeros(zb.shape, zb.dtype)))
             self._warm.add(bucket)
-        t0 = time.perf_counter()
-        imgs = np.asarray(self.vae.decode(zb))
-        ms = (time.perf_counter() - t0) * 1e3
-        per_image_ms = ms / n_real
+        return zb, bucket, n_real
+
+    def _account(self, chunk, imgs, per_image_ms, bucket, n_real):
         self.stats["batches"] += 1
         self.stats["decodes"] += n_real
         self.stats["padded_slots"] += bucket - n_real
@@ -190,6 +257,52 @@ class DecodeBatcher:
             self.last_per_image_ms[oid] = per_image_ms
             out[oid] = imgs[i]
         return out
+
+    def flush(self) -> Dict[int, np.ndarray]:
+        """Decode everything pending; returns oid -> image and feeds each
+        exec node's tuner the per-image wall clock of its batch.
+
+        With ``pipeline=True`` chunk k+1's host decompression overlaps
+        chunk k's in-flight device decode; the await of chunk k happens
+        only after chunk k+1 has dispatched."""
+        results: Dict[int, np.ndarray] = {}
+        items = list(self._pending.items())
+        self._pending.clear()
+        self.last_per_image_ms = {}
+        chunks = [items[s:s + self.max_batch]
+                  for s in range(0, len(items), self.max_batch)]
+        if not self.pipeline:
+            for chunk in chunks:
+                zb, bucket, n_real = self._assemble(chunk)
+                t0 = time.perf_counter()
+                imgs = np.asarray(self._decode_fn(zb))
+                ms = (time.perf_counter() - t0) * 1e3
+                results.update(self._account(chunk, imgs, ms / n_real,
+                                             bucket, n_real))
+            return results
+
+        inflight = None           # (chunk, future, start, bucket, n_real)
+        prev_done = 0.0
+        for chunk in chunks:
+            zb, bucket, n_real = self._assemble(chunk)
+            t0 = time.perf_counter()
+            fut = self._decode_fn(zb)                 # async dispatch
+            if inflight is not None:
+                prev_done = self._collect(results, *inflight)
+            # the device runs chunks serially: this chunk only starts once
+            # the previous one finished, so its timed span begins there
+            inflight = (chunk, fut, max(t0, prev_done), bucket, n_real)
+        if inflight is not None:
+            self._collect(results, *inflight)
+        return results
+
+    def _collect(self, results, chunk, fut, start, bucket, n_real) -> float:
+        imgs = np.asarray(fut)                        # blocks until done
+        done = time.perf_counter()
+        per_image_ms = (done - start) * 1e3 / n_real
+        results.update(self._account(chunk, imgs, per_image_ms, bucket,
+                                     n_real))
+        return done
 
 
 @dataclasses.dataclass
@@ -214,7 +327,7 @@ class ServingEngine:
     simulator backend classifies with."""
 
     def __init__(self, vae: VAE, store: LatentStore,
-                 cfg=None, image_bytes: float = 64e3,
+                 cfg=None, image_bytes: float = 16e3,
                  latent_bytes: float = 13e3,
                  recipes: Optional[RegenTierStore] = None):
         """``cfg`` is either a :class:`StoreConfig` (the facade path — its
@@ -237,8 +350,14 @@ class ServingEngine:
             # capacity evictions drop the decoded/compressed payload too
             node.tier.evict_cb(node.drop_payloads)
         self.router = self.walk.router
-        self.batcher = DecodeBatcher(vae, self.cfg.decode_buckets)
+        self.batcher = DecodeBatcher(vae, self.cfg.decode_buckets,
+                                     pixel_format=self.cfg.pixel_format)
         self.stats = self.walk.counts           # shared hit/spill accounting
+
+    def prewarm_decode(self, latent_hwc: Tuple[int, int, int]) -> None:
+        """Compile every decode bucket for the given latent shape up
+        front, so no serving window ever pays jit time."""
+        self.batcher.prewarm(latent_hwc)
 
     # -- writes ---------------------------------------------------------------
 
@@ -247,19 +366,30 @@ class ServingEngine:
             recipe: Optional[Recipe] = None) -> int:
         """Durable write: encode (if given pixels) -> compress -> latent
         store; the recipe (if any) becomes the coldest durability class.
+        Overwriting an existing object purges its cached copies (pixels,
+        latents, memo) so no tier can keep serving the old content.
         Returns the durable byte count."""
+        if oid in self.store:           # overwrite: drop every cached copy
+            for tier in self.walk.caches:
+                tier.evict(oid)
+            for node in self.nodes:
+                node.drop_payloads(oid)
         if latent is None:
             if image is None:
                 if recipe is None:
                     raise ValueError("put needs an image, latent, or recipe")
                 image = synthesize_image(recipe)
-            img4 = np.asarray(image, np.float32)
+            img4 = np.asarray(image)
+            if img4.dtype == np.uint8:      # display bytes -> [-1, 1] floats
+                img4 = img4.astype(np.float32) / 127.5 - 1.0
+            img4 = img4.astype(np.float32)
             if img4.ndim == 3:
                 img4 = img4[None]
             latent = np.asarray(
                 self.vae.encode_mean(jnp.asarray(img4)))[0].astype(np.float16)
         blob = compress_latent(np.asarray(latent))
         self.store.put(oid, blob)
+        self.batcher.forget(oid)            # durable blob rewritten
         if recipe is not None and self.recipes is not None:
             self.recipes.put(oid, float(len(blob)), recipe=recipe)
         return len(blob)
@@ -269,6 +399,7 @@ class ServingEngine:
         found = self.walk.delete(oid)
         for node in self.nodes:
             node.drop_payloads(oid)
+        self.batcher.forget(oid)
         return found
 
     def demote(self, oid: int) -> bool:
@@ -291,9 +422,9 @@ class ServingEngine:
         if blob is None:
             return False
         z = np.asarray(decompress_latent(blob), np.float32)
-        img = np.asarray(self.vae.decode(z[None]))[0]
+        img = self.batcher.decode_single(z)
         owner = self.nodes[self.walk._idx[self.walk.router.ring.owner(oid)]]
-        owner.cache.insert_image(oid)
+        owner.cache.insert_image(oid, nbytes=img.nbytes)
         owner.images[oid] = img
         return True
 
@@ -307,6 +438,7 @@ class ServingEngine:
             jnp.asarray(synthesize_image(recipe))))[0].astype(np.float16)
         blob = compress_latent(z)
         self.store.put(oid, blob)
+        self.batcher.forget(oid)            # durable blob rewritten
         self.recipes.readmit(oid, float(len(blob)), now_mo=0.0)
         return blob
 
@@ -409,6 +541,10 @@ class ServingEngine:
             # cache pinning: decoded result written back to the OWNER node
             if t.write_image or t.owner.cache.contains(t.oid) == "image":
                 t.owner.images[t.oid] = img
+                # charge the pixel tier the stored array's real bytes
+                # (uint8 on the fast path) — a size-only correction, so
+                # the LRU order stays identical to the simulator's
+                t.owner.cache.set_image_nbytes(t.oid, img.nbytes)
             touched[id(t.owner)] = t.owner
             t.img = img
         for node in touched.values():
@@ -436,4 +572,7 @@ class ServingEngine:
         out["decode_batches"] = self.batcher.stats["batches"]
         out["decodes"] = self.batcher.stats["decodes"]
         out["coalesced_decodes"] = self.batcher.stats["coalesced"]
+        out["decompressions"] = self.batcher.stats["decompressions"]
+        out["decompress_memo_hits"] = self.batcher.stats["memo_hits"]
+        out["pixel_format"] = self.cfg.pixel_format
         return out

@@ -46,8 +46,22 @@ class StoreConfig:
     tau: float = 0.1                    # tail-segment fraction (tuner signal)
     promote_threshold: int = 4          # paper h: latent hits before promote;
                                         # doubles as the spillover depth bound
-    image_bytes: float = 64e3           # per-object accounting sizes
+    #: Per-object accounting sizes.  The pixel tier stores *decoded*
+    #: pixels in ``pixel_format`` — at the uint8 default an entry costs
+    #: H*W*3 bytes, 4x less than the float32 images the engine used to
+    #: pin (the engine additionally corrects the charge to each stored
+    #: array's real ``nbytes``).  16e3 is the uint8 charge at the nominal
+    #: ~73x73 demo object the old 64e3 float32 default described.
+    image_bytes: float = 16e3
     latent_bytes: float = 13e3
+    #: Stored dtype of pixel-cache entries: 'uint8' (the fused-epilogue
+    #: fast path — displayable bytes straight off the decode) or
+    #: 'float32' (legacy [-1, 1] float pixels).  Selects the ENGINE's
+    #: decode output; the simulator has no payloads and always charges
+    #: ``image_bytes``, so set ``image_bytes`` to an entry's size in this
+    #: format (the engine corrects its charges to each array's real
+    #: nbytes, and conformance tests rely on the two agreeing).
+    pixel_format: str = "uint8"
     adaptive: bool = True               # run the marginal-hit tuner
     tuner: TunerConfig = dataclasses.field(
         default_factory=lambda: TunerConfig(window=500, step=0.02))
@@ -64,6 +78,9 @@ class StoreConfig:
     seed: int = 0
 
     def __post_init__(self) -> None:
+        if self.pixel_format not in ("uint8", "float32"):
+            raise ValueError(f"pixel_format must be 'uint8' or 'float32': "
+                             f"{self.pixel_format!r}")
         if self.node_names is not None:
             self.node_names = tuple(self.node_names)
             if len(set(self.node_names)) != len(self.node_names):
@@ -104,5 +121,8 @@ class ObjectStat:
     residency: List[str]                  # e.g. ['image@node0', 'durable']
     durable_bytes: float = 0.0
     recipe_bytes: float = 0.0
+    #: Bytes the pixel tier charges for this object (0.0 when not
+    #: pixel-resident) — real stored-array bytes on the engine backend.
+    pixel_bytes: float = 0.0
     demoted: bool = False                 # recipe-only durability class
     meta: Optional[Dict[str, Any]] = None

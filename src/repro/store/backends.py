@@ -43,6 +43,7 @@ def _stat(walk: TierWalk, store: LatentStore, regen: RegenTierStore,
         durable_bytes=st["nbytes"] if st else 0.0,
         recipe_bytes=(regen.recipe_of(oid).nbytes
                       if regen.recipe_of(oid) else 0.0),
+        pixel_bytes=walk.pixel_bytes_of(oid),
         demoted=regen.is_demoted(oid))
 
 
@@ -139,6 +140,9 @@ class SimBackend:
     def put(self, oid: int, image=None, latent=None,
             recipe: Optional[Recipe] = None, nbytes: Optional[float] = None,
             prewarm: bool = False) -> PutResult:
+        if oid in self.store:           # overwrite: purge cached copies,
+            for tier in self.walk.caches:   # mirroring the engine backend
+                tier.evict(oid)
         if nbytes is None:
             if latent is not None and hasattr(latent, "nbytes"):
                 nbytes = float(latent.nbytes)

@@ -279,7 +279,9 @@ class ShardedLatentBox:
     _SUMMED = ("image_hit", "latent_hit", "full_miss", "regen_miss",
                "spilled", "total", "cache_resident_bytes", "durable_bytes",
                "recipe_bytes", "decode_batches", "decodes",
-               "coalesced_decodes")
+               "coalesced_decodes", "decompressions",
+               "decompress_memo_hits", "pixel_cached_objects",
+               "pixel_cached_bytes")
 
     def summary(self) -> Dict[str, Any]:
         """Cluster-level stats: additive counters sum across shards, alpha
@@ -299,6 +301,13 @@ class ShardedLatentBox:
         if total:
             out["image_hit_frac"] = out["image_hit"] / total
             out["decode_frac"] = 1.0 - out["image_hit_frac"]
+        # ratio recomputes from the summed counters (a mean of per-shard
+        # ratios would weight empty shards wrong)
+        if out.get("pixel_cached_objects"):
+            out["pixel_bytes_per_object"] = (
+                out["pixel_cached_bytes"] / out["pixel_cached_objects"])
+        elif per and "pixel_bytes_per_object" in per[0]:
+            out["pixel_bytes_per_object"] = per[0]["pixel_bytes_per_object"]
         out.update(self._latency_stats())
         return out
 

@@ -133,11 +133,14 @@ class DualCacheTier(Tier):
                            promoted=res.promoted)
         return None                                   # FULL_MISS: fall through
 
-    def store(self, oid: int, format: str = "latent", **_kw) -> None:
+    def store(self, oid: int, format: str = "latent",
+              nbytes: Optional[float] = None, **_kw) -> None:
+        """Admit in either format; ``nbytes`` charges the payload's real
+        byte size (engine backends know it, the simulator estimates)."""
         if format == "image":
-            self.cache.insert_image(oid)
+            self.cache.insert_image(oid, nbytes=nbytes)
         else:
-            self.cache.admit_latent(oid)
+            self.cache.admit_latent(oid, nbytes=nbytes)
 
     def evict(self, oid: int) -> bool:
         found = self.cache.evict(oid)

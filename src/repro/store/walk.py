@@ -157,6 +157,17 @@ class TierWalk:
             tier.evict(oid)
         return True
 
+    def pixel_bytes_of(self, oid: int) -> float:
+        """Bytes the pixel tier charges for ``oid`` (0.0 when not
+        pixel-resident on any node).  The engine corrects these charges to
+        the stored array's real dtype bytes, so this is actual-uint8-sized
+        on the fast path."""
+        for tier in self.caches:
+            sz = tier.cache.image_tier.size_of(oid)
+            if sz is not None:
+                return float(sz)
+        return 0.0
+
     def residency(self, oid: int) -> List[str]:
         out: List[str] = []
         for i, tier in enumerate(self.caches):
@@ -180,6 +191,15 @@ class TierWalk:
         out["alpha"] = [round(t.cache.alpha, 3) for t in self.caches]
         out["cache_resident_bytes"] = float(
             sum(t.resident_bytes for t in self.caches))
+        # pixel-tier byte economics: resident charges are real stored
+        # bytes on the engine (uint8 fast path), config estimates on the sim
+        out["pixel_cached_objects"] = int(
+            sum(len(t.cache.image_tier) for t in self.caches))
+        out["pixel_cached_bytes"] = float(
+            sum(t.cache.image_tier.resident_bytes for t in self.caches))
+        out["pixel_bytes_per_object"] = (
+            out["pixel_cached_bytes"] / out["pixel_cached_objects"]
+            if out["pixel_cached_objects"] else float(self.cfg.image_bytes))
         out["durable_bytes"] = self.durable.resident_bytes
         if self.recipes is not None:
             out["recipe_bytes"] = self.recipes.resident_bytes

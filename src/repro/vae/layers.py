@@ -156,10 +156,15 @@ def upsample_init(key, c: int, dtype=jnp.float32) -> Params:
 
 def upsample(x: jax.Array, p: Params,
              impl: Optional[str] = None) -> jax.Array:
-    """Nearest-neighbor 2x + 3x3 conv (SD decoder upsampler)."""
-    n, h, w, c = x.shape
-    x = jnp.repeat(jnp.repeat(x, 2, axis=1), 2, axis=2)
-    return conv2d(x, p["conv"], impl=impl)
+    """Nearest-neighbor 2x + 3x3 conv (SD decoder upsampler).
+
+    Dispatches through :func:`repro.kernels.ops.upsample_conv3x3`: the
+    Pallas kernel computes the conv directly from the pre-upsample tensor
+    (phase-decomposed 2x2 taps — the 4x upsampled intermediate never
+    touches HBM); the XLA impl is the identical repeat + conv.
+    """
+    from repro.kernels import ops                     # late import (no cycle)
+    return ops.upsample_conv3x3(x, p["conv"]["w"], p["conv"]["b"], impl=impl)
 
 
 def downsample_init(key, c: int, dtype=jnp.float32) -> Params:

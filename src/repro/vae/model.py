@@ -118,9 +118,10 @@ def init_encoder(key, cfg: VAEConfig) -> Dict[str, Any]:
 # forward passes
 # ---------------------------------------------------------------------------
 
-def decode(params: Dict[str, Any], z: jax.Array, cfg: VAEConfig,
-           impl: Optional[str] = None) -> jax.Array:
-    """latent [N, h, w, C_lat] -> image [N, 8h, 8w, 3] in [-1, 1]."""
+def _decode_trunk(params: Dict[str, Any], z: jax.Array, cfg: VAEConfig,
+                  impl: Optional[str] = None) -> jax.Array:
+    """Shared decode trunk: latent -> pre-epilogue activation [N, 8h, 8w,
+    C0] (everything up to, excluding, norm_out + conv_out)."""
     z = z / cfg.scaling_factor + cfg.shift_factor
     x = L.conv2d(z, params["conv_in"], impl=impl)
     x = L.resnet_block(x, params["mid"]["res1"], cfg.groups, impl)
@@ -131,8 +132,33 @@ def decode(params: Dict[str, Any], z: jax.Array, cfg: VAEConfig,
             x = L.resnet_block(x, blk, cfg.groups, impl)
         if "upsample" in level:
             x = L.upsample(x, level["upsample"], impl=impl)
+    return x
+
+
+def decode(params: Dict[str, Any], z: jax.Array, cfg: VAEConfig,
+           impl: Optional[str] = None) -> jax.Array:
+    """latent [N, h, w, C_lat] -> image [N, 8h, 8w, 3] in [-1, 1]."""
+    x = _decode_trunk(params, z, cfg, impl)
     x = L.gn_silu(x, params["norm_out"], groups=cfg.groups, impl=impl)
     return L.conv2d(x, params["conv_out"], impl=impl)
+
+
+def decode_u8(params: Dict[str, Any], z: jax.Array, cfg: VAEConfig,
+              impl: Optional[str] = None) -> jax.Array:
+    """The uint8 regeneration fast path: latent [N, h, w, C_lat] ->
+    displayable uint8 image [N, 8h, 8w, 3].
+
+    Same trunk as :func:`decode`, but the final GN + SiLU + conv_out +
+    clamp + quantize runs as one fused epilogue
+    (:func:`repro.kernels.ops.output_epilogue`), so the compiled graph's
+    last write — and the device->host transfer — is the uint8 image at
+    1/4 the float32 bytes."""
+    x = _decode_trunk(params, z, cfg, impl)
+    from repro.kernels import ops                     # late import (no cycle)
+    return ops.output_epilogue(
+        x, params["norm_out"]["scale"], params["norm_out"]["bias"],
+        params["conv_out"]["w"], params["conv_out"]["b"],
+        groups=cfg.groups, impl=impl)
 
 
 def encode(params: Dict[str, Any], x: jax.Array, cfg: VAEConfig,
@@ -170,10 +196,21 @@ class VAE:
         self.decoder = init_decoder(kd, cfg)
         self.encoder = init_encoder(ke, cfg) if with_encoder else None
         self._decode = jax.jit(lambda p, z: decode(p, z, cfg, impl))
+        # the uint8 fast path donates the latent batch: the batcher stacks
+        # a fresh buffer per flush, so the compiled decode can reuse it
+        # in-place (donation is a no-op where the backend lacks support,
+        # e.g. CPU — gated to keep the run warning-free there)
+        donate = () if jax.default_backend() == "cpu" else (1,)
+        self._decode_u8 = jax.jit(lambda p, z: decode_u8(p, z, cfg, impl),
+                                  donate_argnums=donate)
         self._encode = jax.jit(lambda p, x: encode(p, x, cfg, impl))
 
     def decode(self, z: jax.Array) -> jax.Array:
         return self._decode(self.decoder, z)
+
+    def decode_u8(self, z: jax.Array) -> jax.Array:
+        """Donated end-to-end fast path: latents -> uint8 HWC pixels."""
+        return self._decode_u8(self.decoder, z)
 
     def encode_mean(self, x: jax.Array) -> jax.Array:
         return self._encode(self.encoder, x)[0]

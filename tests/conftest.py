@@ -43,7 +43,10 @@ def conformance_config(n_nodes: int, **kw):
     """
     from repro.core.tuner import TunerConfig
     from repro.store import StoreConfig
-    base = dict(n_nodes=n_nodes, cache_bytes_per_node=2e4, image_bytes=3e3,
+    # image_bytes = uint8 nbytes of a decoded 16x16x3 image: the engine
+    # backend charges real stored-array bytes, so every cell of the
+    # differential matrix must estimate the same truth
+    base = dict(n_nodes=n_nodes, cache_bytes_per_node=2e4, image_bytes=768.0,
                 latent_bytes=6e2, promote_threshold=2,
                 tuner=TunerConfig(window=10**9))
     base.update(kw)

@@ -39,7 +39,9 @@ def store(vae):
 def make_engine(vae, store, **kw):
     cfg = EngineConfig(n_nodes=2, cache_bytes_per_node=1e5,
                        tuner=TunerConfig(window=50, step=0.02), **kw)
-    return ServingEngine(vae, store, cfg, image_bytes=3e3, latent_bytes=6e2)
+    # image_bytes = real uint8 nbytes of a 16x16x3 decode (the engine
+    # corrects the charge to the stored array's nbytes anyway)
+    return ServingEngine(vae, store, cfg, image_bytes=768.0, latent_bytes=6e2)
 
 
 class TestBitIdenticalBatching:
@@ -60,7 +62,7 @@ class TestBitIdenticalBatching:
         assert eng.batcher.stats["padded_slots"] == 1
         for oid, (img, _) in zip([0, 1, 2], res):
             z = decompress_latent(store.get(oid))
-            direct = np.asarray(vae.decode(
+            direct = np.asarray(vae.decode_u8(
                 jnp.asarray(z, jnp.float32)[None]))[0]
             np.testing.assert_array_equal(img, direct)
 
@@ -70,7 +72,7 @@ class TestBitIdenticalBatching:
         assert eng.batcher.stats["batches"] == 2
         for oid, (img, _) in zip(range(N_OBJECTS), res):
             z = decompress_latent(store.get(oid))
-            direct = np.asarray(vae.decode(
+            direct = np.asarray(vae.decode_u8(
                 jnp.asarray(z, jnp.float32)[None]))[0]
             np.testing.assert_array_equal(img, direct)
 
@@ -144,7 +146,7 @@ class TestAbortedWindow:
         assert eng.batcher.stats["decodes"] == decodes_before + 2
         for oid, (img, _) in zip([2, 3], res):
             z = decompress_latent(store.get(oid))
-            direct = np.asarray(vae.decode(
+            direct = np.asarray(vae.decode_u8(
                 jnp.asarray(z, jnp.float32)[None]))[0]
             np.testing.assert_array_equal(img, direct)
 

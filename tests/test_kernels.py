@@ -13,7 +13,9 @@ from repro.kernels.decode_attention import decode_attention
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.gn_silu import group_norm_silu
 from repro.kernels.gn_silu_conv import gn_silu_conv3x3
+from repro.kernels.output_epilogue import output_epilogue
 from repro.kernels.rwkv6_scan import rwkv6_scan
+from repro.kernels.upsample_conv import upsample_conv3x3
 
 R = np.random.default_rng(0)
 
@@ -102,6 +104,95 @@ def test_gn_silu_conv3x3_bf16():
     np.testing.assert_allclose(np.asarray(out, np.float32),
                                np.asarray(want, np.float32),
                                atol=tol(jnp.bfloat16), rtol=tol(jnp.bfloat16))
+
+
+@pytest.mark.parametrize("n,h,w,cin,cout", [
+    (1, 8, 8, 16, 32), (2, 16, 12, 8, 8), (1, 32, 32, 64, 128),
+    (1, 5, 7, 4, 4), (1, 1, 1, 8, 8), (3, 4, 4, 32, 16),
+])
+def test_upsample_conv3x3(n, h, w, cin, cout):
+    """Fused nearest-2x upsample + conv (phase-decomposed) vs the
+    upsample-then-conv oracle — the 4x intermediate never materializes."""
+    x = arr((n, h, w, cin))
+    wt = arr((3, 3, cin, cout), scale=0.1)
+    b = arr((cout,))
+    out = upsample_conv3x3(x, wt, b, rows=8, interpret=True)
+    assert out.shape == (n, 2 * h, 2 * w, cout)
+    want = ref.upsample_conv3x3_ref(x, wt, b)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=1e-4)
+
+
+def test_upsample_conv3x3_no_bias():
+    x = arr((1, 8, 8, 8))
+    wt = arr((3, 3, 8, 8), scale=0.1)
+    out = upsample_conv3x3(x, wt, interpret=True)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(ref.upsample_conv3x3_ref(x, wt)),
+                               atol=1e-4)
+
+
+def test_upsample_conv3x3_bf16():
+    x = arr((1, 8, 8, 16), jnp.bfloat16)
+    wt = arr((3, 3, 16, 16), jnp.bfloat16, scale=0.1)
+    b = arr((16,), jnp.bfloat16)
+    out = upsample_conv3x3(x, wt, b, interpret=True)
+    want = ref.upsample_conv3x3_ref(x, wt, b)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=tol(jnp.bfloat16), rtol=tol(jnp.bfloat16))
+
+
+def test_upsample_conv3x3_matches_unfused_decode_path():
+    """The fused op must agree with what the decoder used to compute:
+    jnp.repeat upsample followed by the conv3x3 kernel."""
+    x = arr((1, 6, 6, 8))
+    wt = arr((3, 3, 8, 8), scale=0.1)
+    b = arr((8,))
+    fused = upsample_conv3x3(x, wt, b, rows=4, interpret=True)
+    x2 = jnp.repeat(jnp.repeat(x, 2, axis=1), 2, axis=2)
+    unfused = conv3x3(x2, wt, b, rows=4, interpret=True)
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(unfused),
+                               atol=1e-4)
+
+
+@pytest.mark.parametrize("n,h,w,cin,groups", [
+    (1, 8, 8, 16, 4), (2, 16, 12, 8, 2), (1, 5, 7, 4, 2),
+    (1, 32, 32, 64, 8), (3, 4, 4, 32, 8),
+])
+def test_output_epilogue(n, h, w, cin, groups):
+    """Fused GN+SiLU+conv_out+clamp+uint8 vs the composed oracle: any
+    disagreement is at most the 1-LSB rounding boundary."""
+    x = arr((n, h, w, cin))
+    s = arr((cin,))
+    gb = arr((cin,))
+    wt = arr((3, 3, cin, 3), scale=0.1)
+    b = arr((3,), scale=0.1)
+    out = output_epilogue(x, s, gb, wt, b, groups=groups, rows=8,
+                          interpret=True)
+    assert out.dtype == jnp.uint8
+    want = ref.output_epilogue_ref(x, s, gb, wt, b, groups=groups)
+    lsb = np.abs(np.asarray(out, np.int16) - np.asarray(want, np.int16))
+    assert lsb.max() <= 1
+
+
+def test_output_epilogue_saturates():
+    """Large pre-activations clamp to exactly 0 / 255, never wrap."""
+    x = arr((1, 8, 8, 8), scale=5.0)
+    s = arr((8,), scale=5.0)
+    gb = arr((8,), scale=5.0)
+    wt = arr((3, 3, 8, 3), scale=5.0)
+    out = np.asarray(output_epilogue(x, s, gb, wt, groups=2, rows=8,
+                                     interpret=True))
+    want = np.asarray(ref.output_epilogue_ref(x, s, gb, wt, groups=2))
+    assert set(np.unique(out)) <= set(np.unique(want)) | {0, 255}
+    assert np.abs(out.astype(np.int16) - want.astype(np.int16)).max() <= 1
+
+
+def test_quantize_u8_round_trip_anchors():
+    """The display mapping hits the exact anchor bytes."""
+    y = jnp.asarray([-2.0, -1.0, 0.0, 1.0, 2.0], jnp.float32)
+    np.testing.assert_array_equal(
+        np.asarray(ref.quantize_u8_ref(y)), [0, 0, 128, 255, 255])
 
 
 @pytest.mark.parametrize("n,hq,hkv,sq,skv,d,causal,window", [

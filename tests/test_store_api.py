@@ -31,7 +31,10 @@ N_OBJECTS = 12
 
 
 def small_cfg(**kw):
-    base = dict(n_nodes=2, cache_bytes_per_node=2e4, image_bytes=3e3,
+    # image_bytes is the uint8 nbytes of a decoded 16x16x3 test image:
+    # the engine charges the stored array's REAL bytes, so engine/sim
+    # parity requires the config estimate to match the truth
+    base = dict(n_nodes=2, cache_bytes_per_node=2e4, image_bytes=768.0,
                 latent_bytes=6e2, promote_threshold=2,
                 tuner=TunerConfig(window=10**9))
     base.update(kw)
@@ -58,7 +61,7 @@ class TestRoundTrip:
         img = synthesize_image(Recipe(seed=3, height=16, width=16))
         box.put(7, image=img)
         z = np.asarray(vae.encode_mean(jnp.asarray(img)))[0].astype(np.float16)
-        direct = np.asarray(vae.decode(jnp.asarray(z, jnp.float32)[None]))[0]
+        direct = np.asarray(vae.decode_u8(jnp.asarray(z, jnp.float32)[None]))[0]
         got = box.get(7)
         assert got.hit_class == FULL_MISS
         np.testing.assert_array_equal(got.payload, direct)

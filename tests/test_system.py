@@ -82,11 +82,12 @@ class TestServingEngine:
         assert s["image_hit"] > 0 and s["latent_hit"] > 0
         tail = outcomes[-100:]
         assert sum(o != "full_miss" for o in tail) > 60
-        # decoded pixels identical to a direct decode (cache correctness)
+        # decoded pixels identical to a direct decode (cache correctness;
+        # the engine serves the uint8 fast path)
         oid = int(ids[-1])
         img1, _ = eng.get(oid)
         z = decompress_latent(store.get(oid))
-        img2 = np.asarray(vae.decode(jnp.asarray(z, jnp.float32)[None]))[0]
+        img2 = np.asarray(vae.decode_u8(jnp.asarray(z, jnp.float32)[None]))[0]
         np.testing.assert_array_equal(img1, img2)
 
 
