@@ -10,10 +10,11 @@ import numpy as np
 
 from benchmarks.common import Rows, Timer, bench_trace, scale
 from repro.core.policies import MixedFormatLRU
+from repro.store.api import DEFAULT_OBJECT_BYTES
 from repro.core.replay import ReplayConfig, replay
 from repro.core.tuner import TunerConfig
 
-IMG_B, LAT_B = 1.4e6, 0.28e6
+IMG_B, LAT_B = 1.4e6, DEFAULT_OBJECT_BYTES
 T_DEC, T_FETCH = 40.0, 140.0
 
 

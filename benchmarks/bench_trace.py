@@ -27,6 +27,7 @@ import numpy as np
 
 from benchmarks.common import Rows, Timer, bench_trace, scale
 from repro.core.policies import BeladyCache, LRUCache, S3FIFOCache, miss_ratio
+from repro.store.api import DEFAULT_OBJECT_BYTES
 from repro.store import (FULL_MISS, IMAGE_HIT, LATENT_HIT, REGEN_MISS,
                          LatentBox, StoreConfig)
 from repro.trace.synth import (TraceConfig, generate_trace, list_scenarios,
@@ -56,7 +57,7 @@ def facade_replay(ids: np.ndarray, timestamps_ms: np.ndarray,
         n_nodes=n_nodes // shards,
         cache_bytes_per_node=max(wss * PX_FLOAT32 * cache_frac / n_nodes,
                                  2e6),
-        image_bytes=image_bytes, latent_bytes=0.28e6), shards=shards)
+        image_bytes=image_bytes, latent_bytes=DEFAULT_OBJECT_BYTES), shards=shards)
     for oid in np.unique(ids):
         box.put(int(oid))
     with Timer() as t:

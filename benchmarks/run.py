@@ -33,13 +33,16 @@ MODULES = [
 
 def trajectory() -> None:
     """Perf-trajectory mode: write ``BENCH_decode.json`` +
-    ``BENCH_kernels.json`` at the repo root (versioned, unlike the
-    artifacts/ scratch) — per-bucket per-image decode ms, fast-path
-    speedups, kernel-vs-oracle errors and traffic wins, pixel-tier
-    bytes/object — so later checkouts have a trend to regress against."""
-    from benchmarks import bench_decode, bench_kernels
+    ``BENCH_kernels.json`` + ``BENCH_storage.json`` at the repo root
+    (versioned, unlike the artifacts/ scratch) — per-bucket per-image
+    decode ms, fast-path speedups, kernel-vs-oracle errors and traffic
+    wins, pixel-tier bytes/object, and the durable store's measured
+    on-disk savings / recovery ms / compaction write amplification — so
+    later checkouts have a trend to regress against."""
+    from benchmarks import bench_decode, bench_kernels, bench_storage
     bench_decode.trajectory().print()
     bench_kernels.trajectory().print()
+    bench_storage.trajectory().print()
 
 
 def main() -> None:

@@ -9,12 +9,13 @@ Phase 2: catalog explodes past the cache -> coverage matters -> alpha falls.
 import numpy as np
 
 from repro.core.dual_cache import DualFormatCache
+from repro.store.api import DEFAULT_OBJECT_BYTES
 from repro.core.tuner import MarginalHitTuner, TunerConfig
 
 rng = np.random.default_rng(0)
 cache = DualFormatCache(400 * 1.4e6, alpha=0.5, promote_threshold=4,
                         image_size_fn=lambda _: 1.4e6,
-                        latent_size_fn=lambda _: 0.28e6)
+                        latent_size_fn=lambda _: DEFAULT_OBJECT_BYTES)
 tuner = MarginalHitTuner(cache, TunerConfig(window=4000, step=0.03))
 
 def serve(ids):

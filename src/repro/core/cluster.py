@@ -36,6 +36,7 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro.core.latent_store import DEFAULT_OBJECT_BYTES
 from repro.core.dual_cache import (DualFormatCache, FULL_MISS, IMAGE_HIT,
                                    LATENT_HIT)
 from repro.core.latent_store import LatentStore, StoreLatencyModel
@@ -59,7 +60,7 @@ class ClusterConfig:
     #: (H*W*3) is what the serving engine actually pins since the fused
     #: uint8 decode epilogue.
     image_bytes: float = 1.4e6
-    latent_bytes: float = 0.28e6
+    latent_bytes: float = DEFAULT_OBJECT_BYTES
     # LB cache policy
     alpha0: float = 0.5
     adaptive: bool = True

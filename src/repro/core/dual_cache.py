@@ -25,6 +25,8 @@ import dataclasses
 from collections import OrderedDict
 from typing import Callable, Dict, Iterator, List, Optional, Tuple
 
+from repro.core.latent_store import DEFAULT_OBJECT_BYTES
+
 # ---------------------------------------------------------------------------
 # Segmented LRU
 # ---------------------------------------------------------------------------
@@ -258,7 +260,7 @@ class DualFormatCache:
         self.alpha = float(alpha)
         self.h = int(promote_threshold)
         self.image_size_fn = image_size_fn or (lambda oid: 1.4e6)
-        self.latent_size_fn = latent_size_fn or (lambda oid: 0.28e6)
+        self.latent_size_fn = latent_size_fn or (lambda oid: DEFAULT_OBJECT_BYTES)
         self._latent_hits: Dict[int, int] = {}   # promotion counters
         self.image_tier = SegmentedLRU(self.capacity * self.alpha, tau)
         self.latent_tier = SegmentedLRU(

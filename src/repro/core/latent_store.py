@@ -1,15 +1,25 @@
-"""Durable object store stand-in (paper: AWS S3).
+"""Durable object store (paper: AWS S3) over a pluggable byte backend.
 
-Source of truth for every object.  Stores real payloads when given them
-(the quickstart/e2e examples store actual compressed latents) and models
-fetch latency the way §6.3.3 characterizes it: cold, long-tail objects see
-higher and more variable latency than objects kept warm by the store's own
-internal caching layers (the Decode-All effect).
+Source of truth for every object.  Since the log-structured-store refactor
+this class is a thin façade: *where bytes live* is delegated to a
+:class:`~repro.store.durable.backend.DurableBackend` — the in-memory
+:class:`~repro.store.durable.backend.MemoryBackend` by default (simulation
+conformance; nothing survives the process), or a
+:class:`~repro.store.durable.backend.SegmentLogBackend` when the box is
+opened on a directory (``LatentBox.open(path)``), in which case every
+acknowledged put is an on-disk, checksummed, crash-recoverable record.
+
+What stays here is the store's *performance model* and per-process
+bookkeeping: fetch latency the way §6.3.3 characterizes it — cold,
+long-tail objects see higher and more variable latency than objects kept
+warm by the store's own internal caching layers (the Decode-All effect):
 
     fetch_ms = lognormal(base)  +  nbytes / effective_bandwidth
 
 with the lognormal median dropping from ``cold_ms`` to ``warm_ms`` when the
-object was fetched within ``warm_window_s``.
+object was fetched within ``warm_window_s``.  Warmth and latency epochs are
+deliberately NOT durable state: a reopened store serves every byte
+bit-exact but starts cold, exactly like a store node rejoining a fleet.
 """
 
 from __future__ import annotations
@@ -18,6 +28,13 @@ import dataclasses
 from typing import Dict, Optional
 
 import numpy as np
+
+#: The canonical "I don't know this object's size" accounting default —
+#: a 0.28 MB compressed SD3.5-class latent (paper Table 1b).  Re-exported
+#: as :data:`repro.store.api.DEFAULT_OBJECT_BYTES` (the public name);
+#: defined here because ``core`` modules cannot import ``repro.store``
+#: at module scope without a cycle.
+DEFAULT_OBJECT_BYTES = 0.28e6
 
 
 @dataclasses.dataclass(frozen=True)
@@ -34,12 +51,15 @@ class LatentStore:
     """Object store: id -> payload bytes (or just a size for simulation)."""
 
     def __init__(self, latency: Optional[StoreLatencyModel] = None,
-                 seed: int = 0):
+                 seed: int = 0, backend=None):
         self.latency = latency or StoreLatencyModel()
+        if backend is None:
+            # deferred: repro.store imports this module at its own top level
+            from repro.store.durable.backend import MemoryBackend
+            backend = MemoryBackend()
+        self.backend = backend
         self._seed = int(seed)
         self._rng = np.random.default_rng(seed)
-        self._blobs: Dict[int, bytes] = {}
-        self._sizes: Dict[int, float] = {}
         self._last_fetch_s: Dict[int, float] = {}
         self._epoch: Dict[int, int] = {}    # bumped on delete: re-put objects
         #                                     draw from a fresh latency stream
@@ -48,25 +68,38 @@ class LatentStore:
 
     # -- durable writes --------------------------------------------------------
     def put(self, oid: int, blob: bytes) -> None:
-        self._blobs[oid] = blob
-        self._sizes[oid] = float(len(blob))
+        self.backend.put_blob(oid, blob)
 
     def put_size(self, oid: int, nbytes: float) -> None:
         """Register an object by size only (simulation mode)."""
-        self._sizes[oid] = float(nbytes)
+        self.backend.put_size(oid, float(nbytes))
 
     def get(self, oid: int) -> Optional[bytes]:
-        return self._blobs.get(oid)
+        return self.backend.get_blob(oid)
 
-    def size_of(self, oid: int, default: float = 0.28e6) -> float:
-        return self._sizes.get(oid, default)
+    def size_of(self, oid: int,
+                default: float = DEFAULT_OBJECT_BYTES) -> float:
+        sz = self.backend.size_of(oid)
+        return default if sz is None else sz
 
     @property
     def total_bytes(self) -> float:
-        return float(sum(self._sizes.values()))
+        return self.backend.total_bytes
 
     def __contains__(self, oid: int) -> bool:
-        return oid in self._sizes or oid in self._blobs
+        return self.backend.contains(oid)
+
+    # -- durability hooks --------------------------------------------------------
+    def flush(self) -> None:
+        """Crash-durability barrier (no-op on the memory backend)."""
+        self.backend.flush()
+
+    def maybe_compact(self) -> int:
+        """One bounded online-compaction step (no-op in memory)."""
+        return self.backend.maybe_compact()
+
+    def close(self) -> None:
+        self.backend.close()
 
     # -- lifecycle ---------------------------------------------------------------
     def delete(self, oid: int) -> bool:
@@ -77,9 +110,7 @@ class LatentStore:
         and bumps the object's latency epoch, so a re-put namesake draws
         from a fresh per-call seed stream instead of replaying the deleted
         object's fetch-latency samples."""
-        found = oid in self
-        self._blobs.pop(oid, None)
-        self._sizes.pop(oid, None)
+        found = self.backend.delete(oid)
         self._last_fetch_s.pop(oid, None)
         if found:
             self._epoch[oid] = self._epoch.get(oid, 0) + 1
@@ -92,7 +123,7 @@ class LatentStore:
             return None
         return {
             "nbytes": self.size_of(oid),
-            "has_payload": oid in self._blobs,
+            "has_payload": self.backend.has_blob(oid),
             "last_fetch_s": self._last_fetch_s.get(oid, float("-inf")),
             "epoch": self._epoch.get(oid, 0),
         }

@@ -14,6 +14,8 @@ from typing import Dict, Iterable, List, Optional, Sequence
 
 import numpy as np
 
+from repro.core.latent_store import DEFAULT_OBJECT_BYTES
+
 
 class CachePolicy:
     name = "base"
@@ -240,7 +242,7 @@ class MixedFormatLRU(CachePolicy):
     name = "mixed_lru"
 
     def __init__(self, capacity: float, image_size: float = 1.4e6,
-                 latent_size: float = 0.28e6, promote_threshold: int = 8):
+                 latent_size: float = DEFAULT_OBJECT_BYTES, promote_threshold: int = 8):
         self.lru = LRUCache(capacity)
         self.image_size = image_size
         self.latent_size = latent_size

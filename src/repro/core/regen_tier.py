@@ -52,6 +52,13 @@ class Recipe:
     def nbytes(self) -> int:
         return 4 * 8 + len(self.model.encode()) + len(self.prompt.encode())
 
+    def to_json(self) -> Dict:
+        return dataclasses.asdict(self)
+
+    @staticmethod
+    def from_json(d: Dict) -> "Recipe":
+        return Recipe(**d)
+
 
 def synthesize_image(recipe: Recipe) -> np.ndarray:
     """Deterministic stand-in for the diffusion pipeline: recipe -> pixels.
@@ -105,13 +112,53 @@ class RegenTierStore:
     `generation_ms`) and re-admits the regenerated latent.
     """
 
-    def __init__(self, policy: Optional[RegenPolicy] = None):
+    def __init__(self, policy: Optional[RegenPolicy] = None, journal=None):
+        """``journal`` (optional) is the shared durable
+        :class:`~repro.store.durable.log.SegmentLog`: every state mutation
+        appends a full-state recipe record, so recipes and demotion flags
+        ride the same crash-recoverable log as the latent blobs.  Access
+        *touches* (``fetch``) are deliberately not journaled — they would
+        turn every read into a write; last-access times persist as of the
+        last mutation/checkpoint and recovery may see them slightly
+        stale."""
         self.policy = policy or RegenPolicy()
+        self.journal = journal
         self._latents: Dict[int, float] = {}     # oid -> bytes
         self._recipes: Dict[int, float] = {}
         self._recipe_payloads: Dict[int, Recipe] = {}
         self._last_access_mo: Dict[int, float] = {}
         self.n_regens = 0
+
+    # -- durability ------------------------------------------------------------
+    def _journal_state(self, oid: int) -> None:
+        if self.journal is None:
+            return
+        recipe = self._recipe_payloads.get(oid)
+        self.journal.put_recipe_state(oid, {
+            "recipe": recipe.to_json() if recipe is not None else None,
+            "recipe_nbytes": self._recipes[oid],
+            "latent_bytes": self._latents.get(oid),   # None => demoted
+            "last_access_mo": self._last_access_mo.get(oid, 0.0),
+        })
+
+    def _journal_delete(self, oid: int) -> None:
+        if self.journal is not None:
+            self.journal.delete_recipe(oid)
+
+    def restore_state(self, oid: int, state: Dict) -> None:
+        """Apply one recovered/ingested full-state record without
+        re-journaling it (it is already durable in the log)."""
+        oid = int(oid)
+        self._recipes[oid] = float(state["recipe_nbytes"])
+        if state.get("recipe") is not None:
+            self._recipe_payloads[oid] = Recipe.from_json(state["recipe"])
+        else:
+            self._recipe_payloads.pop(oid, None)
+        if state.get("latent_bytes") is not None:
+            self._latents[oid] = float(state["latent_bytes"])
+        else:
+            self._latents.pop(oid, None)
+        self._last_access_mo[oid] = float(state.get("last_access_mo", 0.0))
 
     def put(self, oid: int, latent_bytes: float, now_mo: float = 0.0,
             recipe: Optional[Recipe] = None,
@@ -124,6 +171,7 @@ class RegenTierStore:
         if recipe is not None:
             self._recipe_payloads[oid] = recipe
         self._last_access_mo[oid] = now_mo
+        self._journal_state(oid)
 
     def recipe_of(self, oid: int) -> Optional[Recipe]:
         return self._recipe_payloads.get(oid)
@@ -152,6 +200,7 @@ class RegenTierStore:
         if oid not in self._latents or oid not in self._recipes:
             return False
         del self._latents[oid]
+        self._journal_state(oid)
         return True
 
     def delete(self, oid: int) -> bool:
@@ -160,6 +209,8 @@ class RegenTierStore:
         self._recipes.pop(oid, None)
         self._recipe_payloads.pop(oid, None)
         self._last_access_mo.pop(oid, None)
+        if found:
+            self._journal_delete(oid)
         return found
 
     def fetch(self, oid: int, now_mo: float) -> Tuple[float, bool]:
@@ -177,6 +228,8 @@ class RegenTierStore:
         accessed, so it's warm by definition)."""
         self._latents[oid] = latent_bytes
         self._last_access_mo[oid] = now_mo
+        if oid in self._recipes:
+            self._journal_state(oid)
 
     def run_demotion(self, now_mo: float,
                      age_override_mo: Optional[float] = None) -> int:
@@ -188,6 +241,8 @@ class RegenTierStore:
                    if oid in self._latents and now_mo - t > cutoff]
         for oid in victims:
             del self._latents[oid]
+            if oid in self._recipes:
+                self._journal_state(oid)
         return len(victims)
 
     @property

@@ -16,6 +16,7 @@ import numpy as np
 
 from repro.core.dual_cache import (DualFormatCache, FULL_MISS, IMAGE_HIT,
                                    LATENT_HIT)
+from repro.core.latent_store import DEFAULT_OBJECT_BYTES
 from repro.core.tuner import MarginalHitTuner, TunerConfig, TunerRecord
 
 
@@ -28,7 +29,7 @@ class ReplayConfig:
     promote_threshold: int = 8
     admit_on_miss: str = "latent"
     image_bytes: float = 1.4e6
-    latent_bytes: float = 0.28e6
+    latent_bytes: float = DEFAULT_OBJECT_BYTES
     t_decode_ms: float = 40.0
     t_fetch_ms: float = 140.0
     tuner: TunerConfig = dataclasses.field(

@@ -62,6 +62,11 @@ class EngineConfig:
     adaptive: bool = True               # run the marginal-hit tuner
     tuner: TunerConfig = dataclasses.field(
         default_factory=lambda: TunerConfig(window=500, step=0.02))
+    #: Injectable wall clock (seconds): every engine-side ``now_s`` —
+    #: notably the store-latency warmth draws — routes through it, so
+    #: tests can pin or advance time deterministically.  ``None`` =
+    #: ``time.time``.
+    clock: Optional[Any] = None
     #: Deprecated alias of ``promote_threshold`` — passing it is an error.
     theta: dataclasses.InitVar[Optional[int]] = None
 
@@ -83,7 +88,7 @@ class EngineConfig:
             image_bytes=image_bytes, latent_bytes=latent_bytes,
             adaptive=self.adaptive, tuner=self.tuner,
             decode_buckets=self.decode_buckets,
-            pixel_format=self.pixel_format)
+            pixel_format=self.pixel_format, clock=self.clock)
 
 
 class _Node:
@@ -489,8 +494,10 @@ class ServingEngine:
             if blob is None:
                 raise KeyError(f"object {oid} has no durable payload "
                                "(size-only registration?)")
+            # store warmth keys on the INJECTABLE clock (cfg.now_s), not
+            # bare wall time, so latency draws are deterministic under test
             fetch_ms = ((time.perf_counter() - t0) * 1e3
-                        + self.store.fetch_ms(oid, time.time()))
+                        + self.store.fetch_ms(oid, self.cfg.now_s()))
             if owner.tuner is not None:
                 owner.tuner.observe_fetch_ms(fetch_ms)
             if self.walk.admit_latent(ticket.owner, oid):
@@ -549,7 +556,17 @@ class ServingEngine:
             t.img = img
         for node in touched.values():
             self._gc(node)
+        self._durable_maintenance()
         return tickets
+
+    def _durable_maintenance(self) -> None:
+        """End-of-window durability work, threaded into the request loop:
+        flush write-behind appends (acknowledging them) and run at most
+        one online-compaction step — bounded work per window, so serving
+        latency never absorbs a stop-the-world sweep.  Both are no-ops on
+        the in-memory backend."""
+        self.store.flush()
+        self.store.maybe_compact()
 
     def _flush(self) -> Dict[int, np.ndarray]:
         try:

@@ -13,10 +13,12 @@ request identically; they differ only in how payloads and latencies are
 produced.
 """
 
-from repro.store.api import (GetResult, HIT_CLASSES, ObjectStat, PutResult,
-                             StoreConfig, IMAGE_HIT, LATENT_HIT, FULL_MISS,
-                             REGEN_MISS)
+from repro.store.api import (DEFAULT_OBJECT_BYTES, GetResult, HIT_CLASSES,
+                             ObjectStat, PutResult, StoreConfig, IMAGE_HIT,
+                             LATENT_HIT, FULL_MISS, REGEN_MISS)
 from repro.store.backends import EngineBackend, SimBackend
+from repro.store.durable import (Compactor, DurableBackend, MemoryBackend,
+                                 SegmentLog, SegmentLogBackend)
 from repro.store.facade import LatentBox
 from repro.store.sharding import ReshardReport, ShardedLatentBox
 from repro.store.tiers import (DualCacheTier, DurableTier, RecipeTier, Tier,
@@ -28,5 +30,7 @@ __all__ = [
     "EngineBackend", "SimBackend", "ShardedLatentBox", "ReshardReport",
     "Tier", "TierHit", "DualCacheTier", "DurableTier", "RecipeTier",
     "TierWalk", "WalkTicket",
+    "DurableBackend", "MemoryBackend", "SegmentLogBackend", "SegmentLog",
+    "Compactor", "DEFAULT_OBJECT_BYTES",
     "IMAGE_HIT", "LATENT_HIT", "FULL_MISS", "REGEN_MISS", "HIT_CLASSES",
 ]

@@ -8,12 +8,14 @@ without cycles.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, List, Optional, Tuple
+import time
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
 from repro.core.dual_cache import FULL_MISS, IMAGE_HIT, LATENT_HIT
-from repro.core.latent_store import StoreLatencyModel
+from repro.core.latent_store import (DEFAULT_OBJECT_BYTES,
+                                     StoreLatencyModel)
 from repro.core.tuner import TunerConfig
 
 #: Fourth hit class beyond the paper's three: the object was demoted to
@@ -21,6 +23,14 @@ from repro.core.tuner import TunerConfig
 REGEN_MISS = "regen_miss"
 
 HIT_CLASSES = (IMAGE_HIT, LATENT_HIT, FULL_MISS, REGEN_MISS)
+
+#: :data:`DEFAULT_OBJECT_BYTES` (re-exported above) is the canonical
+#: accounting size of an object whose real byte count is unknown — a
+#: 0.28 MB compressed SD3.5-class latent (paper Table 1b), THE named home
+#: of the old scattered ``0.28e6`` literals.  The value itself lives in
+#: ``repro.core.latent_store`` only because ``core`` modules cannot
+#: import ``repro.store`` without a cycle; store-side code references it
+#: from here.
 
 
 @dataclasses.dataclass
@@ -66,6 +76,30 @@ class StoreConfig:
     tuner: TunerConfig = dataclasses.field(
         default_factory=lambda: TunerConfig(window=500, step=0.02))
     decode_buckets: Tuple[int, ...] = (1, 2, 4, 8)
+    # -- durable persistence (the log-structured on-disk tier) ---------------
+    #: Directory of the segment log.  ``None`` (default) keeps the durable
+    #: tier in memory (sim-mode conformance; nothing survives the
+    #: process).  Set — usually via ``LatentBox.open(path)`` — to persist
+    #: latents AND recipes through one append-only checksummed log with
+    #: manifest-checkpointed recovery and online compaction.
+    data_dir: Optional[str] = None
+    segment_bytes: float = 4e6          # active segment seals past this
+    fsync: bool = False                 # force platters on every flush/ack
+    checkpoint_every: int = 1024        # appends between manifest checkpoints
+    #: Sealed segments at or below this live fraction compact (coldest
+    #: first), one per maintenance step.  0 disables online compaction.
+    compact_live_frac: float = 0.6
+    #: ``False`` (default): every put is flushed before it is acknowledged
+    #: (``PutResult.durable``).  ``True``: puts buffer and become durable
+    #: at the next ``flush()`` — the serving engine flushes once per
+    #: request window, trading a bounded unacknowledged tail for
+    #: sequential-append write cost.
+    write_behind: bool = False
+    #: Injectable wall clock (seconds) for the engine's store-latency
+    #: draws; ``None`` = ``time.time``.  The simulator always uses its
+    #: virtual clock; injecting a fake clock here makes the ENGINE's
+    #: warm/cold latency classification deterministic under test.
+    clock: Optional[Callable[[], float]] = None
     # -- simulator plant ----------------------------------------------------
     gpus_per_node: int = 1
     decode_ms: float = 31.0
@@ -87,6 +121,12 @@ class StoreConfig:
                 raise ValueError(f"duplicate node names: {self.node_names}")
             self.n_nodes = len(self.node_names)
 
+    def now_s(self) -> float:
+        """The injectable wall clock every engine-side ``now_s`` routes
+        through (satellite of the durable-store PR: no more bare
+        ``time.time()`` on the serve path)."""
+        return time.time() if self.clock is None else float(self.clock())
+
 
 @dataclasses.dataclass
 class PutResult:
@@ -95,6 +135,10 @@ class PutResult:
     recipe_bytes: float = 0.0           # recipe payload bytes (0: none)
     format: str = "latent"              # 'latent' | 'size' (sim, size-only)
     prewarmed: bool = False
+    #: True when this put is crash-durable at return: its record (and the
+    #: recipe's) is flushed to the on-disk log.  False in memory mode and
+    #: under ``write_behind`` (durable at the next ``flush()``).
+    durable: bool = False
 
 
 @dataclasses.dataclass

@@ -15,7 +15,7 @@ and latencies are produced:
 
 from __future__ import annotations
 
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -25,10 +25,39 @@ from repro.core.latent_store import LatentStore
 from repro.core.metrics import RequestLog
 from repro.core.regen_tier import Recipe, RegenTierStore
 from repro.store.api import (GetResult, ObjectStat, PutResult, StoreConfig)
+from repro.store.durable.backend import SegmentLogBackend
+from repro.store.durable.log import SegmentLog
 from repro.store.tiers import DurableTier, RecipeTier
 from repro.store.walk import TierWalk
 
 MS_PER_MONTH = 30 * 86_400.0 * 1e3
+
+
+def _open_durable(cfg: StoreConfig
+                  ) -> Tuple[LatentStore, RegenTierStore,
+                             Optional[SegmentLog]]:
+    """Build the durable pair (latent store + regen tier) for one backend.
+
+    Without ``cfg.data_dir`` both are in-memory, exactly the pre-refactor
+    behavior.  With it, one :class:`SegmentLog` under ``data_dir`` carries
+    BOTH the latent blobs/sizes and the recipe/demotion records; recovery
+    replays the log (manifest checkpoint + tail scan) into the two stores
+    so a reopened box serves every acknowledged put bit-exact.
+    """
+    if cfg.data_dir is None:
+        return (LatentStore(cfg.store_latency, seed=cfg.seed + 1),
+                RegenTierStore(), None)
+    log = SegmentLog(cfg.data_dir, segment_bytes=cfg.segment_bytes,
+                     fsync=cfg.fsync, checkpoint_every=cfg.checkpoint_every)
+    backend = SegmentLogBackend(log,
+                                flush_each_put=not cfg.write_behind,
+                                compact_live_frac=cfg.compact_live_frac)
+    store = LatentStore(cfg.store_latency, seed=cfg.seed + 1,
+                        backend=backend)
+    regen = RegenTierStore(journal=log)
+    for oid, state in log.recipe_states().items():
+        regen.restore_state(oid, state)
+    return store, regen, log
 
 
 def _stat(walk: TierWalk, store: LatentStore, regen: RegenTierStore,
@@ -56,8 +85,7 @@ class EngineBackend:
         # deferred import: serve.engine imports the store package too
         from repro.serve.engine import ServingEngine
         self.cfg = cfg or StoreConfig()
-        self.store = LatentStore(self.cfg.store_latency, seed=self.cfg.seed + 1)
-        self.regen = RegenTierStore()
+        self.store, self.regen, self.durable_log = _open_durable(self.cfg)
         # ServingEngine consumes the StoreConfig directly — no per-field
         # copying that could drift from the simulator backend
         self.engine = ServingEngine(vae, self.store, self.cfg,
@@ -78,7 +106,20 @@ class EngineBackend:
             self.engine.prewarm(oid)
         return PutResult(oid, float(stored),
                          recipe_bytes=float(recipe.nbytes) if recipe else 0.0,
-                         format="latent", prewarmed=prewarm)
+                         format="latent", prewarmed=prewarm,
+                         durable=self._ack())
+
+    def _ack(self) -> bool:
+        """Acknowledgement barrier after a mutating call: the recipe
+        tier journals RSTATE/RDEL records straight into the log (NOT via
+        the per-put-flushing store backend), so the ack must flush the
+        log itself or acknowledged recipe/demotion/delete records could
+        die in the file buffer.  Returns whether the mutation is durable
+        at return (False in memory mode and under write-behind)."""
+        if self.durable_log is None or self.cfg.write_behind:
+            return False
+        self.durable_log.flush()
+        return True
 
     def get_many(self, oids: Sequence[int],
                  timestamps_ms=None) -> List[GetResult]:
@@ -97,19 +138,49 @@ class EngineBackend:
         return out
 
     def delete(self, oid: int) -> bool:
-        return self.engine.delete(oid)
+        found = self.engine.delete(oid)
+        self._ack()
+        return found
 
     def demote(self, oid: int) -> bool:
-        return self.engine.demote(oid)
+        out = self.engine.demote(oid)
+        self._ack()
+        return out
 
     def promote(self, oid: int) -> bool:
-        return self.engine.promote(oid)
+        out = self.engine.promote(oid)
+        self._ack()
+        return out
 
     def stat(self, oid: int) -> Optional[ObjectStat]:
         return _stat(self.walk, self.store, self.regen, oid)
 
+    def flush(self) -> None:
+        """Durability barrier: every acknowledged write is on disk after
+        this (and the manifest checkpoint bounds the next recovery)."""
+        if self.durable_log is not None:
+            self.durable_log.flush(manifest=True)
+
+    def close(self) -> None:
+        if self.durable_log is not None:
+            self.store.close()
+
     def summary(self) -> Dict:
-        return self.engine.summary()
+        out = self.engine.summary()
+        if self.durable_log is not None:
+            out.update(_durable_summary(self.store))
+        return out
+
+
+def _durable_summary(store: LatentStore) -> Dict:
+    """On-disk truth for ``summary()``: real segment bytes, live bytes,
+    and cumulative write amplification (1.0 until compaction rewrites)."""
+    st = store.backend.stats()
+    return {"durable_disk_bytes": float(st["on_disk_bytes"]),
+            "durable_live_bytes": float(st["live_bytes"]),
+            "durable_segments": int(st["segments"]),
+            "write_amplification": float(st["write_amplification"]),
+            "segments_compacted": int(st.get("segments_compacted", 0))}
 
 
 class SimBackend:
@@ -126,8 +197,7 @@ class SimBackend:
 
     def __init__(self, cfg: Optional[StoreConfig] = None):
         self.cfg = cfg or StoreConfig()
-        self.store = LatentStore(self.cfg.store_latency, seed=self.cfg.seed + 1)
-        self.regen = RegenTierStore()
+        self.store, self.regen, self.durable_log = _open_durable(self.cfg)
         self.walk = TierWalk(self.cfg, DurableTier(self.store),
                              RecipeTier(self.regen))
         self.gpus = [GpuQueue(self.cfg.gpus_per_node)
@@ -159,7 +229,16 @@ class SimBackend:
             self.walk.caches[owner].store(oid, format="image")
         return PutResult(oid, float(nbytes),
                          recipe_bytes=float(recipe.nbytes) if recipe else 0.0,
-                         format="size", prewarmed=prewarm)
+                         format="size", prewarmed=prewarm,
+                         durable=self._ack())
+
+    def _ack(self) -> bool:
+        """Same ack barrier as the engine backend: flushes the shared
+        log (recipe records bypass the store backend's per-put flush)."""
+        if self.durable_log is None or self.cfg.write_behind:
+            return False
+        self.durable_log.flush()
+        return True
 
     def _decode_time(self, oid: int, seq: int) -> float:
         c = self.cfg
@@ -237,13 +316,22 @@ class SimBackend:
                 node=ticket.owner, exec_node=ticket.exec_node,
                 spilled=ticket.spilled, regenerated=ticket.needs_regen,
                 latency_ms=lat))
+        # end-of-window maintenance, mirroring the engine's request loop:
+        # write-behind records become durable, then one bounded online
+        # compaction step (both no-ops without a segment log)
+        self.store.flush()
+        self.store.maybe_compact()
         return out
 
     def delete(self, oid: int) -> bool:
-        return self.walk.delete(oid)
+        found = self.walk.delete(oid)
+        self._ack()
+        return found
 
     def demote(self, oid: int) -> bool:
-        return self.walk.demote(oid)
+        out = self.walk.demote(oid)
+        self._ack()
+        return out
 
     def promote(self, oid: int) -> bool:
         if not self.regen.is_demoted(oid):
@@ -251,10 +339,19 @@ class SimBackend:
         self.store.put_size(oid, self.cfg.latent_bytes)
         self.regen.readmit(oid, self.cfg.latent_bytes,
                            now_mo=self.clock_ms / MS_PER_MONTH)
+        self._ack()
         return True
 
     def stat(self, oid: int) -> Optional[ObjectStat]:
         return _stat(self.walk, self.store, self.regen, oid)
+
+    def flush(self) -> None:
+        if self.durable_log is not None:
+            self.durable_log.flush(manifest=True)
+
+    def close(self) -> None:
+        if self.durable_log is not None:
+            self.store.close()
 
     def summary(self) -> Dict:
         out = self.walk.summary()
@@ -263,4 +360,6 @@ class SimBackend:
         for key in ("mean_ms", "p50_ms", "p95_ms", "p99_ms"):
             if key in s:
                 out[key] = s[key]
+        if self.durable_log is not None:
+            out.update(_durable_summary(self.store))
         return out

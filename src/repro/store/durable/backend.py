@@ -1,0 +1,201 @@
+"""``DurableBackend`` — the pluggable persistence seam of ``LatentStore``.
+
+:class:`~repro.core.latent_store.LatentStore` keeps what it always owned —
+the S3-style latency model, warmth windows, and per-object latency epochs —
+and delegates *where bytes live* to one of these backends:
+
+* :class:`MemoryBackend` — the original in-process dicts.  Default, and
+  the simulator-conformance substrate: byte-for-byte the pre-refactor
+  behavior, nothing survives process exit.
+* :class:`SegmentLogBackend` — the engine-grade backend over a
+  :class:`~repro.store.durable.log.SegmentLog`: append-only segments,
+  checksummed records, manifest-checkpointed recovery, and online
+  compaction via an attached :class:`~repro.store.durable.compact.Compactor`.
+
+Both expose the same small protocol (blob/size puts, reads, tombstoning,
+iteration, accounting) plus durability hooks (``flush`` / ``maybe_compact``
+/ ``close``) that are no-ops in memory — so every caller can drive them
+unconditionally.
+"""
+
+from __future__ import annotations
+
+import abc
+from typing import Any, Dict, Iterator, Optional
+
+from repro.store.durable.compact import Compactor
+from repro.store.durable.log import SegmentLog
+
+
+class DurableBackend(abc.ABC):
+    """Byte-custody protocol behind ``LatentStore``."""
+
+    name: str = "durable-backend"
+    #: True when an acknowledged put survives process death.
+    persistent: bool = False
+
+    @abc.abstractmethod
+    def put_blob(self, oid: int, blob: bytes) -> None: ...
+
+    @abc.abstractmethod
+    def put_size(self, oid: int, nbytes: float) -> None: ...
+
+    @abc.abstractmethod
+    def get_blob(self, oid: int) -> Optional[bytes]: ...
+
+    @abc.abstractmethod
+    def size_of(self, oid: int) -> Optional[float]: ...
+
+    @abc.abstractmethod
+    def has_blob(self, oid: int) -> bool: ...
+
+    @abc.abstractmethod
+    def contains(self, oid: int) -> bool: ...
+
+    @abc.abstractmethod
+    def delete(self, oid: int) -> bool: ...
+
+    @abc.abstractmethod
+    def oids(self) -> Iterator[int]: ...
+
+    @property
+    @abc.abstractmethod
+    def total_bytes(self) -> float: ...
+
+    # -- durability hooks (no-ops in memory) ---------------------------------
+    def flush(self) -> None:
+        """Make every acknowledged write crash-durable."""
+
+    def maybe_compact(self) -> int:
+        """One bounded online-compaction step; returns segments compacted."""
+        return 0
+
+    def close(self) -> None:
+        """Seal, checkpoint, and release file handles."""
+
+    def stats(self) -> Dict[str, Any]:
+        return {}
+
+
+class MemoryBackend(DurableBackend):
+    """The pre-refactor in-memory dict store (sim-mode conformance)."""
+
+    name = "memory"
+    persistent = False
+
+    def __init__(self) -> None:
+        self._blobs: Dict[int, bytes] = {}
+        self._sizes: Dict[int, float] = {}
+
+    def put_blob(self, oid: int, blob: bytes) -> None:
+        self._blobs[oid] = blob
+        self._sizes[oid] = float(len(blob))
+
+    def put_size(self, oid: int, nbytes: float) -> None:
+        self._sizes[oid] = float(nbytes)
+
+    def get_blob(self, oid: int) -> Optional[bytes]:
+        return self._blobs.get(oid)
+
+    def size_of(self, oid: int) -> Optional[float]:
+        return self._sizes.get(oid)
+
+    def has_blob(self, oid: int) -> bool:
+        return oid in self._blobs
+
+    def contains(self, oid: int) -> bool:
+        return oid in self._sizes or oid in self._blobs
+
+    def delete(self, oid: int) -> bool:
+        found = self.contains(oid)
+        self._blobs.pop(oid, None)
+        self._sizes.pop(oid, None)
+        return found
+
+    def oids(self) -> Iterator[int]:
+        return iter(set(self._sizes) | set(self._blobs))
+
+    @property
+    def total_bytes(self) -> float:
+        return float(sum(self._sizes.values()))
+
+
+class SegmentLogBackend(DurableBackend):
+    """Log-structured on-disk backend (the engine default under
+    ``StoreConfig.data_dir``).
+
+    ``flush_each_put=True`` acknowledges each put only after its record is
+    flushed to the OS (the facade's durable-put contract); the serving
+    engine constructs it with ``False`` and instead flushes once per
+    request window (write-behind) through :meth:`flush`.
+    """
+
+    name = "segment_log"
+    persistent = True
+
+    def __init__(self, log: SegmentLog, *, flush_each_put: bool = True,
+                 compact_live_frac: float = 0.6):
+        self.log = log
+        self.flush_each_put = bool(flush_each_put)
+        self.compactor = Compactor(log, live_frac_threshold=compact_live_frac)
+
+    @classmethod
+    def open(cls, path: str, *, segment_bytes: float = 4e6,
+             fsync: bool = False, checkpoint_every: int = 1024,
+             flush_each_put: bool = True,
+             compact_live_frac: float = 0.6) -> "SegmentLogBackend":
+        return cls(SegmentLog(path, segment_bytes=segment_bytes, fsync=fsync,
+                              checkpoint_every=checkpoint_every),
+                   flush_each_put=flush_each_put,
+                   compact_live_frac=compact_live_frac)
+
+    def put_blob(self, oid: int, blob: bytes) -> None:
+        self.log.put_blob(oid, blob)
+        if self.flush_each_put:
+            self.log.flush()
+
+    def put_size(self, oid: int, nbytes: float) -> None:
+        self.log.put_size(oid, nbytes)
+        if self.flush_each_put:
+            self.log.flush()
+
+    def get_blob(self, oid: int) -> Optional[bytes]:
+        return self.log.get_blob(oid)
+
+    def size_of(self, oid: int) -> Optional[float]:
+        return self.log.size_of(oid)
+
+    def has_blob(self, oid: int) -> bool:
+        return self.log.has_blob(oid)
+
+    def contains(self, oid: int) -> bool:
+        return self.log.contains_object(oid)
+
+    def delete(self, oid: int) -> bool:
+        found = self.log.contains_object(oid)
+        if found:
+            self.log.tombstone(oid)
+            if self.flush_each_put:
+                self.log.flush()
+        return found
+
+    def oids(self) -> Iterator[int]:
+        return self.log.object_oids()
+
+    @property
+    def total_bytes(self) -> float:
+        return self.log.payload_bytes
+
+    def flush(self) -> None:
+        self.log.flush()
+
+    def maybe_compact(self) -> int:
+        return self.compactor.step()
+
+    def close(self) -> None:
+        self.log.close()
+
+    def stats(self) -> Dict[str, Any]:
+        out = self.log.stats()
+        out.update(self.compactor.summary())
+        return out

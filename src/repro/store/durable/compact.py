@@ -1,0 +1,105 @@
+"""Online compaction policy over a :class:`~repro.store.durable.log.SegmentLog`.
+
+The log's append-only discipline turns every overwrite, delete, and
+demotion into dead bytes that sit in sealed segments until someone
+rewrites the survivors.  :class:`Compactor` is that someone: each
+:meth:`step` (called from the serving engine's request loop, between
+windows) picks the *coldest* sealed segment — the one with the lowest
+live fraction, i.e. the most reclaimable bytes per byte rewritten — and
+compacts it if it is below the configured live-fraction threshold.  The
+mechanics (lsn-preserving rewrite, crash-safe copy-then-unlink order)
+live in :meth:`SegmentLog.compact_segment`; this module owns only the
+victim choice, the trigger thresholds, and the accounting.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+from repro.store.durable.log import SegmentLog
+
+
+@dataclasses.dataclass
+class CompactionStats:
+    runs: int = 0
+    segments_compacted: int = 0
+    bytes_rewritten: int = 0
+    bytes_reclaimed: int = 0
+
+
+class Compactor:
+    """Pick-coldest-first online compaction.
+
+    ``live_frac_threshold``: sealed segments whose live fraction is at or
+    below this compact; 1.0 means "any dead byte qualifies", 0.0 disables.
+    ``min_segment_bytes`` skips near-empty stub segments whose rewrite
+    cost exceeds the bookkeeping win (they still compact under
+    :meth:`compact_all`).
+    """
+
+    def __init__(self, log: SegmentLog, *, live_frac_threshold: float = 0.6,
+                 min_segment_bytes: int = 0):
+        self.log = log
+        self.live_frac_threshold = float(live_frac_threshold)
+        self.min_segment_bytes = int(min_segment_bytes)
+        self.stats = CompactionStats()
+
+    def _victim(self) -> Optional[int]:
+        best, best_frac = None, None
+        for sid, (nbytes, live) in self.log.sealed_segments().items():
+            if nbytes <= self.min_segment_bytes or nbytes == 0:
+                continue
+            frac = max(live, 0) / nbytes
+            if frac > self.live_frac_threshold:
+                continue
+            if best_frac is None or frac < best_frac:
+                best, best_frac = sid, frac
+        return best
+
+    def step(self, max_segments: int = 1, crash_hook=None) -> int:
+        """Compact up to ``max_segments`` cold segments; returns how many
+        were compacted (0: nothing under the threshold — the steady
+        state).  Runs between serving windows, so 'online' here means
+        bounded work per call, never a stop-the-world sweep."""
+        if self.live_frac_threshold <= 0.0:
+            return 0
+        done = 0
+        for _ in range(max_segments):
+            sid = self._victim()
+            if sid is None:
+                break
+            rewritten, reclaimed = self.log.compact_segment(
+                sid, crash_hook=crash_hook)
+            self.stats.segments_compacted += 1
+            self.stats.bytes_rewritten += rewritten
+            self.stats.bytes_reclaimed += reclaimed
+            done += 1
+        self.stats.runs += 1
+        return done
+
+    def compact_all(self) -> int:
+        """Rewrite every sealed segment with any dead byte (maintenance /
+        pre-ship sweep); returns segments compacted."""
+        done = 0
+        while True:
+            victim = None
+            for sid, (nbytes, live) in self.log.sealed_segments().items():
+                if nbytes > 0 and max(live, 0) < nbytes:
+                    victim = sid
+                    break
+            if victim is None:
+                return done
+            rewritten, reclaimed = self.log.compact_segment(victim)
+            self.stats.segments_compacted += 1
+            self.stats.bytes_rewritten += rewritten
+            self.stats.bytes_reclaimed += reclaimed
+            done += 1
+
+    def summary(self) -> Dict[str, float]:
+        return {
+            "compaction_runs": self.stats.runs,
+            "segments_compacted": self.stats.segments_compacted,
+            "compaction_bytes_rewritten": self.stats.bytes_rewritten,
+            "compaction_bytes_reclaimed": self.stats.bytes_reclaimed,
+        }

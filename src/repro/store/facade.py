@@ -66,6 +66,32 @@ class LatentBox:
             return cls(ShardedLatentBox.simulated(shards, config))
         return cls(SimBackend(config))
 
+    @classmethod
+    def open(cls, path, mode: str = "engine",
+             config: Optional[StoreConfig] = None, vae=None, seed: int = 0,
+             shards: int = 1) -> "LatentBox":
+        """Open (or create) a *persistent* box on ``path``.
+
+        The durable-latent and recipe tiers write through one
+        log-structured segment store under ``path`` (per-shard
+        subdirectories when ``shards > 1``).  The reopen guarantee:
+        after ANY process exit — clean ``close()``, hard kill mid-write,
+        or kill mid-compaction — ``LatentBox.open(path)`` recovers every
+        *acknowledged* put (``PutResult.durable`` / past ``flush()``) and
+        serves it bit-exact: same blob bytes, same decoded pixels on the
+        same stack, same recipes and demotion flags.  Unacknowledged tail
+        records are detected by checksum and cleanly ignored.  Cache
+        warmth and store-latency warmth are process state and restart
+        cold, like a node rejoining a fleet.
+        """
+        import dataclasses as _dc
+        cfg = _dc.replace(config or StoreConfig(), data_dir=str(path))
+        if mode == "engine":
+            return cls.engine(vae=vae, config=cfg, seed=seed, shards=shards)
+        if mode == "sim":
+            return cls.simulated(cfg, shards=shards)
+        raise ValueError(f"mode must be 'engine' or 'sim': {mode!r}")
+
     @property
     def backend(self):
         return self._backend
@@ -125,6 +151,29 @@ class LatentBox:
         """Undo a demotion ahead of traffic: regenerate the latent into
         the durable tier now, off the read path."""
         return self._backend.promote(int(oid))
+
+    # -- durability ----------------------------------------------------------
+    def flush(self) -> None:
+        """Crash-durability barrier: every write accepted so far (including
+        write-behind puts) is on disk, and the manifest checkpoint bounds
+        the next reopen's recovery scan.  No-op on in-memory boxes."""
+        flush = getattr(self._backend, "flush", None)
+        if flush is not None:
+            flush()
+
+    def close(self) -> None:
+        """Seal the active segment, checkpoint the manifest, and release
+        file handles.  The box must not be used afterwards; reopen with
+        :meth:`open`.  No-op on in-memory boxes."""
+        close = getattr(self._backend, "close", None)
+        if close is not None:
+            close()
+
+    def __enter__(self) -> "LatentBox":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
 
     # -- introspection -------------------------------------------------------
     def summary(self) -> Dict[str, Any]:

@@ -36,6 +36,9 @@ new shard, as it would in production).
 from __future__ import annotations
 
 import dataclasses
+import json
+import os
+import shutil
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -87,6 +90,12 @@ class ShardedLatentBox:
 
     name = "sharded"
 
+    #: topology checkpoint of a persistent cluster (under ``data_dir``):
+    #: shard ids, their node slices, and the allocation counters — so a
+    #: reopened cluster reconstructs the EXACT hash topology (shard ids
+    #: are never reused; node ranges survive earlier removals).
+    CLUSTER_META = "CLUSTER.json"
+
     def __init__(self, backend_factory: Callable[[StoreConfig], Any],
                  n_shards: int, config: Optional[StoreConfig] = None):
         if n_shards < 1:
@@ -103,8 +112,66 @@ class ShardedLatentBox:
         self._shard_of_node: Dict[str, int] = {}
         self.ring = ConsistentHashRing([], vnodes=_VNODES)
         self._keys: Dict[int, int] = {}          # oid -> owning shard id
-        for _ in range(n_shards):
-            self._spawn_shard()
+        meta = self._load_meta()
+        if meta is not None:
+            if n_shards != len(meta["shards"]):
+                raise ValueError(
+                    f"{self.cfg.data_dir} holds a {len(meta['shards'])}-"
+                    f"shard cluster; reopen with shards="
+                    f"{len(meta['shards'])} (got {n_shards}) and use "
+                    "add_shard/remove_shard to change the topology")
+            self._next_node = int(meta["next_node"])
+            self._next_shard_id = int(meta["next_shard_id"])
+            for row in meta["shards"]:
+                self._spawn_shard(sid=int(row["shard_id"]),
+                                  names=tuple(row["node_names"]))
+            self._recover_keys()
+        else:
+            for _ in range(n_shards):
+                self._spawn_shard()
+            self._write_meta()
+
+    # -- persistent-topology plumbing ----------------------------------------
+    def _meta_path(self) -> Optional[str]:
+        if self.cfg.data_dir is None:
+            return None
+        return os.path.join(self.cfg.data_dir, self.CLUSTER_META)
+
+    def _load_meta(self) -> Optional[Dict[str, Any]]:
+        p = self._meta_path()
+        if p is None or not os.path.exists(p):
+            return None
+        with open(p) as f:
+            return json.load(f)
+
+    def _write_meta(self) -> None:
+        p = self._meta_path()
+        if p is None:
+            return
+        os.makedirs(self.cfg.data_dir, exist_ok=True)
+        meta = {"next_node": self._next_node,
+                "next_shard_id": self._next_shard_id,
+                "nodes_per_shard": self._nodes_per_shard,
+                "shards": [{"shard_id": sid,
+                            "node_names": list(s.node_names)}
+                           for sid, s in sorted(self.shards.items())]}
+        tmp = p + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(meta, f)
+        os.replace(tmp, p)
+
+    def _recover_keys(self) -> None:
+        """Rebuild the oid -> shard map from each shard's recovered log
+        (objects AND recipe-only entries), so resharding after a reopen
+        migrates exactly what the pre-crash cluster would have."""
+        for sid, shard in self.shards.items():
+            log = getattr(shard.backend, "durable_log", None)
+            if log is None:
+                continue
+            for oid in log.object_oids():
+                self._keys[int(oid)] = sid
+            for oid in log.recipe_states():
+                self._keys[int(oid)] = sid
 
     # -- constructors --------------------------------------------------------
     @classmethod
@@ -138,13 +205,24 @@ class ShardedLatentBox:
         """The shard hosting this object's globally-hashed owner node."""
         return self._shard_of_node[self.ring.owner(int(oid))]
 
-    def _spawn_shard(self) -> _Shard:
-        k = self._nodes_per_shard
-        names = tuple(f"node{self._next_node + i}" for i in range(k))
-        self._next_node += k
-        sid = self._next_shard_id
-        self._next_shard_id += 1
-        cfg = dataclasses.replace(self.cfg, node_names=names)
+    def _spawn_shard(self, sid: Optional[int] = None,
+                     names: Optional[Tuple[str, ...]] = None) -> _Shard:
+        """Create (or, with explicit ``sid``/``names`` from the topology
+        checkpoint, re-attach) one shard backend."""
+        if names is None:
+            k = self._nodes_per_shard
+            names = tuple(f"node{self._next_node + i}" for i in range(k))
+            self._next_node += k
+        if sid is None:
+            sid = self._next_shard_id
+            self._next_shard_id += 1
+        # a persistent cluster gives each shard its own segment-log
+        # directory under the cluster root (shard ids never reuse, so a
+        # re-added shard never inherits a dead shard's segments)
+        data_dir = (os.path.join(self.cfg.data_dir, f"shard{sid:03d}")
+                    if self.cfg.data_dir is not None else None)
+        cfg = dataclasses.replace(self.cfg, node_names=names,
+                                  data_dir=data_dir)
         shard = _Shard(sid, self._factory(cfg), names)
         self.shards[sid] = shard
         for n in names:
@@ -158,12 +236,16 @@ class ShardedLatentBox:
         exactly the keys whose ring owner moved onto the new nodes."""
         shard = self._spawn_shard()
         moved = self._migrate_remapped()
+        self._write_meta()
         return ReshardReport(n_keys=len(self._keys), n_moved=moved,
                              n_shards=self.n_shards, shard_id=shard.shard_id)
 
     def remove_shard(self, shard_id: int) -> ReshardReport:
-        """Drain and drop one shard: its nodes leave the global ring and
-        every key it owned migrates to the key's new owner shard."""
+        """Drain and drop one shard: its nodes leave the global ring,
+        every key it owned migrates to the key's new owner shard, and
+        (persistent clusters) its sealed-and-drained log directory is
+        closed and deleted — the drained segments hold only tombstoned
+        state, so keeping them would leak dead bytes forever."""
         if shard_id not in self.shards:
             raise KeyError(f"no shard {shard_id}")
         if self.n_shards == 1:
@@ -174,20 +256,58 @@ class ShardedLatentBox:
             del self._shard_of_node[n]
         moved = self._migrate_remapped()
         del self.shards[shard_id]
+        close = getattr(victim.backend, "close", None)
+        if close is not None:
+            close()
+        vlog = getattr(victim.backend, "durable_log", None)
+        if vlog is not None:
+            shutil.rmtree(vlog.path, ignore_errors=True)
+        self._write_meta()
         return ReshardReport(n_keys=len(self._keys), n_moved=moved,
                              n_shards=self.n_shards, shard_id=shard_id)
 
     def _migrate_remapped(self) -> int:
-        moved = 0
+        # group the remapped keys into per-(src, dst) migration batches so
+        # persistent shards ship each batch as ONE sealed segment instead
+        # of per-key copies
+        batches: Dict[Tuple[int, int], List[int]] = {}
         for oid, old_sid in list(self._keys.items()):
             new_sid = self.shard_of(oid)
-            if new_sid == old_sid:
-                continue
-            self._move(oid, self.shards[old_sid].backend,
-                       self.shards[new_sid].backend)
-            self._keys[oid] = new_sid
-            moved += 1
+            if new_sid != old_sid:
+                batches.setdefault((old_sid, new_sid), []).append(oid)
+        moved = 0
+        for (old_sid, new_sid), oids in batches.items():
+            src = self.shards[old_sid].backend
+            dst = self.shards[new_sid].backend
+            self._move_batch(oids, src, dst)
+            for oid in oids:
+                self._keys[oid] = new_sid
+            moved += len(oids)
         return moved
+
+    def _move_batch(self, oids: Sequence[int], src, dst) -> None:
+        """Move one migration batch between shard backends.
+
+        When both sides are log-structured (persistent cluster), the
+        source *seals* the batch — the current blob/size + recipe records
+        of every moved key, raw bytes, original payloads — and the
+        destination ingests it as one fresh sealed segment file: no
+        per-key put path, no decompress/re-encode, one fsync.  The source
+        then tombstones the moved keys (dead bytes the next compaction
+        step reclaims).  Memory-backed shards keep the per-key move.
+        """
+        slog = getattr(src, "durable_log", None)
+        dlog = getattr(dst, "durable_log", None)
+        if slog is None or dlog is None:
+            for oid in oids:
+                self._move(oid, src, dst)
+            return
+        applied = dlog.ingest_segment(slog.export_records(oids))
+        for oid, state in applied["recipes"].items():
+            dst.regen.restore_state(oid, state)
+        for oid in oids:
+            src.delete(oid)                    # tombstones + cache purge
+        src.flush()
 
     @staticmethod
     def _move(oid: int, src, dst) -> None:
@@ -264,6 +384,18 @@ class ShardedLatentBox:
     def stat(self, oid: int) -> Optional[ObjectStat]:
         return self.shards[self.shard_of(oid)].backend.stat(int(oid))
 
+    def flush(self) -> None:
+        for sid in self.shard_ids:
+            flush = getattr(self.shards[sid].backend, "flush", None)
+            if flush is not None:
+                flush()
+
+    def close(self) -> None:
+        for sid in self.shard_ids:
+            close = getattr(self.shards[sid].backend, "close", None)
+            if close is not None:
+                close()
+
     # -- introspection -------------------------------------------------------
     def residency_shards(self, oid: int) -> List[int]:
         """Every shard holding ANY residency for ``oid`` — the conformance
@@ -281,7 +413,10 @@ class ShardedLatentBox:
                "recipe_bytes", "decode_batches", "decodes",
                "coalesced_decodes", "decompressions",
                "decompress_memo_hits", "pixel_cached_objects",
-               "pixel_cached_bytes")
+               "pixel_cached_bytes",
+               # persistent clusters: on-disk truth sums across shard logs
+               "durable_disk_bytes", "durable_live_bytes",
+               "durable_segments", "segments_compacted")
 
     def summary(self) -> Dict[str, Any]:
         """Cluster-level stats: additive counters sum across shards, alpha
@@ -308,6 +443,17 @@ class ShardedLatentBox:
                 out["pixel_cached_bytes"] / out["pixel_cached_objects"])
         elif per and "pixel_bytes_per_object" in per[0]:
             out["pixel_bytes_per_object"] = per[0]["pixel_bytes_per_object"]
+        # cluster write amplification recomputes from the summed byte
+        # counters (a mean of per-shard ratios would weight idle shards
+        # wrong, same argument as the hit fractions above)
+        logs = [lg for sid in self.shard_ids
+                if (lg := getattr(self.shards[sid].backend,
+                                  "durable_log", None)) is not None]
+        if logs:
+            user = sum(lg.user_bytes_written for lg in logs)
+            rewrite = sum(lg.rewrite_bytes_written for lg in logs)
+            out["write_amplification"] = ((user + rewrite) / user
+                                          if user else 1.0)
         out.update(self._latency_stats())
         return out
 

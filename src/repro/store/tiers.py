@@ -154,7 +154,16 @@ class DualCacheTier(Tier):
 
 
 class DurableTier(Tier):
-    """The durable latent class over :class:`LatentStore` (S3 stand-in)."""
+    """The durable latent class over :class:`LatentStore`.
+
+    Bytes live wherever the store's pluggable
+    :class:`~repro.store.durable.backend.DurableBackend` puts them: the
+    in-memory dict backend (simulation conformance) or the log-structured
+    :class:`~repro.store.durable.backend.SegmentLogBackend` under
+    ``StoreConfig.data_dir`` — in which case every ``store``/``evict``
+    here is an append-only record (blob or tombstone) in the same
+    crash-recoverable segment log the recipe tier journals through.
+    """
 
     name = "durable"
 
@@ -189,7 +198,12 @@ class DurableTier(Tier):
 
 class RecipeTier(Tier):
     """The coldest durability class: (prompt, seed, model) recipes that
-    regenerate the latent bit-exactly when every byte-bearing tier misses."""
+    regenerate the latent bit-exactly when every byte-bearing tier misses.
+
+    On a persistent box the wrapped :class:`RegenTierStore` journals every
+    state mutation (put / demote / readmit / delete) as a full-state
+    record into the SAME segment log as the durable latents, so recipes
+    and demotion flags survive a crash with the blobs they describe."""
 
     name = "recipe"
 

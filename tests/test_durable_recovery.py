@@ -1,0 +1,329 @@
+"""Crash-recovery properties of the durable store.
+
+The contract under test (the ``LatentBox.open`` reopen guarantee): after a
+hard process kill at ANY point — mid-write, mid-compaction, with or
+without a manifest — reopening the directory serves every *acknowledged*
+put bit-exact and cleanly ignores every unacknowledged tail record.
+
+Crash states are modeled two ways:
+
+* **disk-state enumeration** — truncate the tail segment at every byte
+  offset past the acknowledged prefix (the exhaustive sweep is the
+  nightly ``slow`` recovery matrix; push CI runs a stride), delete the
+  manifest, or stop a compaction between its durable copy and its unlink;
+* **a real ``os._exit`` kill** — a subprocess acknowledges some puts,
+  then dies mid-stream; the parent reopens whatever hit the disk.
+
+Property tests use hypothesis when available (same dev-only guard as
+``test_store_api.py``) with deterministic fallbacks exercising the same
+check helper.
+"""
+
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.store import LatentBox, StoreConfig
+from repro.store.durable import Compactor, SegmentLog
+from repro.store.durable.log import MANIFEST
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+
+def blob_of(oid: int) -> bytes:
+    rng = np.random.default_rng(oid)
+    return rng.bytes(40 + (oid * 13) % 64)
+
+
+def acked_prefix_log(path: str, n_acked: int, n_unacked: int) -> int:
+    """Write ``n_acked`` flushed puts then ``n_unacked`` unflushed ones;
+    returns the acknowledged byte length of the final (active) segment."""
+    log = SegmentLog(path, segment_bytes=10**9, checkpoint_every=10**9)
+    for oid in range(n_acked):
+        log.put_blob(oid, blob_of(oid))
+    log.flush()
+    acked_len = log._seg_len[log._active_id]
+    for oid in range(n_acked, n_acked + n_unacked):
+        log.put_blob(oid, blob_of(oid))
+    log.flush()          # the bytes exist on disk; the CRASH is modeled
+    #                      by truncating anywhere past the acked prefix
+    # abandon without close(): no seal, no manifest — a hard kill
+    log._active_f.close()
+    return acked_len
+
+
+def check_recovery(path: str, n_acked: int) -> None:
+    """Every acknowledged put must be served bit-exact; nothing may raise."""
+    log = SegmentLog(path)
+    for oid in range(n_acked):
+        assert log.get_blob(oid) == blob_of(oid), f"oid {oid} corrupted"
+    log.close()
+
+
+def crash_at(path: str, cut: int) -> None:
+    """Model the kill: the tail segment retains only ``cut`` bytes."""
+    segs = sorted(f for f in os.listdir(path) if f.startswith("seg-"))
+    with open(os.path.join(path, segs[-1]), "r+b") as f:
+        f.truncate(cut)
+
+
+N_ACKED, N_UNACKED = 6, 3
+
+
+class TestMidWriteCrash:
+    def test_every_cut_point_smoke(self, tmp_path):
+        """Push-CI stride over the crash matrix: truncate the tail at a
+        spread of offsets past the acked prefix; acked puts always
+        recover bit-exact, the torn record is ignored and truncated."""
+        base = str(tmp_path / "log")
+        acked_len = acked_prefix_log(base, N_ACKED, N_UNACKED)
+        total = os.path.getsize(os.path.join(
+            base, sorted(os.listdir(base))[-1]))
+        cuts = sorted({acked_len, acked_len + 1, acked_len + 28,
+                       acked_len + 29, (acked_len + total) // 2,
+                       total - 1})
+        for cut in cuts:
+            work = str(tmp_path / f"cut{cut}")
+            subprocess.run(["cp", "-r", base, work], check=True)
+            crash_at(work, cut)
+            check_recovery(work, N_ACKED)
+
+    @pytest.mark.slow
+    def test_recovery_matrix_every_byte(self, tmp_path):
+        """The nightly recovery matrix: EVERY truncation offset from the
+        acked prefix to the full file."""
+        base = str(tmp_path / "log")
+        acked_len = acked_prefix_log(base, N_ACKED, N_UNACKED)
+        seg = sorted(f for f in os.listdir(base) if f.startswith("seg-"))[-1]
+        total = os.path.getsize(os.path.join(base, seg))
+        for cut in range(acked_len, total + 1):
+            work = str(tmp_path / "work")
+            subprocess.run(["rm", "-rf", work], check=True)
+            subprocess.run(["cp", "-r", base, work], check=True)
+            crash_at(work, cut)
+            check_recovery(work, N_ACKED)
+
+    def test_missing_manifest_full_scan(self, tmp_path):
+        path = str(tmp_path / "log")
+        log = SegmentLog(path)
+        for oid in range(5):
+            log.put_blob(oid, blob_of(oid))
+        log.close()
+        os.remove(os.path.join(path, MANIFEST))
+        check_recovery(path, 5)
+
+    def test_corrupt_manifest_full_scan(self, tmp_path):
+        path = str(tmp_path / "log")
+        log = SegmentLog(path)
+        for oid in range(5):
+            log.put_blob(oid, blob_of(oid))
+        log.close()
+        with open(os.path.join(path, MANIFEST), "w") as f:
+            f.write("{not json")
+        check_recovery(path, 5)
+
+    if HAVE_HYPOTHESIS:
+        @given(n_acked=st.integers(0, 8), n_unacked=st.integers(0, 4),
+               frac=st.floats(0.0, 1.0))
+        @settings(max_examples=25, deadline=None)
+        def test_property_random_crash_point(self, tmp_path_factory,
+                                             n_acked, n_unacked, frac):
+            tmp = tmp_path_factory.mktemp("crash")
+            path = str(tmp / "log")
+            acked_len = acked_prefix_log(path, n_acked, n_unacked)
+            seg = sorted(f for f in os.listdir(path)
+                         if f.startswith("seg-"))[-1]
+            total = os.path.getsize(os.path.join(path, seg))
+            cut = acked_len + int(frac * (total - acked_len))
+            crash_at(path, cut)
+            check_recovery(path, n_acked)
+
+
+class _Crash(RuntimeError):
+    pass
+
+
+class TestMidCompactionCrash:
+    def _crashed_compaction(self, path: str) -> str:
+        """Build a churned log whose live records all sit in ONE sealed
+        segment, then crash a compaction of it between the durable copy
+        and the unlink.  Returns the copy-bearing segment's filename (the
+        victim file still exists on disk)."""
+        log = SegmentLog(path, segment_bytes=10**9, checkpoint_every=10**9)
+        for _ in range(4):
+            for oid in range(6):
+                log.put_blob(oid, blob_of(oid) + bytes([0]))
+        for oid in range(6):
+            log.put_blob(oid, blob_of(oid))      # final live versions
+        log.flush()
+        log._seal_active()        # every acked byte is in sealed seg 1
+        victim = min(log.sealed_segments())
+        with pytest.raises(_Crash):
+            log.compact_segment(victim, crash_hook=self._boom)
+        copy_seg = f"seg-{log._active_id:08d}.lbx"
+        log._active_f.close()                    # die: no manifest
+        assert os.path.exists(os.path.join(path, f"seg-{victim:08d}.lbx"))
+        return copy_seg
+
+    @staticmethod
+    def _boom():
+        raise _Crash()
+
+    def test_kill_between_copy_and_unlink(self, tmp_path):
+        """The compaction crash window: live records are durably copied,
+        the victim file still exists.  Recovery must dedupe (same lsn)
+        and serve exactly the live versions."""
+        path = str(tmp_path / "log")
+        self._crashed_compaction(path)
+        log2 = SegmentLog(path)
+        # no manifest survived the kill: this recovery re-scanned the
+        # duplicate copies and collapsed them — one live slot per oid
+        assert log2.recovery_stats["scanned_records"] > 0
+        assert sorted(log2.object_oids()) == list(range(6))
+        log2.close()
+        check_recovery(path, 6)
+
+    def test_kill_during_copy_write(self, tmp_path):
+        """Crash with the compaction copies only partially on disk: the
+        torn copy tail is discarded; the victim segment still serves."""
+        path = str(tmp_path / "log")
+        copy_seg = self._crashed_compaction(path)
+        sz = os.path.getsize(os.path.join(path, copy_seg))
+        with open(os.path.join(path, copy_seg), "r+b") as f:
+            f.truncate(max(0, sz - 11))
+        check_recovery(path, 6)
+
+    @pytest.mark.slow
+    def test_recovery_matrix_compaction_cuts(self, tmp_path):
+        """Nightly matrix: sweep truncation points across the copy-bearing
+        segment after a mid-compaction kill — every prefix of the copies
+        (including none at all) must recover from the surviving victim."""
+        path = str(tmp_path / "base")
+        copy_seg = self._crashed_compaction(path)
+        total = os.path.getsize(os.path.join(path, copy_seg))
+        for cut in range(0, total + 1, 7):
+            work = str(tmp_path / "work")
+            subprocess.run(["rm", "-rf", work], check=True)
+            subprocess.run(["cp", "-r", path, work], check=True)
+            with open(os.path.join(work, copy_seg), "r+b") as f:
+                f.truncate(cut)
+            check_recovery(work, 6)
+
+
+_CHILD = r"""
+import os, sys
+sys.path.insert(0, {src!r})
+from repro.store.durable import SegmentLog
+import numpy as np
+
+def blob_of(oid):
+    rng = np.random.default_rng(oid)
+    return rng.bytes(40 + (oid * 13) % 64)
+
+log = SegmentLog({path!r}, segment_bytes=10**9)
+for oid in range(6):
+    log.put_blob(oid, blob_of(oid))
+log.flush()
+print("ACKED", flush=True)
+for oid in range(6, 400):
+    log.put_blob(oid, blob_of(oid))
+os._exit(9)        # hard kill mid-stream: no flush, no close, no manifest
+"""
+
+
+class TestProcessKill:
+    def test_os_exit_mid_stream(self, tmp_path):
+        """A REAL process death: whatever the OS kept of the unflushed
+        tail must never corrupt the acknowledged prefix."""
+        path = str(tmp_path / "log")
+        src = os.path.join(os.path.dirname(__file__), "..", "src")
+        code = _CHILD.format(src=os.path.abspath(src), path=path)
+        proc = subprocess.run([sys.executable, "-c", code],
+                              capture_output=True, text=True)
+        assert "ACKED" in proc.stdout and proc.returncode == 9
+        check_recovery(path, 6)
+
+
+class TestFacadeReopen:
+    """The documented ``LatentBox.open`` guarantee, end to end."""
+
+    def test_sim_box_reopen_serves_acked_state(self, tmp_path):
+        cfg = StoreConfig(n_nodes=2)
+        with LatentBox.open(str(tmp_path / "box"), mode="sim",
+                            config=cfg) as box:
+            from repro.core.regen_tier import Recipe
+            for oid in range(8):
+                r = box.put(oid, recipe=Recipe(seed=oid, height=16,
+                                               width=16))
+                assert r.durable
+            assert box.demote(3)
+            box.delete(7)
+        box2 = LatentBox.open(str(tmp_path / "box"), mode="sim", config=cfg)
+        assert box2.stat(3).demoted and box2.stat(3).residency == ["recipe"]
+        assert box2.stat(7) is None
+        assert box2.get(3).hit_class == "regen_miss"
+        assert box2.get(0).hit_class == "full_miss"
+        box2.close()
+
+    def test_engine_box_hard_kill_reopen_bit_exact(self, tmp_path, tiny_vae):
+        """Kill (no close, manifest deleted, garbage appended) — every
+        acknowledged object decodes to bit-identical pixels on reopen."""
+        from repro.core.regen_tier import Recipe
+        path = str(tmp_path / "box")
+        box = LatentBox.open(path, mode="engine", vae=tiny_vae)
+        for oid in range(6):
+            box.put(oid, recipe=Recipe(seed=700 + oid, height=16, width=16))
+        baseline = {oid: box.get(oid).payload for oid in range(6)}
+        # hard kill: no close; simulate a torn in-flight append + lost
+        # manifest
+        ddir = box.backend.durable_log.path
+        seg = sorted(f for f in os.listdir(ddir)
+                     if f.startswith("seg-"))[-1]
+        with open(os.path.join(ddir, seg), "ab") as f:
+            f.write(b"LBS1" + b"\x99" * 17)
+        man = os.path.join(ddir, MANIFEST)
+        if os.path.exists(man):
+            os.remove(man)
+        del box
+
+        box2 = LatentBox.open(path, mode="engine", vae=tiny_vae)
+        assert box2.backend.durable_log.recovery_stats[
+            "torn_tail_bytes"] == 21
+        for oid in range(6):
+            r = box2.get(oid)
+            assert r.hit_class == "full_miss"     # cold, but bit-exact
+            np.testing.assert_array_equal(r.payload, baseline[oid])
+        box2.close()
+
+    def test_write_behind_unacked_put_may_vanish_acked_survive(
+            self, tmp_path):
+        """write_behind: puts before the last flush() survive any kill;
+        the unflushed tail is allowed to vanish and must do so cleanly."""
+        from repro.core.regen_tier import Recipe
+        path = str(tmp_path / "box")
+        cfg = StoreConfig(n_nodes=2, write_behind=True)
+        box = LatentBox.open(path, mode="sim", config=cfg)
+        for oid in range(4):
+            r = box.put(oid, recipe=Recipe(seed=oid, height=16, width=16))
+            assert not r.durable                   # not acked yet
+        box.flush()                                # ack 0..3
+        log = box.backend.durable_log
+        acked_len = log._seg_len[log._active_id]
+        box.put(99, recipe=Recipe(seed=99, height=16, width=16))
+        # hard kill: the unflushed tail (oid 99) never reaches the disk
+        log._active_f.flush()                      # make it visible first,
+        crash_at(log.path, acked_len)              # then model its loss
+        del box
+        box2 = LatentBox.open(path, mode="sim", config=cfg)
+        for oid in range(4):
+            assert box2.stat(oid) is not None
+        assert box2.stat(99) is None               # cleanly ignored
+        box2.close()

@@ -358,6 +358,48 @@ else:
         pass
 
 
+class TestClockInjection:
+    """Satellite of the durable-store PR: the engine's store-latency
+    warmth draws route through ONE injectable clock (StoreConfig.clock /
+    EngineConfig.clock) instead of bare ``time.time()``, so latency
+    behavior is deterministic under test."""
+
+    def test_engine_fetch_uses_injected_clock(self, vae):
+        t = [1_000.0]
+        box = LatentBox.engine(vae=vae, config=small_cfg(clock=lambda: t[0]))
+        fill(box, 2)
+        assert box.get(0).hit_class == FULL_MISS   # durable fetch at t=1000
+        assert box.backend.store.stat(0)["last_fetch_s"] == 1_000.0
+        # purge cached copies so the next read is another durable fetch
+        t[0] = 77_777.0
+        for tier in box.backend.engine.walk.caches:
+            tier.evict(0)
+        assert box.get(0).hit_class == FULL_MISS
+        assert box.backend.store.stat(0)["last_fetch_s"] == 77_777.0
+
+    def test_warmth_window_follows_virtual_time(self, vae):
+        """Advancing the injected clock past warm_window_s must flip the
+        store's warmth classification — pure virtual time, no sleeping."""
+        t = [0.0]
+        box = LatentBox.engine(vae=vae, config=small_cfg(clock=lambda: t[0]))
+        fill(box, 1)
+        box.get(0)
+        store = box.backend.store
+        warm_window = store.latency.warm_window_s
+        t[0] = warm_window - 1.0                   # still inside the window
+        assert (t[0] - store.stat(0)["last_fetch_s"]) <= warm_window
+        t[0] = 10 * warm_window                    # way past it: cold again
+        assert (t[0] - store.stat(0)["last_fetch_s"]) > warm_window
+
+    def test_engine_config_clock_passes_through(self):
+        from repro.serve.engine import EngineConfig
+        calls = []
+        cfg = EngineConfig(clock=lambda: calls.append(1) or 42.0)
+        sc = cfg.store_config(16e3, 13e3)
+        assert sc.now_s() == 42.0 and calls
+        assert StoreConfig().now_s() > 0           # default = wall clock
+
+
 class TestStoreLatencySeeding:
     def test_per_call_seed_is_reorder_stable(self):
         a, b = LatentStore(seed=4), LatentStore(seed=4)
