@@ -1,0 +1,226 @@
+"""Fault-tolerance benchmark — the tail + recovery numbers of PR 6.
+
+Three measurements on a 4-shard R=2 replicated cluster:
+
+* **hedging** — p50/p99 of a hot trace with one replica stalling
+  mid-run, hedged reads off vs on.  The headline: hedging pulls the
+  slow-replica p99 back toward the healthy baseline while firing zero
+  extra decodes (``hedge_wins`` counts races won post-hoc).
+* **failover** — mean/p99 read latency with one shard dead, replicas
+  serving its keys, vs the healthy cluster.
+* **recovery** — wall-clock seconds for a killed persistent shard to
+  restart, replay its own log, and delta-catch-up from its peers until
+  ``under_replicated_objects() == 0``.
+
+``--smoke`` (the CI step) shrinks the trace and versions the result as
+``BENCH_resilience.json`` at the repo root via ``trajectory()``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import shutil
+import tempfile
+import time
+
+import numpy as np
+
+from benchmarks.common import Rows, scale
+from repro.core.regen_tier import Recipe
+from repro.core.tuner import TunerConfig
+from repro.store import FaultPlan, HedgeConfig, LatentBox, StoreConfig
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+SHARDS = 4
+REPLICATION = 2
+
+
+def _cfg(**kw) -> StoreConfig:
+    base = dict(n_nodes=2, cache_bytes_per_node=2e4, image_bytes=768.0,
+                latent_bytes=6e2, promote_threshold=2,
+                tuner=TunerConfig(window=10**9))
+    base.update(kw)
+    return StoreConfig(**base)
+
+
+def _trace(n_objects: int, length: int, seed: int = 11):
+    rng = np.random.default_rng(seed)
+    hot = rng.choice(max(1, n_objects // 4), size=length // 2)
+    cold = rng.choice(n_objects, size=length - len(hot))
+    seq = np.concatenate([hot, cold])
+    rng.shuffle(seq)
+    return [int(x) for x in seq]
+
+
+def _fill(box, n_objects: int) -> None:
+    for oid in range(n_objects):
+        box.put(oid, recipe=Recipe(seed=1000 + oid, height=16, width=16),
+                nbytes=600.0)
+
+
+def _drive(box, trace, window: int = 8):
+    out = []
+    for s in range(0, len(trace), window):
+        out += box.get_many(trace[s:s + window])
+    return out
+
+
+def _pcts(results):
+    lat = [r.total_ms for r in results]
+    return (float(np.percentile(lat, 50)), float(np.percentile(lat, 99)))
+
+
+def hedging_rows(smoke: bool = False) -> Rows:
+    rows = Rows()
+    n = 24 if smoke else scale(64, 256)
+    length = 240 if smoke else scale(1200, 4800)
+    trace = _trace(n, length)
+    stall_at, stall_ms = length // 10, 400.0
+
+    def run(hedge):
+        box = LatentBox.simulated(
+            _cfg(), shards=SHARDS, replication=REPLICATION, hedge=hedge,
+            fault_plan=FaultPlan.stall(0, stall_at, stall_ms))
+        _fill(box, n)
+        res = _drive(box, trace)
+        return box, res
+
+    healthy_box = LatentBox.simulated(_cfg(), shards=SHARDS,
+                                      replication=REPLICATION)
+    _fill(healthy_box, n)
+    p50_h, p99_h = _pcts(_drive(healthy_box, trace))
+    rows.add("resilience.healthy.p50_ms", derived=round(p50_h, 3))
+    rows.add("resilience.healthy.p99_ms", derived=round(p99_h, 3))
+
+    off_box, off = run(HedgeConfig(enabled=False))
+    p50_off, p99_off = _pcts(off)
+    rows.add("resilience.slow_replica.hedge_off.p50_ms",
+             derived=round(p50_off, 3))
+    rows.add("resilience.slow_replica.hedge_off.p99_ms",
+             derived=round(p99_off, 3))
+
+    on_box, on = run(HedgeConfig(quantile=0.9, min_samples=8))
+    p50_on, p99_on = _pcts(on)
+    s = on_box.summary()
+    rows.add("resilience.slow_replica.hedge_on.p50_ms",
+             derived=round(p50_on, 3))
+    rows.add("resilience.slow_replica.hedge_on.p99_ms",
+             derived=round(p99_on, 3))
+    rows.add("resilience.hedges_fired", derived=s["hedges_fired"])
+    rows.add("resilience.hedge_wins", derived=s["hedge_wins"])
+    rows.add("resilience.hedge_p99_reduction_ms",
+             derived=round(p99_off - p99_on, 3))
+    # the single-flight invariant the tests pin down, surfaced as data:
+    # hedging re-times requests, it never adds serving work
+    off_s = off_box.summary()
+    rows.add("resilience.hedge_extra_work",
+             derived=int(sum(s[k] - off_s[k] for k in
+                             ("image_hit", "latent_hit", "full_miss",
+                              "regen_miss", "total"))))
+    assert s["hedge_wins"] > 0, "hedging never won a race — check the knobs"
+    assert p99_on <= p99_off, "hedging made the tail WORSE"
+    return rows
+
+
+def failover_rows(smoke: bool = False) -> Rows:
+    rows = Rows()
+    n = 24 if smoke else scale(64, 256)
+    length = 240 if smoke else scale(1200, 4800)
+    trace = _trace(n, length)
+
+    healthy = LatentBox.simulated(_cfg(), shards=SHARDS,
+                                  replication=REPLICATION)
+    hurt = LatentBox.simulated(_cfg(), shards=SHARDS,
+                               replication=REPLICATION,
+                               fault_plan=FaultPlan.kill(1, length // 10))
+    for box in (healthy, hurt):
+        _fill(box, n)
+    res_h = _drive(healthy, trace)
+    res_d = _drive(hurt, trace)
+    same = ([(r.hit_class, r.node) for r in res_h]
+            == [(r.hit_class, r.node) for r in res_d])
+    p50_h, p99_h = _pcts(res_h)
+    p50_d, p99_d = _pcts(res_d)
+    fo = [r.total_ms for r in res_d if r.failover]
+    rows.add("resilience.dead_shard.p50_ms", derived=round(p50_d, 3))
+    rows.add("resilience.dead_shard.p99_ms", derived=round(p99_d, 3))
+    rows.add("resilience.failover_reads", derived=len(fo))
+    rows.add("resilience.failover_read_mean_ms",
+             derived=round(float(np.mean(fo)), 3) if fo else 0.0)
+    rows.add("resilience.dead_shard.conformant", derived=same)
+    assert same, "dead-shard run diverged from healthy classification"
+    assert hurt.summary()["failovers"] > 0
+    return rows
+
+
+def recovery_rows(smoke: bool = False) -> Rows:
+    rows = Rows()
+    n = 24 if smoke else scale(96, 384)
+    length = 160 if smoke else scale(800, 3200)
+    kill_at, restart_at = length // 8, length // 2
+    root = tempfile.mkdtemp(prefix="bench_resilience_")
+    try:
+        box = LatentBox.open(
+            root, mode="sim", config=_cfg(write_behind=True),
+            shards=SHARDS, replication=REPLICATION,
+            fault_plan=FaultPlan.kill_restart(2, kill_at, restart_at))
+        _fill(box, n)
+        trace = _trace(n, length)
+        # drive up to (but not past) the restart boundary, then time the
+        # window that crosses it: that window pays the full recovery —
+        # log replay + peer delta catch-up
+        t_restart = None
+        for s in range(0, len(trace), 8):
+            crosses = s <= restart_at < s + 8
+            t0 = time.perf_counter()
+            box.get_many(trace[s:s + 8])
+            if crosses:
+                t_restart = time.perf_counter() - t0
+        under = box.backend.under_replicated_objects()
+        rows.add("resilience.recovery.catch_up_s",
+                 derived=round(t_restart or 0.0, 4))
+        rows.add("resilience.recovery.under_replicated", derived=under)
+        rows.add("resilience.recovery.restarts",
+                 derived=box.summary()["restarts"])
+        assert under == 0, "restart left objects under-replicated"
+        box.close()
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+    return rows
+
+
+def run(smoke: bool = False) -> Rows:
+    rows = Rows()
+    rows.extend(hedging_rows(smoke=smoke))
+    rows.extend(failover_rows(smoke=smoke))
+    rows.extend(recovery_rows(smoke=smoke))
+    return rows
+
+
+def trajectory(out_dir: str = REPO_ROOT, smoke: bool = False) -> Rows:
+    """The resilience-trajectory artifact:
+    ``<out_dir>/BENCH_resilience.json`` — hedged-tail, failover, and
+    recovery numbers versioned at the repo root so later checkouts have
+    a trend to regress against."""
+    rows = run(smoke=smoke)
+    path = rows.save_json("BENCH_resilience", out_dir=out_dir)
+    print(f"# saved {path}")
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run; writes BENCH_resilience.json at "
+                         "the repo root")
+    args = ap.parse_args()
+    if args.smoke:
+        trajectory(smoke=True).print()
+        return
+    run().print()
+
+
+if __name__ == "__main__":
+    main()

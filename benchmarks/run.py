@@ -11,7 +11,7 @@ Paper artifact -> module map (DESIGN.md §7):
   Fig 9/11   bench_tuning      Fig 10      bench_spillover
   Fig 8      bench_cost        Fig 12      bench_fidelity
   Table 1c   bench_decode      kernels     bench_kernels
-  §Roofline  roofline_report
+  §Roofline  roofline_report   fault tol.  bench_resilience
 """
 
 from __future__ import annotations
@@ -27,7 +27,7 @@ MODULES = [
     "bench_trace", "bench_storage", "bench_decode", "bench_kernels",
     "bench_cost", "bench_cache_sweep", "bench_tuning", "bench_spillover",
     "bench_latency", "bench_fidelity", "bench_regen",
-    "roofline_report",
+    "bench_resilience", "roofline_report",
 ]
 
 
@@ -36,13 +36,17 @@ def trajectory() -> None:
     ``BENCH_kernels.json`` + ``BENCH_storage.json`` at the repo root
     (versioned, unlike the artifacts/ scratch) — per-bucket per-image
     decode ms, fast-path speedups, kernel-vs-oracle errors and traffic
-    wins, pixel-tier bytes/object, and the durable store's measured
-    on-disk savings / recovery ms / compaction write amplification — so
-    later checkouts have a trend to regress against."""
-    from benchmarks import bench_decode, bench_kernels, bench_storage
+    wins, pixel-tier bytes/object, the durable store's measured
+    on-disk savings / recovery ms / compaction write amplification, and
+    (``BENCH_resilience.json``) the replicated cluster's hedged-tail,
+    failover, and restart-recovery numbers — so later checkouts have a
+    trend to regress against."""
+    from benchmarks import (bench_decode, bench_kernels, bench_resilience,
+                            bench_storage)
     bench_decode.trajectory().print()
     bench_kernels.trajectory().print()
     bench_storage.trajectory().print()
+    bench_resilience.trajectory().print()
 
 
 def main() -> None:

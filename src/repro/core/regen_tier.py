@@ -130,16 +130,32 @@ class RegenTierStore:
         self.n_regens = 0
 
     # -- durability ------------------------------------------------------------
-    def _journal_state(self, oid: int) -> None:
-        if self.journal is None:
-            return
+    def state_of(self, oid: int) -> Optional[Dict]:
+        """Full-state snapshot of one object in the journal's record format
+        (None: unknown oid) — the unit the replication layer ships to peer
+        shards and feeds back through :meth:`restore_state`."""
+        if oid not in self._recipes:
+            return None
         recipe = self._recipe_payloads.get(oid)
-        self.journal.put_recipe_state(oid, {
+        return {
             "recipe": recipe.to_json() if recipe is not None else None,
             "recipe_nbytes": self._recipes[oid],
             "latent_bytes": self._latents.get(oid),   # None => demoted
             "last_access_mo": self._last_access_mo.get(oid, 0.0),
-        })
+        }
+
+    def forget(self, oid: int) -> None:
+        """Drop one object *without* journaling a delete — applying a
+        replicated deletion that is already durable in the shipped log."""
+        self._latents.pop(oid, None)
+        self._recipes.pop(oid, None)
+        self._recipe_payloads.pop(oid, None)
+        self._last_access_mo.pop(oid, None)
+
+    def _journal_state(self, oid: int) -> None:
+        if self.journal is None:
+            return
+        self.journal.put_recipe_state(oid, self.state_of(oid))
 
     def _journal_delete(self, oid: int) -> None:
         if self.journal is not None:

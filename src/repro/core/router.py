@@ -68,6 +68,23 @@ class ConsistentHashRing:
         i = bisect.bisect_right(self._keys, h) % len(self._ring)
         return self._ring[i][1]
 
+    def successors(self, oid: int):
+        """Yield the distinct nodes encountered walking the ring clockwise
+        from ``oid``'s position — the first yield is ``owner(oid)``.  Replica
+        placement takes the first R distinct *shards* along this walk, so a
+        node join/leave only reshuffles the replicas whose successor window
+        it enters or exits."""
+        if not self._ring:
+            raise RuntimeError("empty ring")
+        h = _hash64(f"obj:{oid}")
+        start = bisect.bisect_right(self._keys, h) % len(self._ring)
+        seen = set()
+        for step in range(len(self._ring)):
+            node = self._ring[(start + step) % len(self._ring)][1]
+            if node not in seen:
+                seen.add(node)
+                yield node
+
 
 class Router:
     """Coalescing + ownership + spillover decisions.

@@ -20,6 +20,9 @@ from repro.store.backends import EngineBackend, SimBackend
 from repro.store.durable import (Compactor, DurableBackend, MemoryBackend,
                                  SegmentLog, SegmentLogBackend)
 from repro.store.facade import LatentBox
+from repro.store.faults import FaultEvent, FaultPlan
+from repro.store.replication import (HedgeConfig, LogReplicaHolder,
+                                     MemoryReplica)
 from repro.store.sharding import ReshardReport, ShardedLatentBox
 from repro.store.tiers import (DualCacheTier, DurableTier, RecipeTier, Tier,
                                TierHit)
@@ -32,5 +35,7 @@ __all__ = [
     "TierWalk", "WalkTicket",
     "DurableBackend", "MemoryBackend", "SegmentLogBackend", "SegmentLog",
     "Compactor", "DEFAULT_OBJECT_BYTES",
+    "FaultPlan", "FaultEvent", "HedgeConfig",
+    "LogReplicaHolder", "MemoryReplica",
     "IMAGE_HIT", "LATENT_HIT", "FULL_MISS", "REGEN_MISS", "HIT_CLASSES",
 ]

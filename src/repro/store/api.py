@@ -152,6 +152,12 @@ class GetResult:
     exec_node: int = -1                   # where the decode ran
     spilled: bool = False
     regenerated: bool = False
+    #: The owner shard was dead/partitioned and a replica served the read.
+    failover: bool = False
+    #: A speculative replica fetch was fired AND won the race; latency_ms
+    #: reflects the hedged path.  (Fired-but-lost hedges only count in the
+    #: cluster's ``hedges_fired``.)
+    hedged: bool = False
     latency_ms: Dict[str, float] = dataclasses.field(default_factory=dict)
 
     @property

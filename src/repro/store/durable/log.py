@@ -340,6 +340,10 @@ class SegmentLog:
         return {oid: s.value for (ns, oid), s in self.slots.items()
                 if ns == NS_RECIPE and s.kind == RSTATE}
 
+    def recipe_state_of(self, oid: int) -> Optional[Dict[str, Any]]:
+        s = self.slots.get((NS_RECIPE, int(oid)))
+        return s.value if s is not None and s.kind == RSTATE else None
+
     # -- reads ---------------------------------------------------------------
 
     def _read_slot_payload(self, s: Slot) -> Optional[bytes]:
@@ -389,6 +393,28 @@ class SegmentLog:
             return
         self._seal_active()
         self.write_manifest()
+        for f in self._read_handles.values():
+            f.close()
+        self._read_handles.clear()
+        self.closed = True
+
+    def abandon(self) -> None:
+        """Emulate a process kill in-process: drop the userspace append
+        buffer (bytes not yet flushed to the OS are lost, exactly as on
+        ``os._exit``), close every handle, write no manifest.  The on-disk
+        state is what a real crash would leave — the failure-injection
+        harness kills shards this way, then reopens a fresh log to recover.
+        """
+        if self.closed:
+            return
+        if self._active_f is not None:
+            p = self._seg_path(self._active_id)
+            flushed = os.path.getsize(p)         # what the OS already has
+            self._active_f.close()               # flushes the tail...
+            with open(p, "r+b") as f:
+                f.truncate(flushed)              # ...which the kill loses
+            self._active_f = None
+            self._active_id = None
         for f in self._read_handles.values():
             f.close()
         self._read_handles.clear()
@@ -459,19 +485,60 @@ class SegmentLog:
                     json.dumps(rs.value, sort_keys=True).encode()))
         return b"".join(parts)
 
+    def export_delta(self, since_lsn: int, oids=None) -> bytes:
+        """Replication catch-up image: every *current* slot (both
+        namespaces, deletions included as TOMB/RDEL records) with
+        ``lsn > since_lsn``, lsn-ordered, as one raw segment image.
+        Unlike :meth:`export_records` this ships deletions — a replica
+        must learn that an object died.  ``oids`` narrows the export to a
+        designated subset (None: everything)."""
+        want = None if oids is None else {int(o) for o in oids}
+        picked = []
+        for (ns, oid), s in self.slots.items():
+            if s.lsn <= since_lsn:
+                continue
+            if want is not None and oid not in want:
+                continue
+            picked.append((s.lsn, ns, oid, s))
+        parts: List[bytes] = []
+        for _, ns, oid, s in sorted(picked):
+            if s.kind in (TOMB, RDEL):
+                payload = b""
+            elif s.kind == RSTATE:
+                payload = json.dumps(s.value, sort_keys=True).encode()
+            elif s.kind == SIZE:
+                payload = pack_size_payload(s.size)
+            else:
+                payload = self._read_slot_payload(s)
+                if payload is None:
+                    raise IOError(f"checksum failure exporting oid {oid}")
+            parts.append(pack_record(s.lsn, s.kind, oid, payload))
+        return b"".join(parts)
+
     def ingest_segment(self, raw: bytes) -> Dict[str, Any]:
         """Adopt a shipped segment as one fresh *sealed* segment file:
         records are re-stamped with local lsns while streaming to disk
-        (no per-key put path), then indexed.  Returns the applied view:
-        ``{"objects": [oid...], "recipes": {oid: state}}``."""
+        (no per-key put path), then indexed.  Corrupt input (a flipped
+        bit fails a record checksum, truncation breaks framing) is
+        rejected up front with ``ValueError`` — nothing is applied and no
+        segment file is created.  Returns the applied view:
+        ``{"objects": [...], "recipes": {...}, "removed_objects": [...],
+        "removed_recipes": [...], "segment": sid-or-None}``."""
         recs, valid_end = scan_records(raw, 0)
         if valid_end != len(raw):
-            raise ValueError("shipped segment has a torn tail")
+            raise ValueError(
+                f"shipped segment is corrupt: checksum/framing failure at "
+                f"byte {valid_end} of {len(raw)}; nothing applied")
+        applied_objects: List[int] = []
+        recipes: Dict[int, Dict[str, Any]] = {}
+        removed_objects: List[int] = []
+        removed_recipes: List[int] = []
+        if not recs:
+            return {"objects": [], "recipes": {}, "removed_objects": [],
+                    "removed_recipes": [], "segment": None}
         self._seal_active()
         sid = self._next_seg
         self._next_seg += 1
-        applied_objects: List[int] = []
-        recipes: Dict[int, Dict[str, Any]] = {}
         with open(self._seg_path(sid), "wb") as f:
             off = 0
             self._seg_len[sid] = 0
@@ -490,12 +557,17 @@ class SegmentLog:
                     applied_objects.append(r.oid)
                 elif r.kind == RSTATE:
                     recipes[r.oid] = json.loads(r.payload.decode())
+                elif r.kind == TOMB:
+                    removed_objects.append(r.oid)
+                elif r.kind == RDEL:
+                    removed_recipes.append(r.oid)
             f.flush()
             if self.fsync:
                 os.fsync(f.fileno())
         self.write_manifest()
         return {"objects": applied_objects, "recipes": recipes,
-                "segment": sid}
+                "removed_objects": removed_objects,
+                "removed_recipes": removed_recipes, "segment": sid}
 
     # -- accounting -----------------------------------------------------------
 

@@ -38,38 +38,50 @@ class LatentBox:
     # -- constructors --------------------------------------------------------
     @classmethod
     def engine(cls, vae=None, config: Optional[StoreConfig] = None,
-               seed: int = 0, shards: int = 1) -> "LatentBox":
+               seed: int = 0, shards: int = 1,
+               replication: Optional[int] = None, hedge=None,
+               fault_plan=None) -> "LatentBox":
         """Real-decode box.  Without an explicit ``vae`` a small demo VAE
         is built (the paper-scale decoder swaps in transparently).
         ``shards > 1`` serves a consistent-hash-sharded cluster of engine
-        backends with ``config.n_nodes`` nodes per shard."""
+        backends with ``config.n_nodes`` nodes per shard;
+        ``replication``/``hedge``/``fault_plan`` configure R-way replica
+        placement, hedged reads, and scripted failure injection on that
+        cluster (see :class:`~repro.store.sharding.ShardedLatentBox`)."""
         from repro.store.backends import EngineBackend
         if vae is None:
             from repro.vae.model import VAE, VAEConfig
             vae = VAE(VAEConfig(name="demo", latent_channels=4,
                                 block_out_channels=(16, 32),
                                 layers_per_block=1, groups=4), seed=seed)
-        if shards > 1:
+        if shards > 1 or (replication or 1) > 1 or fault_plan is not None:
             from repro.store.sharding import ShardedLatentBox
-            return cls(ShardedLatentBox.engine(vae, shards, config))
+            return cls(ShardedLatentBox.engine(
+                vae, shards, config, replication=replication, hedge=hedge,
+                fault_plan=fault_plan))
         return cls(EngineBackend(vae, config))
 
     @classmethod
     def simulated(cls, config: Optional[StoreConfig] = None,
-                  shards: int = 1) -> "LatentBox":
+                  shards: int = 1, replication: Optional[int] = None,
+                  hedge=None, fault_plan=None) -> "LatentBox":
         """Latency-plant box: identical classifications, modeled latency.
         ``shards > 1`` serves a consistent-hash-sharded cluster of sim
-        backends, each with its own GPU plant and tuner state."""
+        backends, each with its own GPU plant and tuner state;
+        ``replication``/``hedge``/``fault_plan`` as for :meth:`engine`."""
         from repro.store.backends import SimBackend
-        if shards > 1:
+        if shards > 1 or (replication or 1) > 1 or fault_plan is not None:
             from repro.store.sharding import ShardedLatentBox
-            return cls(ShardedLatentBox.simulated(shards, config))
+            return cls(ShardedLatentBox.simulated(
+                shards, config, replication=replication, hedge=hedge,
+                fault_plan=fault_plan))
         return cls(SimBackend(config))
 
     @classmethod
     def open(cls, path, mode: str = "engine",
              config: Optional[StoreConfig] = None, vae=None, seed: int = 0,
-             shards: int = 1) -> "LatentBox":
+             shards: int = 1, replication: Optional[int] = None,
+             hedge=None, fault_plan=None) -> "LatentBox":
         """Open (or create) a *persistent* box on ``path``.
 
         The durable-latent and recipe tiers write through one
@@ -87,9 +99,13 @@ class LatentBox:
         import dataclasses as _dc
         cfg = _dc.replace(config or StoreConfig(), data_dir=str(path))
         if mode == "engine":
-            return cls.engine(vae=vae, config=cfg, seed=seed, shards=shards)
+            return cls.engine(vae=vae, config=cfg, seed=seed, shards=shards,
+                              replication=replication, hedge=hedge,
+                              fault_plan=fault_plan)
         if mode == "sim":
-            return cls.simulated(cfg, shards=shards)
+            return cls.simulated(cfg, shards=shards,
+                                 replication=replication, hedge=hedge,
+                                 fault_plan=fault_plan)
         raise ValueError(f"mode must be 'engine' or 'sim': {mode!r}")
 
     @property

@@ -210,8 +210,10 @@ class TestSegmentLog:
     def test_ingest_rejects_torn_batch(self, tmp_path):
         dst = SegmentLog(str(tmp_path / "dst"))
         raw = pack_record(1, BLOB, 1, b"ok") + b"LBS1garbage"
-        with pytest.raises(ValueError, match="torn"):
+        with pytest.raises(ValueError, match="nothing applied"):
             dst.ingest_segment(raw)
+        # validate-before-apply: the good leading record must NOT land
+        assert not dst.contains_object(1)
         dst.close()
 
     def test_read_handles_closed_segment_compacted(self, tmp_path):

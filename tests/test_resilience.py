@@ -1,0 +1,466 @@
+"""Fault-tolerance suite: replication, failure injection, hedged reads.
+
+The contract under test (PR 6 tentpole): on an R>=2 cluster no single
+shard death loses an acknowledged object or changes a single request's
+classification — the differential signature of a one-shard-dead cluster
+is IDENTICAL to the healthy cluster's, and engine pixels stay
+bit-identical through failover.  Kill-then-restart recovers the revived
+shard from its own log plus delta catch-up from its peers, converging to
+``under_replicated_objects() == 0``.  Hedged reads cut the slow-replica
+tail without ever touching classification, cache state, or decode
+counts.
+
+Fast cases run per push; the full {kill, stall, partition} x {sim,
+engine} matrix is ``slow``-marked for the nightly job.
+"""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from conftest import classify, conformance_config, fill_and_demote
+
+from repro.core.regen_tier import Recipe
+from repro.store import FaultEvent, FaultPlan, HedgeConfig, LatentBox
+
+
+def _trace(n_objects, length, seed=7):
+    rng = np.random.default_rng(seed)
+    # zipf-flavoured: a hot head (exercises image tier + hedging) plus a
+    # uniform tail (exercises durable + regen paths)
+    hot = rng.choice(max(1, n_objects // 4), size=length // 2)
+    cold = rng.choice(n_objects, size=length - len(hot))
+    seq = np.concatenate([hot, cold])
+    rng.shuffle(seq)
+    return [int(x) for x in seq]
+
+
+def _replicated_box(kind, shards, vae=None, replication=2, hedge=None,
+                    fault_plan=None, total_nodes=None, **cfg_kw):
+    total = total_nodes if total_nodes is not None else 2 * shards
+    assert total % shards == 0
+    cfg = conformance_config(total // shards, **cfg_kw)
+    if kind == "engine":
+        return LatentBox.engine(vae=vae, config=cfg, shards=shards,
+                                replication=replication, hedge=hedge,
+                                fault_plan=fault_plan)
+    return LatentBox.simulated(cfg, shards=shards, replication=replication,
+                               hedge=hedge, fault_plan=fault_plan)
+
+
+N_OBJECTS = 20
+TRACE_LEN = 160
+
+
+# ---------------------------------------------------------------------------
+# replication is classification-invariant while healthy
+# ---------------------------------------------------------------------------
+
+class TestHealthyReplication:
+    @pytest.mark.parametrize("kind", ["sim", "engine"])
+    def test_r2_matches_r1_classification(self, kind, tiny_vae):
+        trace = _trace(N_OBJECTS, TRACE_LEN)
+        vae = tiny_vae if kind == "engine" else None
+        base = _replicated_box(kind, 4, vae=vae, replication=1)
+        repl = _replicated_box(kind, 4, vae=vae, replication=2)
+        for box in (base, repl):
+            fill_and_demote(box, N_OBJECTS)
+        assert classify(base, trace) == classify(repl, trace)
+        s = repl.summary()
+        assert s["replication"] == 2
+        assert s["under_replicated_objects"] == 0
+        assert s["failovers"] == 0
+
+    def test_replica_placement_distinct_shards(self):
+        box = _replicated_box("sim", 4, replication=3)
+        cluster = box.backend
+        fill_and_demote(box, N_OBJECTS)
+        for oid in range(N_OBJECTS):
+            reps = cluster.replica_shards(oid)
+            assert len(reps) == 3
+            assert len(set(reps)) == 3
+            assert reps[0] == cluster.shard_of(oid)
+
+    def test_replication_capped_by_shard_count(self):
+        box = _replicated_box("sim", 2, replication=4)
+        cluster = box.backend
+        fill_and_demote(box, 6)
+        for oid in range(6):
+            assert len(cluster.replica_shards(oid)) == 2
+        assert cluster.under_replicated_objects() == 0
+
+
+# ---------------------------------------------------------------------------
+# the acid test: one dead shard is classification-invisible
+# ---------------------------------------------------------------------------
+
+class TestDeadShardConformance:
+    @pytest.mark.parametrize("kind", ["sim", "engine"])
+    def test_kill_mid_trace_identical_classes(self, kind, tiny_vae):
+        trace = _trace(N_OBJECTS, TRACE_LEN)
+        vae = tiny_vae if kind == "engine" else None
+        healthy = _replicated_box(kind, 4, vae=vae, replication=2)
+        hurt = _replicated_box(kind, 4, vae=vae, replication=2,
+                               fault_plan=FaultPlan.kill(1, TRACE_LEN // 3))
+        for box in (healthy, hurt):
+            fill_and_demote(box, N_OBJECTS)
+        sig_h = classify(healthy, trace)
+        sig_d = classify(hurt, trace)
+        assert sig_h == sig_d
+        s = hurt.summary()
+        assert s["dead_shards"] == [1]
+        assert s["failovers"] > 0
+        # every request answered; no read ever failed
+        assert len(sig_d) == TRACE_LEN
+
+    def test_engine_failover_pixels_bit_identical(self, tiny_vae):
+        trace = _trace(N_OBJECTS, 96)
+        healthy = _replicated_box("engine", 4, vae=tiny_vae, replication=2)
+        hurt = _replicated_box("engine", 4, vae=tiny_vae, replication=2,
+                               fault_plan=FaultPlan.kill(1, 32))
+        for box in (healthy, hurt):
+            fill_and_demote(box, N_OBJECTS)
+        for s in range(0, len(trace), 8):
+            win = trace[s:s + 8]
+            for rh, rd in zip(healthy.get_many(win), hurt.get_many(win)):
+                assert rh.hit_class == rd.hit_class
+                np.testing.assert_array_equal(rh.payload, rd.payload)
+        assert hurt.summary()["failovers"] > 0
+
+    def test_failover_reads_are_flagged(self):
+        plan = FaultPlan.kill(0, 0)
+        box = _replicated_box("sim", 3, replication=2, fault_plan=plan)
+        fill_and_demote(box, 9, demote=())
+        cluster = box.backend
+        owned = [oid for oid in range(9) if cluster.shard_of(oid) == 0]
+        assert owned, "need at least one object on the killed shard"
+        res = box.get_many(owned)
+        assert all(r.failover for r in res)
+        assert all(r.hit_class for r in res)
+
+    def test_unreplicated_dead_shard_raises(self):
+        box = _replicated_box("sim", 3, replication=1,
+                              fault_plan=FaultPlan.kill(0, 0))
+        fill_and_demote(box, 9, demote=())
+        cluster = box.backend
+        owned = [oid for oid in range(9) if cluster.shard_of(oid) == 0]
+        with pytest.raises(RuntimeError, match="no replicas"):
+            box.get_many(owned)
+
+
+# ---------------------------------------------------------------------------
+# kill -> restart: recovery and re-replication
+# ---------------------------------------------------------------------------
+
+class TestKillRestart:
+    def test_restart_recovers_full_replication(self):
+        plan = FaultPlan.kill_restart(2, 40, 120)
+        box = _replicated_box("sim", 4, replication=2, fault_plan=plan)
+        fill_and_demote(box, N_OBJECTS)
+        trace = _trace(N_OBJECTS, TRACE_LEN)
+        classify(box, trace)
+        s = box.summary()
+        assert s["restarts"] == 1
+        assert s["dead_shards"] == []
+        assert s["under_replicated_objects"] == 0
+        # the revived shard serves its own keys again (cache-cold but whole)
+        cluster = box.backend
+        owned = [oid for oid in range(N_OBJECTS)
+                 if cluster.shard_of(oid) == 2]
+        for r in box.get_many(owned):
+            assert r.hit_class
+            assert not r.failover
+
+    def test_writes_during_outage_reach_revived_shard(self):
+        plan = FaultPlan.kill_restart(1, 8, 16)
+        box = _replicated_box("sim", 4, replication=2, fault_plan=plan)
+        for oid in range(8):
+            box.put(oid, recipe=Recipe(seed=oid, height=16, width=16),
+                    nbytes=600.0)
+        box.get_many(list(range(8)))          # crosses the kill boundary
+        cluster = box.backend
+        new_ids = [oid for oid in range(8, 40)
+                   if cluster.shard_of(oid) == 1][:4]
+        assert new_ids, "need fresh objects owned by the dead shard"
+        for oid in new_ids:
+            box.put(oid, recipe=Recipe(seed=oid, height=16, width=16),
+                    nbytes=600.0)             # acked by a replica
+        box.get_many(list(range(8)) * 2)      # crosses the restart boundary
+        assert box.summary()["under_replicated_objects"] == 0
+        for r in box.get_many(new_ids):
+            assert r.hit_class
+            assert not r.failover             # the owner serves again
+
+    def test_persistent_restart_ships_delta_and_conserves_bytes(self,
+                                                                tmp_path):
+        cfg_kw = dict(write_behind=True, segment_bytes=4096.0)
+        plan = FaultPlan.kill_restart(2, 40, 120)
+        box = LatentBox.open(tmp_path, mode="sim",
+                             config=conformance_config(1, **cfg_kw),
+                             shards=4, replication=2, fault_plan=plan)
+        fill_and_demote(box, N_OBJECTS)
+        trace = _trace(N_OBJECTS, TRACE_LEN)
+        classify(box, trace)
+        cluster = box.backend
+        assert cluster.under_replicated_objects() == 0
+        # catch-up was delta-shipped: every holder's high-water mark sits
+        # at its source's current position, so the next sync ships nothing
+        for (f, src), holder in cluster._holders.items():
+            assert holder.hwm <= cluster._source_position(src)
+            assert not cluster._export_from(
+                src, holder.hwm, cluster._designated.get((f, src), set()))
+        box.flush()
+        # on-disk replica bytes stay within one segment of slack of the
+        # primaries' live bytes (no unbounded re-ship amplification)
+        live = sum(sh.backend.summary()["durable_live_bytes"]
+                   for sh in cluster.shards.values())
+        replica = box.summary()["replica_disk_bytes"]
+        n_holders = len(cluster._holders)
+        assert replica <= live + 4096.0 * max(1, n_holders)
+        box.close()
+
+    def test_partition_heal_converges(self):
+        plan = FaultPlan(events=(
+            FaultEvent(kind="partition", shard_id=1, at_request=30),
+            FaultEvent(kind="restart", shard_id=1, at_request=90),
+        ))
+        healthy = _replicated_box("sim", 4, replication=2)
+        parted = _replicated_box("sim", 4, replication=2, fault_plan=plan)
+        for box in (healthy, parted):
+            fill_and_demote(box, N_OBJECTS)
+        trace = _trace(N_OBJECTS, 120)
+        sig_h = classify(healthy, trace[:90])
+        sig_p = classify(parted, trace[:90])
+        assert sig_h == sig_p                  # partition == kill for reads
+        classify(parted, trace[90:])
+        s = parted.summary()
+        assert s["dead_shards"] == []
+        assert s["under_replicated_objects"] == 0
+
+
+# ---------------------------------------------------------------------------
+# hedged reads
+# ---------------------------------------------------------------------------
+
+class TestHedgedReads:
+    def _run(self, hedge):
+        plan = FaultPlan.stall(0, 24, 400.0)
+        box = _replicated_box("sim", 4, replication=2, hedge=hedge,
+                              fault_plan=plan)
+        # no demotions: a 3.9 s regen miss would own the p99 and hedging
+        # (rightly) never races the regen pipeline
+        fill_and_demote(box, N_OBJECTS, demote=())
+        trace = _trace(N_OBJECTS, TRACE_LEN)
+        res = []
+        for s in range(0, len(trace), 8):
+            res += box.get_many(trace[s:s + 8])
+        return box, res
+
+    def test_hedging_cuts_slow_replica_tail(self):
+        off_box, off = self._run(HedgeConfig(enabled=False))
+        on_box, on = self._run(HedgeConfig(quantile=0.9, min_samples=8))
+        # classification is untouchable: hedging only re-times requests
+        assert ([(r.hit_class, r.node) for r in off]
+                == [(r.hit_class, r.node) for r in on])
+        p99_off = float(np.percentile([r.total_ms for r in off], 99))
+        p99_on = float(np.percentile([r.total_ms for r in on], 99))
+        assert on_box.summary()["hedges_fired"] > 0
+        assert on_box.summary()["hedge_wins"] > 0
+        assert p99_on < p99_off
+
+    def test_won_hedges_do_not_double_decode(self, tiny_vae):
+        plan = FaultPlan.stall(0, 24, 400.0)
+        hedged = _replicated_box("engine", 4, vae=tiny_vae, replication=2,
+                                 hedge=HedgeConfig(quantile=0.9,
+                                                   min_samples=8),
+                                 fault_plan=plan)
+        plain = _replicated_box("engine", 4, vae=tiny_vae, replication=2,
+                                fault_plan=FaultPlan.stall(0, 24, 400.0),
+                                hedge=HedgeConfig(enabled=False))
+        for box in (hedged, plain):
+            fill_and_demote(box, N_OBJECTS)
+        trace = _trace(N_OBJECTS, TRACE_LEN)
+        for s in range(0, len(trace), 8):
+            a = hedged.get_many(trace[s:s + 8])
+            b = plain.get_many(trace[s:s + 8])
+            for ra, rb in zip(a, b):
+                assert ra.hit_class == rb.hit_class
+                np.testing.assert_array_equal(ra.payload, rb.payload)
+
+        # the single-flight guarantee: a won hedge re-times the read, it
+        # never runs a second decode
+        assert hedged.summary()["decodes"] == plain.summary()["decodes"]
+
+    def test_hedge_flag_and_latency_rewrite(self):
+        on_box, on = self._run(HedgeConfig(quantile=0.9, min_samples=8))
+        wins = [r for r in on if r.hedged]
+        assert len(wins) == on_box.summary()["hedge_wins"]
+        for r in wins:
+            assert r.latency_ms["total"] < r.latency_ms["unhedged_total"]
+            assert "hedge_fetch" in r.latency_ms
+
+
+# ---------------------------------------------------------------------------
+# satellites: crash-safe meta, corrupt segment ingest, reshard edge cases
+# ---------------------------------------------------------------------------
+
+class TestClusterMetaDurability:
+    def test_truncated_meta_raises_cleanly(self, tmp_path):
+        box = LatentBox.open(tmp_path, mode="sim",
+                             config=conformance_config(1), shards=2)
+        box.close()
+        meta = os.path.join(tmp_path, "CLUSTER.json")
+        raw = open(meta, "rb").read()
+        with open(meta, "wb") as f:
+            f.write(raw[:len(raw) // 2])       # torn write
+        with pytest.raises(ValueError, match="corrupt cluster meta"):
+            LatentBox.open(tmp_path, mode="sim",
+                           config=conformance_config(1), shards=2)
+
+    def test_meta_write_leaves_no_tmp_and_survives_stale_tmp(self, tmp_path):
+        box = LatentBox.open(tmp_path, mode="sim",
+                             config=conformance_config(1), shards=2,
+                             replication=2)
+        box.close()
+        meta = os.path.join(tmp_path, "CLUSTER.json")
+        assert not os.path.exists(meta + ".tmp")
+        with open(meta + ".tmp", "w") as f:
+            f.write("{garbage")                # crashed mid-replace
+        box2 = LatentBox.open(tmp_path, mode="sim",
+                              config=conformance_config(1), shards=2)
+        assert box2.backend.replication == 2   # inherited from meta
+        assert not os.path.exists(meta + ".tmp")
+        box2.close()
+
+    def test_replication_mismatch_on_reopen_errors(self, tmp_path):
+        box = LatentBox.open(tmp_path, mode="sim",
+                             config=conformance_config(1), shards=2,
+                             replication=2)
+        box.close()
+        with pytest.raises(ValueError, match="replication"):
+            LatentBox.open(tmp_path, mode="sim",
+                           config=conformance_config(1), shards=2,
+                           replication=3)
+
+
+class TestCorruptSegmentIngest:
+    def test_bit_flip_rejected_without_partial_state(self, tmp_path):
+        from repro.store.durable.log import SegmentLog
+        src = SegmentLog(os.path.join(tmp_path, "src"))
+        for oid in range(8):
+            src.put_blob(oid, bytes([oid]) * 64)
+        src.flush()
+        raw = bytearray(src.export_delta(0))
+        dst = SegmentLog(os.path.join(tmp_path, "dst"))
+        flipped = bytearray(raw)
+        flipped[len(flipped) // 2] ^= 0x40
+        before = sorted(dst.object_oids())
+        with pytest.raises(ValueError):
+            dst.ingest_segment(bytes(flipped))
+        assert sorted(dst.object_oids()) == before   # nothing applied
+        # the pristine copy still ingests fine afterwards
+        applied = dst.ingest_segment(bytes(raw))
+        assert len(applied["objects"]) == 8
+        src.close(); dst.close()
+
+    def test_empty_ingest_is_noop(self, tmp_path):
+        from repro.store.durable.log import SegmentLog
+        log = SegmentLog(os.path.join(tmp_path, "log"))
+        applied = log.ingest_segment(b"")
+        assert applied["objects"] == []
+        assert applied["segment"] is None
+        log.close()
+
+
+class TestReshardEdgeCases:
+    @pytest.mark.parametrize("replication", [1, 2])
+    def test_remove_down_to_one_shard(self, replication):
+        box = _replicated_box("sim", 4, replication=replication)
+        fill_and_demote(box, N_OBJECTS)
+        cluster = box.backend
+        baseline = classify(box, list(range(N_OBJECTS)))
+        while cluster.n_shards > 1:
+            victim = max(cluster.shard_ids)
+            cluster.remove_shard(victim)
+            res = box.get_many(list(range(N_OBJECTS)))
+            assert all(r.hit_class for r in res)
+        assert cluster.n_shards == 1
+        assert cluster.under_replicated_objects() == 0
+        assert len(baseline) == N_OBJECTS
+
+    @pytest.mark.parametrize("replication", [1, 2])
+    def test_remove_zero_object_shard(self, replication):
+        box = _replicated_box("sim", 3, replication=replication)
+        cluster = box.backend
+        # place objects only on shards != victim
+        victim = 2
+        oids = [oid for oid in range(200)
+                if cluster.shard_of(oid) != victim][:10]
+        for oid in oids:
+            box.put(oid, recipe=Recipe(seed=oid, height=16, width=16),
+                    nbytes=600.0)
+        report = cluster.remove_shard(victim)
+        assert report.n_moved == 0
+        for r in box.get_many(oids):
+            assert r.hit_class
+        assert cluster.under_replicated_objects() == 0
+
+    def test_reshard_refused_while_shard_down(self):
+        box = _replicated_box("sim", 4, replication=2,
+                              fault_plan=FaultPlan.kill(1, 0))
+        fill_and_demote(box, 8, demote=())
+        box.get_many(list(range(8)))          # fires the kill
+        with pytest.raises(RuntimeError, match="down"):
+            box.backend.remove_shard(2)
+        with pytest.raises(RuntimeError, match="down"):
+            box.backend.add_shard()
+
+
+# ---------------------------------------------------------------------------
+# summary surface
+# ---------------------------------------------------------------------------
+
+class TestSummarySurface:
+    def test_fault_counters_serializable(self):
+        plan = FaultPlan.kill(1, 40)
+        box = _replicated_box("sim", 4, replication=2, fault_plan=plan)
+        fill_and_demote(box, N_OBJECTS)
+        classify(box, _trace(N_OBJECTS, 120))
+        s = box.summary()
+        for key in ("replication", "failovers", "hedges_fired", "hedge_wins",
+                    "under_replicated_objects", "dead_shards", "restarts"):
+            assert key in s, key
+        json.dumps(s)                          # bench/CI consume this
+
+
+# ---------------------------------------------------------------------------
+# nightly matrix: every fault kind on both backends
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+class TestFaultMatrix:
+    KIND_PLANS = {
+        "kill": lambda: FaultPlan.kill(1, TRACE_LEN // 3),
+        "stall": lambda: FaultPlan.stall(1, TRACE_LEN // 3, 300.0),
+        "partition": lambda: FaultPlan(events=(
+            FaultEvent(kind="partition", shard_id=1,
+                       at_request=TRACE_LEN // 3),)),
+    }
+
+    @pytest.mark.parametrize("fault", sorted(KIND_PLANS))
+    @pytest.mark.parametrize("kind", ["sim", "engine"])
+    def test_fault_is_classification_invisible(self, kind, fault, tiny_vae):
+        trace = _trace(N_OBJECTS, TRACE_LEN)
+        vae = tiny_vae if kind == "engine" else None
+        healthy = _replicated_box(kind, 4, vae=vae, replication=2)
+        hurt = _replicated_box(kind, 4, vae=vae, replication=2,
+                               fault_plan=self.KIND_PLANS[fault]())
+        for box in (healthy, hurt):
+            fill_and_demote(box, N_OBJECTS)
+        assert classify(healthy, trace) == classify(hurt, trace)
+        s = hurt.summary()
+        if fault in ("kill", "partition"):
+            assert s["dead_shards"] == [1]
+            assert s["failovers"] > 0
