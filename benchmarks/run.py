@@ -12,6 +12,7 @@ Paper artifact -> module map (DESIGN.md §7):
   Fig 8      bench_cost        Fig 12      bench_fidelity
   Table 1c   bench_decode      kernels     bench_kernels
   §Roofline  roofline_report   fault tol.  bench_resilience
+  serving    bench_runtime     (QoS/SLO load sweep)
 """
 
 from __future__ import annotations
@@ -27,7 +28,7 @@ MODULES = [
     "bench_trace", "bench_storage", "bench_decode", "bench_kernels",
     "bench_cost", "bench_cache_sweep", "bench_tuning", "bench_spillover",
     "bench_latency", "bench_fidelity", "bench_regen",
-    "bench_resilience", "roofline_report",
+    "bench_resilience", "bench_runtime", "roofline_report",
 ]
 
 
@@ -39,14 +40,17 @@ def trajectory() -> None:
     wins, pixel-tier bytes/object, the durable store's measured
     on-disk savings / recovery ms / compaction write amplification, and
     (``BENCH_resilience.json``) the replicated cluster's hedged-tail,
-    failover, and restart-recovery numbers — so later checkouts have a
-    trend to regress against."""
+    failover, and restart-recovery numbers, and
+    (``BENCH_runtime.json``) the serving runtime's per-class tails and
+    SLO attainment at three load factors with QoS on/off — so later
+    checkouts have a trend to regress against."""
     from benchmarks import (bench_decode, bench_kernels, bench_resilience,
-                            bench_storage)
+                            bench_runtime, bench_storage)
     bench_decode.trajectory().print()
     bench_kernels.trajectory().print()
     bench_storage.trajectory().print()
     bench_resilience.trajectory().print()
+    bench_runtime.trajectory(smoke=True).print()
 
 
 def main() -> None:

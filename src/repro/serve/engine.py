@@ -11,6 +11,15 @@ wall-clock feeding the tuner EWMAs), while ``core/cluster.py`` supplies
 classification, admission, promotion, and spillover decision now comes from
 the shared walk, so the engine can no longer drift from the simulator.
 
+Serving is no longer window-only: ``admit``/``dispatch`` expose the open
+microbatch directly, so the event-loop serving runtime
+(``repro.serve.runtime``) can feed the ``DecodeBatcher`` *continuously* —
+closing a batch when a size bucket fills or a queued deadline forces it —
+while ``serve_window`` remains as the fixed-group path (admit-all then
+dispatch) that the drain-mode conformance guarantee is defined against.
+``serve_stream`` replays a timestamped open-loop request stream through
+that runtime.
+
 Misses do not decode one-by-one: they accumulate in a ``DecodeBatcher``
 queue where duplicate in-flight object ids coalesce into a single decode
 (single-flight), then flush as batches padded up to a small set of
@@ -358,10 +367,11 @@ class ServingEngine:
         self.batcher = DecodeBatcher(vae, self.cfg.decode_buckets,
                                      pixel_format=self.cfg.pixel_format)
         self.stats = self.walk.counts           # shared hit/spill accounting
+        self._inflight: List[_Ticket] = []      # open microbatch (admit/dispatch)
 
     def prewarm_decode(self, latent_hwc: Tuple[int, int, int]) -> None:
         """Compile every decode bucket for the given latent shape up
-        front, so no serving window ever pays jit time."""
+        front, so no serving batch ever pays jit time."""
         self.batcher.prewarm(latent_hwc)
 
     # -- writes ---------------------------------------------------------------
@@ -463,8 +473,8 @@ class ServingEngine:
             if img is not None:
                 return _Ticket(oid, IMAGE_HIT, owner, img=img)
             # admitted to the image tier, but the pixel payload is still
-            # in-flight in this window's batch: join the pending decode
-            # (single-flight) and write back on flush.
+            # in-flight in the open microbatch: join the pending decode
+            # (single-flight) and write back on dispatch.
             blob = owner.latents.get(oid) or self.store.get(oid)
             if blob is None:
                 raise KeyError(f"object {oid} not in store")
@@ -516,28 +526,33 @@ class ServingEngine:
 
     def get_many(self, oids: Sequence[int]
                  ) -> List[Tuple[np.ndarray, str]]:
-        """Serve a window of requests with one batched decode flush;
+        """Serve one group of requests with one batched decode flush;
         returns ``(pixels, hit_class)`` pairs in request order."""
         return [(t.img, t.outcome) for t in self.serve_window(oids)]
 
-    def serve_window(self, oids: Sequence[int]) -> List[_Ticket]:
-        """Serve a window of requests with one batched decode flush.
-
-        Lookups/routing run in request order (cache state evolves exactly
-        as with sequential ``get`` calls); all resulting misses decode in
-        bucketed microbatches, then results write back to their hash
-        owners (cache pinning) in request order.  Tickets carry the
-        measured per-request latency components for ``GetResult``.
+    def admit(self, oid: int) -> _Ticket:
+        """Admit one request into the currently *open* microbatch without
+        flushing it: classify via the shared walk, materialize payloads
+        (durable fetch / regeneration), and enqueue the decode.  This is
+        the continuous feed path of the serving runtime — the scheduler
+        decides when the batch closes (size bucket filled or deadline
+        slack exhausted) and then calls :meth:`dispatch`.  The returned
+        ticket is live: its ``img``/``decode_ms`` fill in at dispatch.
         """
         try:
-            tickets = [self._lookup(int(oid)) for oid in oids]
+            ticket = self._lookup(int(oid))
         except Exception:
-            # a window aborted mid-admission (e.g. unknown oid) must not
-            # leak queued decodes or queue-depth into the next window
-            self.batcher.clear()
-            for n in self.nodes:
-                n.queue_depth = 0
+            self._abort_open_batch()
             raise
+        self._inflight.append(ticket)
+        return ticket
+
+    def dispatch(self) -> List[_Ticket]:
+        """Close the open microbatch: flush the queued decodes, write
+        decoded pixels back to their hash owners (cache pinning) in
+        admission order, then run the bounded end-of-batch durable
+        maintenance.  Returns the admitted tickets in admission order."""
+        tickets, self._inflight = self._inflight, []
         decoded = self._flush()
         touched = {}
         for t in tickets:
@@ -559,12 +574,45 @@ class ServingEngine:
         self._durable_maintenance()
         return tickets
 
+    def _abort_open_batch(self) -> None:
+        """A group aborted mid-admission (e.g. unknown oid) must not leak
+        queued decodes, queue-depth, or half-admitted tickets into the
+        next group."""
+        self.batcher.clear()
+        for n in self.nodes:
+            n.queue_depth = 0
+        self._inflight = []
+
+    def serve_window(self, oids: Sequence[int]) -> List[_Ticket]:
+        """Serve one fixed group of requests with a single batched decode
+        flush — ``admit`` every id in request order (cache state evolves
+        exactly as with sequential ``get`` calls), then ``dispatch``.
+        Tickets carry the measured per-request latency components for
+        ``GetResult``.  The serving runtime's drain-mode conformance
+        guarantee is defined against this path.
+        """
+        for oid in oids:
+            self.admit(oid)
+        return self.dispatch()
+
+    def serve_stream(self, requests, runtime_cfg=None):
+        """Replay an open-loop request stream through the event-loop
+        serving runtime (simulated clock, per-tenant QoS, SLO-aware
+        admission), feeding this engine's batcher continuously via
+        :meth:`admit`/:meth:`dispatch`.  ``requests`` is a sequence of
+        :class:`repro.serve.runtime.Request` or a ``SyntheticTrace``;
+        returns a :class:`repro.serve.runtime.StreamReport`."""
+        from repro.serve.runtime import RuntimeConfig, ServingRuntime
+        if runtime_cfg is None:
+            runtime_cfg = RuntimeConfig.from_store(self.cfg)
+        return ServingRuntime.for_engine(self, runtime_cfg).run(requests)
+
     def _durable_maintenance(self) -> None:
-        """End-of-window durability work, threaded into the request loop:
+        """End-of-batch durability work, threaded into the request loop:
         flush write-behind appends (acknowledging them) and run at most
-        one online-compaction step — bounded work per window, so serving
-        latency never absorbs a stop-the-world sweep.  Both are no-ops on
-        the in-memory backend."""
+        one online-compaction step — bounded work per dispatched batch,
+        so serving latency never absorbs a stop-the-world sweep.  Both
+        are no-ops on the in-memory backend."""
         self.store.flush()
         self.store.maybe_compact()
 

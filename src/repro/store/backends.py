@@ -137,6 +137,16 @@ class EngineBackend:
                             "decode": t.decode_ms, "total": total}))
         return out
 
+    def serve_stream(self, requests, runtime_cfg=None):
+        """Open-loop stream replay through the event-loop serving runtime,
+        feeding the engine's ``DecodeBatcher`` continuously (the
+        ``admit``/``dispatch`` path — no fixed windows).  Returns a
+        :class:`repro.serve.runtime.StreamReport`."""
+        return self.engine.serve_stream(requests, runtime_cfg)
+
+    def pixels_resident(self, oid: int) -> bool:
+        return self.walk.pixels_resident(oid)
+
     def delete(self, oid: int) -> bool:
         found = self.engine.delete(oid)
         self._ack()
@@ -322,6 +332,19 @@ class SimBackend:
         self.store.flush()
         self.store.maybe_compact()
         return out
+
+    def serve_stream(self, requests, runtime_cfg=None):
+        """Open-loop stream replay through the event-loop serving runtime:
+        the scheduler owns the timeline (queue delay, deadlines, QoS) and
+        calls ``get_many`` once per dispatched microbatch for
+        classification.  Returns a :class:`repro.serve.runtime.StreamReport`."""
+        from repro.serve.runtime import RuntimeConfig, ServingRuntime
+        if runtime_cfg is None:
+            runtime_cfg = RuntimeConfig.from_store(self.cfg)
+        return ServingRuntime.for_target(self, runtime_cfg).run(requests)
+
+    def pixels_resident(self, oid: int) -> bool:
+        return self.walk.pixels_resident(oid)
 
     def delete(self, oid: int) -> bool:
         found = self.walk.delete(oid)

@@ -145,6 +145,36 @@ class LatentBox:
         serves at wall-clock and ignores it."""
         return self._backend.get_many(oids, timestamps_ms=timestamps_ms)
 
+    def serve_stream(self, requests, runtime_cfg=None):
+        """Replay an open-loop request stream (timestamped arrivals)
+        through the event-loop serving runtime: continuous microbatching,
+        per-tenant QoS, SLO classes, and admission control.
+
+        ``requests`` is a :class:`~repro.trace.synth.SyntheticTrace` or a
+        sequence of :class:`repro.serve.runtime.Request`; ``runtime_cfg``
+        a :class:`repro.serve.runtime.RuntimeConfig` (defaults derive the
+        service model from this box's ``StoreConfig``).  Returns a
+        :class:`repro.serve.runtime.StreamReport` with per-request
+        outcomes in arrival order, the columnar :class:`RequestLog`
+        (queue delay, deadlines, tenants), and scheduler counters.
+        """
+        stream = getattr(self._backend, "serve_stream", None)
+        if stream is not None:          # backend owns the continuous feed
+            return stream(requests, runtime_cfg=runtime_cfg)
+        from repro.serve.runtime import RuntimeConfig, ServingRuntime
+        if runtime_cfg is None:
+            cfg = getattr(self._backend, "cfg", None)
+            runtime_cfg = (RuntimeConfig.from_store(cfg)
+                           if cfg is not None else RuntimeConfig())
+        return ServingRuntime.for_target(self._backend, runtime_cfg).run(
+            requests)
+
+    def pixels_resident(self, oid: int) -> bool:
+        """Pure peek: is ``oid`` currently pixel-cache resident at its
+        hash owner?  (No stats impact — used by degrade-mode admission.)"""
+        probe = getattr(self._backend, "pixels_resident", None)
+        return bool(probe(int(oid))) if probe is not None else False
+
     # -- lifecycle -----------------------------------------------------------
     def delete(self, oid: int) -> bool:
         """Remove the object from every tier (pixels, latents, durable,

@@ -1161,6 +1161,13 @@ class ShardedLatentBox:
     def stat(self, oid: int) -> Optional[ObjectStat]:
         return self._acting_backend(self.shard_of(oid)).stat(int(oid))
 
+    def pixels_resident(self, oid: int) -> bool:
+        """Pure peek: pixel-cache residency on the owning shard's acting
+        backend (degrade-mode admission support)."""
+        backend = self._acting_backend(self.shard_of(oid))
+        probe = getattr(backend, "pixels_resident", None)
+        return bool(probe(int(oid))) if probe is not None else False
+
     def flush(self) -> None:
         for sid in self.shard_ids:
             b = self._acting_or_none(sid)

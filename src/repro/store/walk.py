@@ -157,6 +157,14 @@ class TierWalk:
             tier.evict(oid)
         return True
 
+    def pixels_resident(self, oid: int) -> bool:
+        """Pure peek (no stats, no state evolution): is ``oid`` currently
+        resident in its hash owner's pixel tier?  The admission
+        controller's ``degrade`` policy uses this to answer from the pixel
+        cache without spending a decode slot."""
+        owner = self._idx[self.router.ring.owner(oid)]
+        return self.caches[owner].cache.contains(oid) == "image"
+
     def pixel_bytes_of(self, oid: int) -> float:
         """Bytes the pixel tier charges for ``oid`` (0.0 when not
         pixel-resident on any node).  The engine corrects these charges to

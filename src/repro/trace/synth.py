@@ -51,13 +51,23 @@ class TraceConfig:
 
 @dataclasses.dataclass
 class SyntheticTrace:
-    """``timestamps`` seconds from trace start (sorted), parallel arrays."""
+    """``timestamps`` seconds from trace start (sorted), parallel arrays.
+
+    Timestamps are *open-loop* arrival times: every scenario places its
+    requests by an arrival process (Poisson given the request count for
+    the stochastic scenarios, evenly spaced for the deterministic scan),
+    independent of how fast the store serves them — which is what lets
+    the serving runtime measure queueing delay at all.  ``slo_class``
+    (when present) carries a per-object SLO class: 0 = ``interactive``,
+    1 = ``batch``; the ``multi_tenant`` scenario fills it per tenant.
+    """
 
     timestamps: np.ndarray          # float64 [R]
     object_ids: np.ndarray          # int64   [R]
     birth_time: np.ndarray          # float64 [N] per-object birth
     model_ids: np.ndarray           # int32   [N] per-object generator model
     config: TraceConfig
+    slo_class: Optional[np.ndarray] = None   # int8 [N], 0=interactive 1=batch
 
     @property
     def n_requests(self) -> int:
@@ -68,23 +78,29 @@ class SyntheticTrace:
         return len(self.birth_time)
 
     def save(self, path: str) -> None:
+        extra = {}
+        if self.slo_class is not None:
+            extra["slo_class"] = self.slo_class
         np.savez_compressed(
             path, timestamps=self.timestamps, object_ids=self.object_ids,
             birth_time=self.birth_time, model_ids=self.model_ids,
-            config=np.array([repr(dataclasses.asdict(self.config))]))
+            config=np.array([repr(dataclasses.asdict(self.config))]), **extra)
 
     @staticmethod
     def load(path: str) -> "SyntheticTrace":
         z = np.load(path, allow_pickle=False)
         cfg = TraceConfig(**eval(str(z["config"][0])))  # trusted local artifact
         return SyntheticTrace(z["timestamps"], z["object_ids"],
-                              z["birth_time"], z["model_ids"], cfg)
+                              z["birth_time"], z["model_ids"], cfg,
+                              slo_class=(z["slo_class"]
+                                         if "slo_class" in z.files else None))
 
     # -- derived views --------------------------------------------------------
     def window(self, t0_s: float, t1_s: float) -> "SyntheticTrace":
         lo, hi = np.searchsorted(self.timestamps, [t0_s, t1_s])
         return SyntheticTrace(self.timestamps[lo:hi], self.object_ids[lo:hi],
-                              self.birth_time, self.model_ids, self.config)
+                              self.birth_time, self.model_ids, self.config,
+                              slo_class=self.slo_class)
 
     def downsample_objects(self, n_keep: int, seed: int = 0) -> "SyntheticTrace":
         """Paper §6.1: sample object IDs, keep ALL accesses to the sample."""
@@ -93,7 +109,8 @@ class SyntheticTrace:
         keep = rng.choice(uniq, size=min(n_keep, len(uniq)), replace=False)
         mask = np.isin(self.object_ids, keep)
         return SyntheticTrace(self.timestamps[mask], self.object_ids[mask],
-                              self.birth_time, self.model_ids, self.config)
+                              self.birth_time, self.model_ids, self.config,
+                              slo_class=self.slo_class)
 
     def characterize(self) -> Dict[str, float]:
         """Observed O1/O4 statistics (compare against the paper's numbers)."""
@@ -163,7 +180,8 @@ def _sample_lomax_trunc(a0_s: float, beta: float, max_age_s: np.ndarray,
 def _finalize(timestamps: np.ndarray, object_ids: np.ndarray,
               n_objects: int, model_ids: Optional[np.ndarray],
               birth_time: Optional[np.ndarray],
-              cfg: TraceConfig) -> SyntheticTrace:
+              cfg: TraceConfig,
+              slo_class: Optional[np.ndarray] = None) -> SyntheticTrace:
     """Sort a (timestamps, ids) pair into a SyntheticTrace, filling the
     per-object arrays scenarios don't model (births at t=0, one model)."""
     order = np.argsort(timestamps, kind="stable")
@@ -173,7 +191,7 @@ def _finalize(timestamps: np.ndarray, object_ids: np.ndarray,
         model_ids = np.zeros(n_objects, dtype=np.int32)
     return SyntheticTrace(np.asarray(timestamps, np.float64)[order],
                           np.asarray(object_ids, np.int64)[order],
-                          birth_time, model_ids, cfg)
+                          birth_time, model_ids, cfg, slo_class=slo_class)
 
 
 def _zipf_choice(n_objects: int, n_requests: int, alpha: float,
@@ -270,12 +288,18 @@ def _scenario_zipf_drift(cfg: TraceConfig, rng: np.random.Generator,
 
 
 def _scenario_scan(cfg: TraceConfig, rng: np.random.Generator,
-                   passes: Optional[int] = None, **_kw) -> SyntheticTrace:
+                   passes: Optional[int] = None,
+                   poisson: bool = False, **_kw) -> SyntheticTrace:
     """Sequential sweep over the whole object space (batch re-encode /
     integrity audit): the cache-adversarial workload — every request is
     maximally far from its previous access.  Default: exactly
     ``n_requests`` requests (the last pass may be partial); with an
-    explicit ``passes`` the trace is exactly ``passes * n_objects``."""
+    explicit ``passes`` the trace is exactly ``passes * n_objects``.
+
+    Arrivals are evenly spaced (a scan is a paced batch job, and the
+    default trace must stay seed-independent); ``poisson=True`` swaps in
+    Poisson arrival times at the same mean rate while keeping the
+    sequential id order, for open-loop runtime studies."""
     if passes is None:
         n_total = cfg.n_requests
     else:
@@ -283,7 +307,11 @@ def _scenario_scan(cfg: TraceConfig, rng: np.random.Generator,
     n_passes = -(-n_total // cfg.n_objects)          # ceil
     ids = np.tile(np.arange(cfg.n_objects, dtype=np.int64),
                   n_passes)[:n_total]
-    ts = np.linspace(0.0, cfg.span_days * DAY_S, len(ids), endpoint=False)
+    if poisson:
+        # order statistics of U(0, span) = Poisson arrivals given the count
+        ts = np.sort(rng.random(len(ids))) * cfg.span_days * DAY_S
+    else:
+        ts = np.linspace(0.0, cfg.span_days * DAY_S, len(ids), endpoint=False)
     return _finalize(ts, ids, cfg.n_objects, None, None, cfg)
 
 
@@ -291,15 +319,26 @@ def _scenario_multi_tenant(cfg: TraceConfig, rng: np.random.Generator,
                            n_tenants: int = 4,
                            tenant_alphas: Optional[Sequence[float]] = None,
                            tenant_share_alpha: float = 1.0,
+                           tenant_slos: Optional[Sequence[str]] = None,
                            **_kw) -> SyntheticTrace:
     """T tenants with disjoint object pools: tenant traffic shares follow a
     Zipf over tenants, and each tenant has its own per-pool skew (some
     tenants serve one viral asset, others a flat archive).  ``model_ids``
-    carries the owning tenant of every object."""
+    carries the owning tenant of every object, and ``slo_class`` the
+    tenant's SLO class (``tenant_slos``, one of ``interactive``/``batch``
+    per tenant; default alternates, starting interactive) — together the
+    keys the serving runtime's QoS and admission layers act on."""
     n_tenants = max(1, min(n_tenants, cfg.n_objects))
     if tenant_alphas is None:
         # spread skews from heavy (first tenant) to near-uniform (last)
         tenant_alphas = np.linspace(cfg.zipf_alpha + 0.3, 0.2, n_tenants)
+    if tenant_slos is None:
+        tenant_slos = ["interactive" if t % 2 == 0 else "batch"
+                       for t in range(n_tenants)]
+    if len(tenant_slos) != n_tenants or \
+            any(s not in ("interactive", "batch") for s in tenant_slos):
+        raise ValueError("tenant_slos needs one 'interactive'/'batch' entry "
+                         f"per tenant ({n_tenants}): {tenant_slos!r}")
     pools = np.array_split(np.arange(cfg.n_objects, dtype=np.int64),
                            n_tenants)
     shares = np.arange(1, n_tenants + 1, dtype=np.float64) \
@@ -315,9 +354,12 @@ def _scenario_multi_tenant(cfg: TraceConfig, rng: np.random.Generator,
         ids[mask] = pool[local]
     ts = rng.random(cfg.n_requests) * cfg.span_days * DAY_S
     model_ids = np.empty(cfg.n_objects, dtype=np.int32)
+    slo_class = np.empty(cfg.n_objects, dtype=np.int8)
     for t, pool in enumerate(pools):
         model_ids[pool] = t
-    return _finalize(ts, ids, cfg.n_objects, model_ids, None, cfg)
+        slo_class[pool] = 0 if tenant_slos[t] == "interactive" else 1
+    return _finalize(ts, ids, cfg.n_objects, model_ids, None, cfg,
+                     slo_class=slo_class)
 
 
 #: Named workloads of the scenario suite.  Every generator takes
@@ -343,18 +385,25 @@ def make_trace(scenario: str = "companyx",
                n_requests: Optional[int] = None,
                span_days: Optional[float] = None,
                seed: Optional[int] = None,
+               load_factor: float = 1.0,
                **knobs) -> SyntheticTrace:
     """Generate a named workload: ``make_trace("flash_crowd", n_objects=...)``.
 
     The common size knobs override ``config`` fields; scenario-specific
     knobs (``amplitude``, ``spike_frac``, ``n_phases``, ``passes``,
-    ``n_tenants``, ...) pass through to the generator.  Consumed by
-    ``core/replay.py``, ``core/cluster.py``, ``benchmarks/bench_trace.py``
-    and the shard-conformance harness.
+    ``n_tenants``, ``tenant_slos``, ...) pass through to the generator.
+    ``load_factor`` scales the open-loop arrival *rate* of any scenario:
+    timestamps divide by it (2.0 = the same requests arrive twice as
+    fast), which is how the runtime benchmarks sweep a scenario from
+    underload into overload without changing its access pattern.
+    Consumed by ``core/replay.py``, ``core/cluster.py``,
+    ``benchmarks/bench_trace.py`` and the conformance harnesses.
     """
     if scenario not in SCENARIOS:
         raise KeyError(f"unknown scenario {scenario!r}; "
                        f"pick one of {list_scenarios()}")
+    if load_factor <= 0:
+        raise ValueError(f"load_factor must be > 0: {load_factor!r}")
     cfg = config or TraceConfig()
     overrides = {k: v for k, v in (("n_objects", n_objects),
                                    ("n_requests", n_requests),
@@ -363,7 +412,11 @@ def make_trace(scenario: str = "companyx",
     if overrides:
         cfg = dataclasses.replace(cfg, **overrides)
     rng = np.random.default_rng(cfg.seed)
-    return SCENARIOS[scenario](cfg, rng, **knobs)
+    trace = SCENARIOS[scenario](cfg, rng, **knobs)
+    if load_factor != 1.0:
+        trace = dataclasses.replace(
+            trace, timestamps=trace.timestamps / float(load_factor))
+    return trace
 
 
 def generate_trace(config: Optional[TraceConfig] = None) -> SyntheticTrace:

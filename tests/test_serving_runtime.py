@@ -1,0 +1,504 @@
+"""Tests of the concurrent serving runtime (``repro.serve.runtime``).
+
+Three layers:
+
+* unit — event loop determinism, token buckets, start-time-fair queueing,
+  deadline-forced dispatch, admission decisions;
+* drain-mode conformance — with QoS/admission off and a drain schedule,
+  ``serve_stream`` must classify every request identically to the legacy
+  ``serve_window`` path on every scenario x {sim, engine}, engine pixels
+  bit-exact (the runtime extension of ``test_shard_conformance.py``);
+* QoS/SLO behavior — flash-crowd overload sheds only batch-class work
+  while interactive p99 stays within its SLO, weighted-fair dequeue
+  protects a trickle tenant from a flooding one.
+"""
+
+import math
+
+import numpy as np
+import pytest
+
+from conftest import classify, conformance_config, fill_and_demote, make_box
+from repro.core.metrics import RequestLog
+from repro.serve.runtime import (AdmissionConfig, EventLoop, FairQueue,
+                                 Request, RuntimeConfig, ServingRuntime,
+                                 SLO_BATCH, SLO_INTERACTIVE, TokenBucket,
+                                 requests_from_trace)
+from repro.store import LatentBox
+from repro.trace.synth import list_scenarios, make_trace
+
+N_OBJECTS = 24
+N_REQUESTS = 240
+TOTAL_NODES = 8
+
+
+def scenario_ids(name: str):
+    tr = make_trace(name, n_objects=N_OBJECTS, n_requests=N_REQUESTS,
+                    span_days=2.0, seed=7)
+    return tr.object_ids, tr.timestamps * 1e3
+
+
+def drain_requests(ids):
+    return [Request(oid=int(o), arrival_ms=0.0, seq=k)
+            for k, o in enumerate(ids)]
+
+
+# ---------------------------------------------------------------------------
+# unit: event loop
+# ---------------------------------------------------------------------------
+
+class TestEventLoop:
+    def test_fires_in_time_then_insertion_order(self):
+        loop, out = EventLoop(), []
+        loop.at(5.0, lambda: out.append("b"))
+        loop.at(1.0, lambda: out.append("a"))
+        loop.at(5.0, lambda: out.append("c"))      # same instant: FIFO
+        assert loop.run() == 5.0
+        assert out == ["a", "b", "c"]
+
+    def test_past_events_clamp_to_now(self):
+        loop, out = EventLoop(), []
+
+        def schedule_stale():
+            loop.at(0.0, lambda: out.append(loop.now))   # in the past
+
+        loop.at(10.0, schedule_stale)
+        loop.run()
+        assert out == [10.0]                             # never rewinds
+
+    def test_callbacks_can_chain(self):
+        loop, out = EventLoop(), []
+        loop.at(1.0, lambda: loop.after(2.0, lambda: out.append(loop.now)))
+        assert loop.run() == 3.0 and out == [3.0]
+
+
+# ---------------------------------------------------------------------------
+# unit: token bucket + fair queue
+# ---------------------------------------------------------------------------
+
+class TestTokenBucket:
+    def test_burst_then_rate_limited(self):
+        tb = TokenBucket(rate_per_s=10.0, burst=2.0)
+        assert tb.try_take(0.0) and tb.try_take(0.0)
+        assert not tb.try_take(0.0)                 # burst exhausted
+        assert not tb.try_take(50.0)                # 0.5 tokens refilled
+        assert tb.try_take(100.0)                   # 1 token at +100ms
+
+    def test_refill_caps_at_burst(self):
+        tb = TokenBucket(rate_per_s=1000.0, burst=3.0)
+        for _ in range(3):
+            assert tb.try_take(0.0)
+        assert tb.available(10_000.0) == 3.0
+
+    def test_rejects_nonpositive_params(self):
+        with pytest.raises(ValueError):
+            TokenBucket(0.0, 1.0)
+        with pytest.raises(ValueError):
+            TokenBucket(1.0, 0.0)
+
+
+def _req(seq, tenant=0, slo=SLO_INTERACTIVE, deadline=None):
+    return Request(oid=seq, arrival_ms=0.0, seq=seq, tenant=tenant, slo=slo,
+                   deadline_ms=deadline)
+
+
+class TestFairQueue:
+    def test_qos_off_is_global_fifo(self):
+        q = FairQueue(qos=False)
+        for k in range(6):
+            q.push(_req(k, tenant=k % 3, slo=(SLO_BATCH, SLO_INTERACTIVE)[k % 2]),
+                   now_ms=0.0)
+        assert [q.pop().seq for _ in range(6)] == list(range(6))
+
+    def test_sfq_alternates_between_backlogged_tenants(self):
+        """10:1 push imbalance, equal weights: dequeue alternates 1:1."""
+        q = FairQueue(qos=True)
+        seq = 0
+        for _ in range(10):
+            q.push(_req(seq, tenant=0), 0.0)
+            seq += 1
+        q.push(_req(100, tenant=1), 0.0)
+        q.push(_req(101, tenant=1), 0.0)
+        order = [q.pop().tenant for _ in range(4)]
+        assert order == [0, 1, 0, 1]
+
+    def test_weights_bias_dequeue_share(self):
+        q = FairQueue(qos=True, weights={0: 3.0, 1: 1.0})
+        for k in range(12):
+            q.push(_req(k, tenant=0), 0.0)
+            q.push(_req(100 + k, tenant=1), 0.0)
+        first8 = [q.pop().tenant for _ in range(8)]
+        assert first8.count(0) == 6 and first8.count(1) == 2
+
+    def test_interactive_band_jumps_batch(self):
+        q = FairQueue(qos=True)
+        q.push(_req(0, slo=SLO_BATCH), 0.0)
+        q.push(_req(1, slo=SLO_BATCH), 0.0)
+        q.push(_req(2, slo=SLO_INTERACTIVE), 0.0)
+        assert q.pop().seq == 2                     # queue-jump
+        assert q.n_queued(SLO_BATCH) == 2
+
+    def test_over_rate_requests_demote_within_band(self):
+        q = FairQueue(qos=True, rate_rps=10.0, burst=1.0)
+        q.push(_req(0, tenant=0), 0.0)              # takes the burst token
+        q.push(_req(1, tenant=0), 0.0)              # over-rate
+        q.push(_req(2, tenant=1), 0.0)              # own bucket: conforming
+        assert q.n_over_rate == 1
+        assert [q.pop().seq for _ in range(3)] == [0, 2, 1]
+
+    def test_earliest_deadline_tracks_queued_only(self):
+        q = FairQueue(qos=True)
+        q.push(_req(0, deadline=500.0), 0.0)
+        q.push(_req(1, deadline=200.0), 0.0)
+        assert q.earliest_deadline() == 200.0
+        popped = {q.pop().seq, q.pop().seq}
+        assert popped == {0, 1}
+        assert q.earliest_deadline() == math.inf
+
+
+# ---------------------------------------------------------------------------
+# metrics: RequestLog extensions
+# ---------------------------------------------------------------------------
+
+class TestRequestLogSLO:
+    def test_legacy_add_signature_still_works(self):
+        log = RequestLog()
+        log.add(0.0, 12.0, "image_hit", 1.0, 2.0, 3.0, 4.0, False, False, 2)
+        s = log.summarize()
+        assert s["n"] == 1 and s["p50_ms"] == 12.0
+        assert "shed_frac" not in s
+
+    def test_shed_excluded_from_latency_percentiles(self):
+        log = RequestLog()
+        log.add(0.0, 100.0, "latent_hit", slo="interactive")
+        log.add(0.0, 0.0, "shed", slo="batch", deadline_met=False)
+        s = log.summarize()
+        assert s["p50_ms"] == 100.0                 # shed row masked out
+        assert s["shed_frac"] == 0.5
+
+    def test_slo_summary_per_class_and_tenant(self):
+        log = RequestLog()
+        log.add(0.0, 50.0, "image_hit", slo="interactive", tenant=0,
+                queue_delay_ms=5.0, deadline_met=True)
+        log.add(0.0, 900.0, "latent_hit", slo="batch", tenant=1,
+                queue_delay_ms=700.0, deadline_met=False)
+        log.add(0.0, 0.0, "shed", slo="batch", tenant=1, deadline_met=False)
+        s = log.slo_summary()
+        assert s["interactive.slo_attainment"] == 1.0
+        assert s["batch.slo_attainment"] == 0.0
+        assert s["batch.shed_frac"] == 0.5
+        assert s["tenant1.n"] == 2.0
+        assert s["interactive.queue_delay_p99_ms"] == 5.0
+
+
+# ---------------------------------------------------------------------------
+# scheduler behavior (sim backend, virtual clock)
+# ---------------------------------------------------------------------------
+
+def _sim_box(**kw):
+    box = LatentBox.simulated(conformance_config(TOTAL_NODES, **kw))
+    fill_and_demote(box, N_OBJECTS)
+    return box
+
+
+class TestSchedulerDispatch:
+    def test_deadline_forces_partial_batch(self):
+        """Two early requests + one far-future arrival: the bucket never
+        fills, so the earliest deadline must force a partial dispatch long
+        before the third request arrives."""
+        box = _sim_box()
+        reqs = [Request(oid=0, arrival_ms=0.0, seq=0),
+                Request(oid=1, arrival_ms=1.0, seq=1),
+                Request(oid=2, arrival_ms=60_000.0, seq=2)]
+        cfg = RuntimeConfig(qos=True, admission=AdmissionConfig(enabled=False))
+        rep = box.serve_stream(reqs, runtime_cfg=cfg)
+        assert rep.counters["forced_dispatches"] >= 1
+        arr = rep.log.arrays()
+        # the two early requests completed within their interactive budget,
+        # i.e. dispatched by deadline slack, not by the t=60s arrival
+        early = arr["arrival_ms"] < 1000.0
+        assert early.sum() == 2
+        assert bool(arr["deadline_met"][early].all())
+        assert (arr["arrival_ms"] + arr["latency_ms"])[early].max() < 1000.0
+
+    def test_full_bucket_dispatches_without_waiting(self):
+        box = _sim_box()
+        reqs = [Request(oid=k % N_OBJECTS, arrival_ms=0.0, seq=k)
+                for k in range(16)]
+        rep = box.serve_stream(
+            reqs, runtime_cfg=RuntimeConfig(
+                admission=AdmissionConfig(enabled=False)))
+        assert rep.counters["full_dispatches"] >= 1
+        assert rep.counters["served"] == 16
+
+    def test_stream_makespan_tracks_arrivals(self):
+        """Underload: the makespan is set by the last arrival, not by a
+        serialized closed-loop replay."""
+        box = _sim_box()
+        reqs = [Request(oid=k % N_OBJECTS, arrival_ms=400.0 * k, seq=k)
+                for k in range(40)]
+        rep = box.serve_stream(
+            reqs, runtime_cfg=RuntimeConfig(
+                admission=AdmissionConfig(enabled=False)))
+        assert rep.counters["served"] == 40
+        assert rep.makespan_ms < 400.0 * 40 + 10_000.0
+
+
+def _crowd_box():
+    """Overload fixture: promotion disabled so every request keeps paying
+    a decode (the plant saturates) and nothing is demoted (no 3.9 s regens
+    that would block the server regardless of scheduling)."""
+    box = LatentBox.simulated(
+        conformance_config(TOTAL_NODES, promote_threshold=10**6))
+    fill_and_demote(box, N_OBJECTS, demote=())
+    return box
+
+
+class TestAdmissionAndQoS:
+    def _crowd(self, spacing_ms=2.0, n=600, interactive_every=8):
+        """Flash-crowd-style overload stream: arrivals ~5x above decode
+        capacity, 1-in-``interactive_every`` requests interactive."""
+        ids, _ = scenario_ids("flash_crowd")
+        reqs = []
+        for k in range(n):
+            slo = SLO_INTERACTIVE if k % interactive_every == 0 else SLO_BATCH
+            reqs.append(Request(oid=int(ids[k % len(ids)]),
+                                arrival_ms=spacing_ms * k, seq=k,
+                                tenant=k % 3, slo=slo))
+        return reqs
+
+    def test_flash_crowd_shedding_confines_damage_to_batch(self):
+        box = _crowd_box()
+        cfg = RuntimeConfig(qos=True, admission=AdmissionConfig(
+            enabled=True, policy="shed"))
+        reqs = self._crowd()
+        rep = box.serve_stream(reqs, runtime_cfg=cfg)
+        s = rep.summary()
+        assert rep.counters["shed"] > 0
+        # shed/degraded outcomes only ever land on batch-class requests
+        for r in reqs:
+            outcome = rep.outcomes[r.seq][0]
+            if outcome in ("shed", "degraded"):
+                assert r.slo == SLO_BATCH
+        # interactive tail holds its SLO under overload
+        assert s["interactive.p99_ms"] <= cfg.interactive_deadline_ms
+        assert s["interactive.slo_attainment"] >= 0.95
+
+    def test_runtime_off_lets_interactive_tail_collapse(self):
+        """A-B of the whole stack under the same overload: QoS + shed
+        admission vs plain FIFO with admission disabled."""
+        on = _crowd_box().serve_stream(
+            self._crowd(), runtime_cfg=RuntimeConfig(
+                qos=True,
+                admission=AdmissionConfig(enabled=True, policy="shed")))
+        off = _crowd_box().serve_stream(
+            self._crowd(), runtime_cfg=RuntimeConfig(
+                qos=False, admission=AdmissionConfig(enabled=False)))
+        assert off.counters["shed"] == 0
+        s_on, s_off = on.summary(), off.summary()
+        assert s_on["interactive.slo_attainment"] >= 0.95
+        assert s_off["interactive.slo_attainment"] < 0.5
+        assert s_off["interactive.p99_ms"] > 5 * s_on["interactive.p99_ms"]
+
+    def test_shedding_cuts_the_tail_even_under_fifo(self):
+        """Admission's direct effect, isolated from QoS queue-jumping:
+        with a FIFO queue, shedding batch work still halves the backlog
+        every class waits in."""
+        shed = _crowd_box().serve_stream(
+            self._crowd(), runtime_cfg=RuntimeConfig(
+                qos=False,
+                admission=AdmissionConfig(enabled=True, policy="shed")))
+        noshed = _crowd_box().serve_stream(
+            self._crowd(), runtime_cfg=RuntimeConfig(
+                qos=False, admission=AdmissionConfig(enabled=False)))
+        assert shed.counters["shed"] > 0
+        assert shed.summary()["interactive.p99_ms"] < \
+            noshed.summary()["interactive.p99_ms"]
+
+    def test_degrade_serves_stale_pixels_from_cache(self):
+        """Under overload, batch requests for pixel-resident objects
+        degrade (immediate stale answer, deadline met) instead of
+        shedding."""
+        from repro.core.regen_tier import Recipe
+        box = LatentBox.simulated(
+            conformance_config(TOTAL_NODES, promote_threshold=10**6))
+        for oid in range(N_OBJECTS):
+            # the batch-class half of the id space is pixel-resident
+            box.put(oid, recipe=Recipe(seed=1000 + oid, height=16, width=16),
+                    prewarm=oid < 12)
+        assert box.pixels_resident(0) and not box.pixels_resident(12)
+        # interactive flood on never-promoted ids saturates the plant;
+        # batch requests target the prewarmed half
+        reqs = []
+        for k in range(600):
+            if k % 2 == 0:
+                reqs.append(Request(oid=12 + (k // 2) % 12,
+                                    arrival_ms=2.0 * k, seq=k,
+                                    slo=SLO_INTERACTIVE))
+            else:
+                reqs.append(Request(oid=(k // 2) % 12, arrival_ms=2.0 * k,
+                                    seq=k, slo=SLO_BATCH))
+        rep = box.serve_stream(reqs, runtime_cfg=RuntimeConfig(
+            qos=True,
+            admission=AdmissionConfig(enabled=True, policy="degrade")))
+        assert rep.counters["degraded"] > 0
+        assert rep.counters["shed"] == 0        # every candidate resident
+        arr = rep.log.arrays()
+        degraded = arr["outcome"] == 5
+        assert bool(arr["deadline_met"][degraded].all())
+
+    def test_defer_parks_batch_work_but_loses_nothing(self):
+        box = _crowd_box()
+        rep = box.serve_stream(
+            self._crowd(), runtime_cfg=RuntimeConfig(
+                qos=True,
+                admission=AdmissionConfig(enabled=True, policy="defer")))
+        assert rep.counters["deferred"] > 0
+        assert rep.counters["shed"] == 0
+        # every request eventually served with a real hit class
+        assert rep.counters["served"] == 600
+        assert all(o[0] not in ("shed", "degraded", "") for o in rep.outcomes)
+
+    def test_fair_queue_protects_trickle_tenant(self):
+        """Tenant 0 floods, tenant 1 trickles: with QoS the trickle
+        tenant's p99 must improve vs the FIFO baseline."""
+        def stream():
+            reqs, seq = [], 0
+            for k in range(400):                # flood: every 2ms
+                reqs.append(Request(oid=k % N_OBJECTS, arrival_ms=2.0 * k,
+                                    seq=seq, tenant=0))
+                seq += 1
+            for k in range(20):                 # trickle: every 40ms
+                reqs.append(Request(oid=(k * 7) % N_OBJECTS,
+                                    arrival_ms=40.0 * k, seq=seq, tenant=1))
+                seq += 1
+            return reqs
+
+        adm = AdmissionConfig(enabled=False)
+        rep_qos = _sim_box().serve_stream(
+            stream(), runtime_cfg=RuntimeConfig(qos=True, admission=adm))
+        rep_fifo = _sim_box().serve_stream(
+            stream(), runtime_cfg=RuntimeConfig(qos=False, admission=adm))
+        p99_qos = rep_qos.summary()["tenant1.p99_ms"]
+        p99_fifo = rep_fifo.summary()["tenant1.p99_ms"]
+        assert p99_qos < p99_fifo
+
+    def test_requests_from_trace_carries_tenants_and_slos(self):
+        tr = make_trace("multi_tenant", n_objects=N_OBJECTS,
+                        n_requests=N_REQUESTS, span_days=2.0, seed=7)
+        reqs = requests_from_trace(tr)
+        assert {r.tenant for r in reqs} == set(
+            int(t) for t in np.unique(tr.model_ids))
+        for r in reqs:
+            want = SLO_BATCH if tr.slo_class[r.oid] else SLO_INTERACTIVE
+            assert r.slo == want
+            assert r.tenant == int(tr.model_ids[r.oid])
+
+
+# ---------------------------------------------------------------------------
+# drain-mode conformance: serve_stream == serve_window, all scenarios
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("scenario", list_scenarios())
+class TestDrainConformanceSim:
+    def test_stream_classifies_like_window(self, scenario):
+        ids, _ = scenario_ids(scenario)
+        legacy_box = make_box("sim", 1, TOTAL_NODES)
+        fill_and_demote(legacy_box, N_OBJECTS)
+        legacy = classify(legacy_box, ids, window=8)
+
+        stream_box = make_box("sim", 1, TOTAL_NODES)
+        fill_and_demote(stream_box, N_OBJECTS)
+        rep = stream_box.serve_stream(drain_requests(ids),
+                                      runtime_cfg=RuntimeConfig.conformance())
+        assert rep.outcomes == legacy
+        assert rep.counters["shed"] == 0 and rep.counters["degraded"] == 0
+
+
+def _engine_legacy(ids, vae):
+    """Legacy window path on the engine: signature + per-request pixels."""
+    box = make_box("engine", 1, TOTAL_NODES, vae=vae)
+    fill_and_demote(box, N_OBJECTS)
+    sig, pixels = [], []
+    oids = [int(i) for i in ids]
+    for s in range(0, len(oids), 8):
+        for r in box.get_many(oids[s:s + 8]):
+            sig.append((r.hit_class, r.node))
+            pixels.append(r.payload)
+    return sig, pixels
+
+
+def _engine_stream(ids, vae):
+    box = make_box("engine", 1, TOTAL_NODES, vae=vae)
+    fill_and_demote(box, N_OBJECTS)
+    rep = box.serve_stream(
+        drain_requests(ids),
+        runtime_cfg=RuntimeConfig.conformance(keep_payloads=True))
+    return rep
+
+
+class TestDrainConformanceEngineSmoke:
+    """Push-CI engine cell: one scenario, classification + bit-exact pixels."""
+
+    def test_stream_matches_window_bit_exact(self, tiny_vae):
+        ids, _ = scenario_ids("flash_crowd")
+        legacy_sig, legacy_px = _engine_legacy(ids, tiny_vae)
+        rep = _engine_stream(ids, tiny_vae)
+        assert rep.outcomes == legacy_sig
+        assert len(rep.payloads) == len(ids)
+        for k, px in enumerate(legacy_px):
+            np.testing.assert_array_equal(rep.payloads[k], px)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("scenario", list_scenarios())
+class TestDrainConformanceEngineFull:
+    """Scheduled-CI matrix: every scenario on the engine, pixels bit-exact."""
+
+    def test_stream_matches_window_bit_exact(self, scenario, tiny_vae):
+        ids, _ = scenario_ids(scenario)
+        legacy_sig, legacy_px = _engine_legacy(ids, tiny_vae)
+        rep = _engine_stream(ids, tiny_vae)
+        assert rep.outcomes == legacy_sig
+        for k, px in enumerate(legacy_px):
+            np.testing.assert_array_equal(rep.payloads[k], px)
+
+
+# ---------------------------------------------------------------------------
+# facade / sharded surface
+# ---------------------------------------------------------------------------
+
+class TestStreamSurface:
+    def test_sharded_drain_conformance(self):
+        ids, _ = scenario_ids("multi_tenant")
+        ref_box = make_box("sim", 1, TOTAL_NODES)
+        fill_and_demote(ref_box, N_OBJECTS)
+        ref = classify(ref_box, ids, window=8)
+
+        sharded = make_box("sim", 4, TOTAL_NODES)
+        fill_and_demote(sharded, N_OBJECTS)
+        rep = sharded.serve_stream(drain_requests(ids),
+                                   runtime_cfg=RuntimeConfig.conformance())
+        assert rep.outcomes == ref
+
+    def test_serve_stream_accepts_a_trace(self):
+        box = _sim_box()
+        tr = make_trace("multi_tenant", n_objects=N_OBJECTS,
+                        n_requests=80, span_days=2.0, seed=7,
+                        load_factor=1e6)       # compress 2 days into ~0.2s
+        rep = box.serve_stream(tr)
+        assert len(rep.outcomes) == 80
+        assert rep.counters["served"] + rep.counters["shed"] \
+            + rep.counters["degraded"] == 80
+
+    def test_engine_paced_stream_serves_real_pixels(self, tiny_vae):
+        box = make_box("engine", 1, TOTAL_NODES, vae=tiny_vae)
+        fill_and_demote(box, N_OBJECTS)
+        reqs = [Request(oid=k % N_OBJECTS, arrival_ms=30.0 * k, seq=k)
+                for k in range(40)]
+        rep = box.serve_stream(
+            reqs, runtime_cfg=RuntimeConfig(
+                keep_payloads=True,
+                admission=AdmissionConfig(enabled=False)))
+        assert rep.counters["served"] == 40
+        assert all(rep.payloads[k].shape[-1] == 3 for k in rep.payloads)
