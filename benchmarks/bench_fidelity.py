@@ -5,12 +5,20 @@
     cross-GPU study (H100 vs L4 FMA ordering) by decoding the same latent
     at fp32 vs bf16 weights and measuring the pixel-delta distribution;
 (b) LatentBox (lossless latent) vs lossy codecs (JPEG-class q50/q95) at
-    comparable sizes: PSNR / SSIM against the original decode.
+    comparable sizes: PSNR / SSIM against the original decode;
+(c) the rate-distortion ladder: per-rung bytes/object and decoded-pixel
+    PSNR / SSIM against the lossless-rung decode, *gated* on each rung's
+    configured floor (``repro.compression.ladder.RUNGS``) — a codec or
+    decoder change that pushes any rung under its floor fails the run.
+    ``--smoke`` runs a CI-sized ladder sweep and writes the versioned
+    ``BENCH_fidelity.json`` trajectory artifact at the repo root.
 """
 
 from __future__ import annotations
 
+import argparse
 import dataclasses
+import os
 
 import numpy as np
 
@@ -18,11 +26,14 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.common import Rows, Timer, scale
+from repro.compression.ladder import RUNGS, encode_at
 from repro.compression.latentcodec import compress_latent, decompress_latent
 from repro.compression.lossy import jpeg_like
 from repro.compression.metrics import psnr, ssim
 from repro.compression.png_proxy import png_like_size
 from repro.vae.model import VAE, VAEConfig, decode
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
 def to_u8(img_pm1: np.ndarray) -> np.ndarray:
@@ -95,10 +106,105 @@ def run() -> Rows:
              derived=round(float(np.mean(sz_j50)) / 1024, 1))
     rows.add("fidelity.size_png_kb",
              derived=round(float(np.mean(sz_png)) / 1024, 1))
+    rows.extend(ladder_rows())
+    return rows
+
+
+class FloorBreach(AssertionError):
+    """A ladder rung's measured fidelity fell under its configured floor."""
+
+
+def ladder_rows(smoke: bool = False) -> Rows:
+    """(c) the rate-distortion ladder sweep: for every lossy rung, mean
+    bytes/object, storage savings vs the lossless rung, and decoded-pixel
+    PSNR / SSIM against the lossless-rung decode — plus the recipe rung's
+    bit-exact-regeneration check (same recipe, same encoder, same latent:
+    its 'fidelity' is identity at near-zero stored bytes).  Raises
+    :class:`FloorBreach` if any rung misses its configured floor."""
+    from benchmarks.bench_storage import synth_image
+    rows = Rows()
+    rng = np.random.default_rng(2)
+    res = 64 if smoke else 256
+    n = 2 if smoke else scale(4, 10)
+    vae = VAE(seed=0)
+
+    lossy = [r for r in RUNGS if r.lossy]
+    nbytes = {r.index: [] for r in lossy}
+    ps = {r.index: [] for r in lossy}
+    ss = {r.index: [] for r in lossy}
+    sz_lossless = []
+    for i in range(n):
+        img = synth_image(rng, res)
+        x = jnp.asarray(img, jnp.float32)[None] / 127.5 - 1.0
+        z = np.asarray(vae.encode_mean(x))[0].astype(np.float16)
+        sz_lossless.append(len(compress_latent(z)))
+        ref = to_u8(np.asarray(vae.decode(jnp.asarray(z,
+                                                      jnp.float32)[None]))[0])
+        for r in lossy:
+            blob = encode_at(z, r)
+            zq = decompress_latent(blob)
+            px = to_u8(np.asarray(vae.decode(
+                jnp.asarray(zq, jnp.float32)[None]))[0])
+            nbytes[r.index].append(len(blob))
+            ps[r.index].append(psnr(ref, px))
+            ss[r.index].append(ssim(ref, px))
+        # recipe rung: regeneration is deterministic, so re-deriving the
+        # latent from the same pixels must be bit-exact
+        z_again = np.asarray(vae.encode_mean(x))[0].astype(np.float16)
+        assert np.array_equal(z, z_again), "regen must be bit-exact"
+
+    base = float(np.mean(sz_lossless))
+    rows.add("fidelity.ladder.lossless.bytes_per_object",
+             derived=round(base, 1))
+    breaches = []
+    for r in lossy:
+        b = float(np.mean(nbytes[r.index]))
+        p_min, s_min = float(np.min(ps[r.index])), float(np.min(ss[r.index]))
+        rows.add(f"fidelity.ladder.{r.name}.bytes_per_object",
+                 derived=round(b, 1))
+        rows.add(f"fidelity.ladder.{r.name}.savings_vs_lossless",
+                 derived=round(1.0 - b / base, 3))
+        rows.add(f"fidelity.ladder.{r.name}.psnr_db",
+                 derived=round(float(np.mean(ps[r.index])), 1))
+        rows.add(f"fidelity.ladder.{r.name}.ssim",
+                 derived=round(float(np.mean(ss[r.index])), 4))
+        rows.add(f"fidelity.ladder.{r.name}.psnr_floor_db",
+                 derived=r.psnr_floor_db)
+        rows.add(f"fidelity.ladder.{r.name}.ssim_floor",
+                 derived=r.ssim_floor)
+        if p_min < r.psnr_floor_db:
+            breaches.append(f"{r.name}: psnr {p_min:.1f} dB < floor "
+                            f"{r.psnr_floor_db}")
+        if s_min < r.ssim_floor:
+            breaches.append(f"{r.name}: ssim {s_min:.4f} < floor "
+                            f"{r.ssim_floor}")
+    rows.add("fidelity.ladder.recipe.bytes_per_object", derived=0.0)
+    rows.add("fidelity.ladder.recipe.bitexact_regen", derived=1)
+    if breaches:
+        raise FloorBreach("; ".join(breaches))
+    return rows
+
+
+def trajectory(out_dir: str = REPO_ROOT, smoke: bool = False) -> Rows:
+    """The fidelity-trajectory artifact: ``<out_dir>/BENCH_fidelity.json``
+    — versioned per-rung storage savings vs PSNR/SSIM, so later checkouts
+    have a rate-distortion trend to regress against (and CI fails on any
+    rung under its floor)."""
+    rows = ladder_rows(smoke=smoke)
+    path = rows.save_json("BENCH_fidelity", out_dir=out_dir)
+    print(f"# saved {path}")
     return rows
 
 
 def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized ladder sweep; writes BENCH_fidelity.json "
+                         "at the repo root and fails on any floor breach")
+    args = ap.parse_args()
+    if args.smoke:
+        trajectory(smoke=True).print()
+        return
     run().print()
 
 

@@ -43,11 +43,19 @@ def _flatten_with_paths(tree) -> List[Tuple[str, Any]]:
 
 
 class CheckpointManager:
-    def __init__(self, directory: str, keep_last: int = 3):
+    def __init__(self, directory: str, keep_last: int = 3, clock=None):
+        """``clock`` is the injectable wall clock (seconds) the manifest
+        ``created`` field and commit marker are stamped with — the same
+        convention as ``StoreConfig.clock``/``now_s``; ``None`` means
+        ``time.time``."""
         self.dir = directory
         self.keep_last = keep_last
+        self.clock = clock
         os.makedirs(directory, exist_ok=True)
         self._thread: Optional[threading.Thread] = None
+
+    def now_s(self) -> float:
+        return time.time() if self.clock is None else float(self.clock())
 
     # ------------------------------------------------------------------ save
     def save(self, step: int, tree, blocking: bool = True,
@@ -69,7 +77,7 @@ class CheckpointManager:
         treedef = jax.tree_util.tree_structure(tree)
         manifest = {
             "step": int(step),
-            "created": time.time(),
+            "created": self.now_s(),
             "treedef": str(treedef),
             "leaves": [{"key": k, "shape": list(a.shape),
                         "dtype": logical[i], "file": f"arr_{i:05d}.npy"}
@@ -88,7 +96,7 @@ class CheckpointManager:
             with open(os.path.join(tmp, "manifest.json"), "w") as f:
                 json.dump(manifest, f)
             with open(os.path.join(tmp, _COMMIT), "w") as f:
-                f.write(str(time.time()))
+                f.write(str(self.now_s()))
             if os.path.exists(final):
                 shutil.rmtree(final)
             os.rename(tmp, final)

@@ -86,9 +86,16 @@ def _encode_channel(ch: np.ndarray, qt: np.ndarray) -> Tuple[bytes, np.ndarray]:
 
 def jpeg_like(img_u8: np.ndarray, quality: int = 95,
               level: int = 6) -> Tuple[int, np.ndarray]:
-    """Returns (compressed_size_bytes, reconstructed uint8 image)."""
+    """Returns (compressed_size_bytes, reconstructed uint8 image).
+
+    Arbitrary H x W: edges are replicate-padded up to multiples of the
+    8x8 block size before the transform and the reconstruction is
+    cropped back, as a real JPEG encoder does (replication, not zeros,
+    so the pad rows cost almost nothing and don't ring into the edge)."""
     h, w, _ = img_u8.shape
-    assert h % 8 == 0 and w % 8 == 0, "pad to multiples of 8 first"
+    ph, pw = (-h) % 8, (-w) % 8
+    if ph or pw:
+        img_u8 = np.pad(img_u8, ((0, ph), (0, pw), (0, 0)), mode="edge")
     s = _qscale(quality)
     ycc = _rgb_to_ycbcr(img_u8.astype(np.float64))
     payloads = []
@@ -100,4 +107,4 @@ def jpeg_like(img_u8: np.ndarray, quality: int = 95,
         rec[..., c] = rc
     size = len(zlib.compress(b"".join(payloads), level)) + 600  # hdr+tables
     out = np.clip(_ycbcr_to_rgb(rec), 0, 255).astype(np.uint8)
-    return size, out
+    return size, out[:h, :w]

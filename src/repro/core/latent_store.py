@@ -70,9 +70,10 @@ class LatentStore:
     def put(self, oid: int, blob: bytes) -> None:
         self.backend.put_blob(oid, blob)
 
-    def put_size(self, oid: int, nbytes: float) -> None:
-        """Register an object by size only (simulation mode)."""
-        self.backend.put_size(oid, float(nbytes))
+    def put_size(self, oid: int, nbytes: float, rung: int = 0) -> None:
+        """Register an object by size only (simulation mode).  ``rung``
+        tags which rate-distortion rung the nominal bytes represent."""
+        self.backend.put_size(oid, float(nbytes), int(rung))
 
     def get(self, oid: int) -> Optional[bytes]:
         return self.backend.get_blob(oid)
@@ -88,6 +89,20 @@ class LatentStore:
 
     def __contains__(self, oid: int) -> bool:
         return self.backend.contains(oid)
+
+    # -- rate-distortion ladder --------------------------------------------------
+    def rung_of(self, oid: int) -> Optional[int]:
+        """Ladder rung the object's durable bytes sit at (None: absent)."""
+        return self.backend.rung_of(oid)
+
+    def target_rung_of(self, oid: int) -> Optional[int]:
+        """Pending demotion target (segment-log backend only), or None."""
+        return self.backend.target_rung_of(oid)
+
+    def set_target_rung(self, oid: int, rung: int) -> bool:
+        """Demote the object to a colder rung: eager on the memory
+        backend, piggybacked on the next compaction pass on the log."""
+        return self.backend.set_target_rung(oid, int(rung))
 
     # -- durability hooks --------------------------------------------------------
     def flush(self) -> None:
@@ -126,6 +141,8 @@ class LatentStore:
             "has_payload": self.backend.has_blob(oid),
             "last_fetch_s": self._last_fetch_s.get(oid, float("-inf")),
             "epoch": self._epoch.get(oid, 0),
+            "rung": self.backend.rung_of(oid),
+            "target_rung": self.backend.target_rung_of(oid),
         }
 
     # -- modeled fetch ----------------------------------------------------------

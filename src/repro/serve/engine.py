@@ -417,11 +417,17 @@ class ServingEngine:
         self.batcher.forget(oid)
         return found
 
-    def demote(self, oid: int) -> bool:
-        """Drop the durable latent, keep the recipe (recipe-only class).
-        Cached copies are purged so the next read exercises regeneration;
-        the eviction listeners drop the decoded payloads with them."""
-        return self.walk.demote(oid)
+    def demote(self, oid: int, rung=None) -> bool:
+        """Demote down the rate-distortion ladder.  Default (None /
+        "recipe"): drop the durable latent, keep the recipe (recipe-only
+        class) — cached copies are purged so the next read exercises
+        regeneration, and the eviction listeners drop the decoded
+        payloads with them.  A lossy rung re-encodes the durable blob at
+        that colder quality instead (deferred to compaction on a
+        persistent box); cached latents/pixels are left to age out, and
+        the batcher memo is keyed on blob bytes so a rewritten blob can
+        never serve a stale decode."""
+        return self.walk.demote(oid, rung)
 
     def promote(self, oid: int) -> bool:
         """Regenerate a demoted object's latent back into the durable tier

@@ -175,4 +175,12 @@ class ObjectStat:
     #: pixel-resident) — real stored-array bytes on the engine backend.
     pixel_bytes: float = 0.0
     demoted: bool = False                 # recipe-only durability class
+    #: Rate-distortion ladder position (``repro.compression.ladder``):
+    #: the rung the durable bytes are encoded at (0 = lossless; the
+    #: recipe rung when demoted; None when the object has no durable
+    #: class at all), its name, and any not-yet-applied demotion target
+    #: awaiting the compactor (segment-log backends only).
+    rung: Optional[int] = None
+    rung_name: Optional[str] = None
+    target_rung: Optional[int] = None
     meta: Optional[Dict[str, Any]] = None

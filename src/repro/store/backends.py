@@ -19,6 +19,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.compression.ladder import RECIPE_RUNG, resolve_rung
 from repro.core.cluster import GpuQueue
 from repro.core.dual_cache import IMAGE_HIT, LATENT_HIT
 from repro.core.latent_store import LatentStore
@@ -66,6 +67,10 @@ def _stat(walk: TierWalk, store: LatentStore, regen: RegenTierStore,
     if not residency:
         return None
     st = store.stat(oid)
+    demoted = regen.is_demoted(oid)
+    # ladder position: the durable rung when bytes exist, the recipe rung
+    # when demoted to recipe-only, None when the object has no durable class
+    rung = st["rung"] if st else (RECIPE_RUNG if demoted else None)
     return ObjectStat(
         oid=oid,
         residency=residency,
@@ -73,7 +78,10 @@ def _stat(walk: TierWalk, store: LatentStore, regen: RegenTierStore,
         recipe_bytes=(regen.recipe_of(oid).nbytes
                       if regen.recipe_of(oid) else 0.0),
         pixel_bytes=walk.pixel_bytes_of(oid),
-        demoted=regen.is_demoted(oid))
+        demoted=demoted,
+        rung=rung,
+        rung_name=resolve_rung(rung).name if rung is not None else None,
+        target_rung=st["target_rung"] if st else None)
 
 
 class EngineBackend:
@@ -152,8 +160,8 @@ class EngineBackend:
         self._ack()
         return found
 
-    def demote(self, oid: int) -> bool:
-        out = self.engine.demote(oid)
+    def demote(self, oid: int, rung=None) -> bool:
+        out = self.engine.demote(oid, rung)
         self._ack()
         return out
 
@@ -190,7 +198,11 @@ def _durable_summary(store: LatentStore) -> Dict:
             "durable_live_bytes": float(st["live_bytes"]),
             "durable_segments": int(st["segments"]),
             "write_amplification": float(st["write_amplification"]),
-            "segments_compacted": int(st.get("segments_compacted", 0))}
+            "segments_compacted": int(st.get("segments_compacted", 0)),
+            "reencoded_records": int(st.get("reencoded_records", 0)),
+            "reencode_bytes_saved": float(
+                st.get("reencode_bytes_saved", 0.0)),
+            "pending_rungs": int(st.get("pending_rungs", 0))}
 
 
 class SimBackend:
@@ -351,8 +363,8 @@ class SimBackend:
         self._ack()
         return found
 
-    def demote(self, oid: int) -> bool:
-        out = self.walk.demote(oid)
+    def demote(self, oid: int, rung=None) -> bool:
+        out = self.walk.demote(oid, rung)
         self._ack()
         return out
 

@@ -23,6 +23,9 @@ from __future__ import annotations
 import abc
 from typing import Any, Dict, Iterator, Optional
 
+from repro.compression.ladder import (RECIPE_RUNG, scaled_nbytes,
+                                      transcode_blob)
+from repro.compression.latentcodec import blob_rung
 from repro.store.durable.compact import Compactor
 from repro.store.durable.log import SegmentLog
 
@@ -38,7 +41,7 @@ class DurableBackend(abc.ABC):
     def put_blob(self, oid: int, blob: bytes) -> None: ...
 
     @abc.abstractmethod
-    def put_size(self, oid: int, nbytes: float) -> None: ...
+    def put_size(self, oid: int, nbytes: float, rung: int = 0) -> None: ...
 
     @abc.abstractmethod
     def get_blob(self, oid: int) -> Optional[bytes]: ...
@@ -62,6 +65,20 @@ class DurableBackend(abc.ABC):
     @abc.abstractmethod
     def total_bytes(self) -> float: ...
 
+    # -- rate-distortion ladder ----------------------------------------------
+    def rung_of(self, oid: int) -> Optional[int]:
+        """Ladder rung the object's durable bytes sit at (None: absent)."""
+        return 0 if self.contains(oid) else None
+
+    def target_rung_of(self, oid: int) -> Optional[int]:
+        """Pending (not yet applied) demotion target, or None."""
+        return None
+
+    def set_target_rung(self, oid: int, rung: int) -> bool:
+        """Ask for the object to be re-encoded at a colder rung.  Returns
+        False when the backend cannot ladder this object."""
+        return False
+
     # -- durability hooks (no-ops in memory) ---------------------------------
     def flush(self) -> None:
         """Make every acknowledged write crash-durable."""
@@ -78,7 +95,13 @@ class DurableBackend(abc.ABC):
 
 
 class MemoryBackend(DurableBackend):
-    """The pre-refactor in-memory dict store (sim-mode conformance)."""
+    """The pre-refactor in-memory dict store (sim-mode conformance).
+
+    Ladder demotion applies *eagerly* here: there is no compactor to
+    piggyback on (the deferred-re-encode optimization is a segment-log
+    property), so ``set_target_rung`` transcodes the blob — or re-scales
+    the size registration — on the spot.  No intent is ever pending.
+    """
 
     name = "memory"
     persistent = False
@@ -86,13 +109,23 @@ class MemoryBackend(DurableBackend):
     def __init__(self) -> None:
         self._blobs: Dict[int, bytes] = {}
         self._sizes: Dict[int, float] = {}
+        self._rungs: Dict[int, int] = {}
+
+    @staticmethod
+    def _sniff_rung(blob: bytes) -> int:
+        try:
+            return blob_rung(blob)
+        except (ValueError, IndexError):
+            return 0
 
     def put_blob(self, oid: int, blob: bytes) -> None:
         self._blobs[oid] = blob
         self._sizes[oid] = float(len(blob))
+        self._rungs[oid] = self._sniff_rung(blob)
 
-    def put_size(self, oid: int, nbytes: float) -> None:
+    def put_size(self, oid: int, nbytes: float, rung: int = 0) -> None:
         self._sizes[oid] = float(nbytes)
+        self._rungs[oid] = int(rung)
 
     def get_blob(self, oid: int) -> Optional[bytes]:
         return self._blobs.get(oid)
@@ -110,6 +143,7 @@ class MemoryBackend(DurableBackend):
         found = self.contains(oid)
         self._blobs.pop(oid, None)
         self._sizes.pop(oid, None)
+        self._rungs.pop(oid, None)
         return found
 
     def oids(self) -> Iterator[int]:
@@ -118,6 +152,29 @@ class MemoryBackend(DurableBackend):
     @property
     def total_bytes(self) -> float:
         return float(sum(self._sizes.values()))
+
+    def rung_of(self, oid: int) -> Optional[int]:
+        if not self.contains(oid):
+            return None
+        return int(self._rungs.get(oid, 0))
+
+    def set_target_rung(self, oid: int, rung: int) -> bool:
+        rung = int(rung)
+        cur = self.rung_of(oid)
+        if cur is None or rung <= cur or not 0 < rung < RECIPE_RUNG:
+            return False
+        blob = self._blobs.get(oid)
+        if blob is not None:
+            try:
+                demoted = transcode_blob(blob, rung)
+            except (ValueError, TypeError):
+                return False             # opaque payload: cannot ladder
+            self._blobs[oid] = demoted
+            self._sizes[oid] = float(len(demoted))
+        else:
+            self._sizes[oid] = scaled_nbytes(self._sizes[oid], cur, rung)
+        self._rungs[oid] = rung
+        return True
 
 
 class SegmentLogBackend(DurableBackend):
@@ -154,8 +211,8 @@ class SegmentLogBackend(DurableBackend):
         if self.flush_each_put:
             self.log.flush()
 
-    def put_size(self, oid: int, nbytes: float) -> None:
-        self.log.put_size(oid, nbytes)
+    def put_size(self, oid: int, nbytes: float, rung: int = 0) -> None:
+        self.log.put_size(oid, nbytes, rung)
         if self.flush_each_put:
             self.log.flush()
 
@@ -185,6 +242,27 @@ class SegmentLogBackend(DurableBackend):
     @property
     def total_bytes(self) -> float:
         return self.log.payload_bytes
+
+    def rung_of(self, oid: int) -> Optional[int]:
+        return self.log.rung_of(oid)
+
+    def target_rung_of(self, oid: int) -> Optional[int]:
+        return self.log.target_rung_of(oid)
+
+    def set_target_rung(self, oid: int, rung: int) -> bool:
+        """Record the demotion intent; the attached compactor's next pass
+        over the object's segment re-encodes the bytes (piggybacked on
+        the rewrite — never a standalone I/O pass)."""
+        rung = int(rung)
+        cur = self.log.rung_of(oid)
+        if cur is None or rung <= cur or not 0 < rung < RECIPE_RUNG:
+            return False
+        if self.log.target_rung_of(oid) == rung:
+            return True                  # idempotent: intent already queued
+        self.log.set_target_rung(oid, rung)
+        if self.flush_each_put:
+            self.log.flush()
+        return True
 
     def flush(self) -> None:
         self.log.flush()

@@ -40,22 +40,35 @@ import os
 import time
 from typing import Any, Dict, Iterator, List, Optional, Tuple
 
+from repro.compression.latentcodec import blob_rung
 from repro.store.durable.segment import (BLOB, HEADER_BYTES, RDEL, RSTATE,
-                                         SIZE, TOMB, Record, pack_record,
+                                         RUNG, SIZE, TOMB, Record,
+                                         pack_record, pack_rung_payload,
                                          pack_size_payload, read_payload,
                                          record_bytes, scan_records,
-                                         unpack_size_payload)
+                                         unpack_rung_payload,
+                                         unpack_size_rung)
 
 MANIFEST = "MANIFEST.json"
-MANIFEST_VERSION = 2
+MANIFEST_VERSION = 3        # v3: slots carry a ladder-rung field
 SEG_PREFIX, SEG_SUFFIX = "seg-", ".lbx"
 
 #: index namespaces: one slot per (namespace, oid)
 NS_OBJECT = 0       # BLOB / SIZE / TOMB
 NS_RECIPE = 1       # RSTATE / RDEL
+NS_RUNG = 2         # RUNG (ladder-demotion intent)
 
 _NS_OF = {BLOB: NS_OBJECT, SIZE: NS_OBJECT, TOMB: NS_OBJECT,
-          RSTATE: NS_RECIPE, RDEL: NS_RECIPE}
+          RSTATE: NS_RECIPE, RDEL: NS_RECIPE, RUNG: NS_RUNG}
+
+
+def _blob_payload_rung(payload: bytes) -> int:
+    """Ladder rung a BLOB payload carries in its own codec header; opaque
+    (non-latent-codec) payloads count as rung 0."""
+    try:
+        return blob_rung(payload)
+    except (ValueError, IndexError):
+        return 0
 
 
 def _seg_name(seg_id: int) -> str:
@@ -82,7 +95,10 @@ class Slot:
     payload_len: int
     size: float                 # accounting bytes (BLOB: payload len;
     #                             SIZE: stored float; tombstones: 0)
-    value: Any = None           # parsed payload for SIZE/RSTATE records
+    value: Any = None           # parsed payload for SIZE/RSTATE/RUNG records
+    rung: int = 0               # ladder rung the record's bytes encode
+    #                             (BLOB: from the codec header; SIZE: from
+    #                             the payload's rung byte; else 0)
 
     @property
     def nbytes(self) -> int:
@@ -90,12 +106,13 @@ class Slot:
 
     def to_json(self) -> list:
         return [self.lsn, self.kind, self.seg, self.offset,
-                self.payload_len, self.size, self.value]
+                self.payload_len, self.size, self.value, self.rung]
 
     @staticmethod
     def from_json(row: list) -> "Slot":
         return Slot(int(row[0]), int(row[1]), int(row[2]), int(row[3]),
-                    int(row[4]), float(row[5]), row[6])
+                    int(row[4]), float(row[5]), row[6],
+                    int(row[7]) if len(row) > 7 else 0)
 
 
 class SegmentLog:
@@ -122,6 +139,9 @@ class SegmentLog:
         # write-amplification accounting: user vs compaction-rewrite bytes
         self.user_bytes_written = 0
         self.rewrite_bytes_written = 0
+        # ladder accounting: blobs/sizes the compactor re-encoded in place
+        self.reencoded_records = 0
+        self.reencode_bytes_saved = 0
         self.closed = False
         self.recovery_stats: Dict[str, Any] = {}
         self._recover()
@@ -165,6 +185,9 @@ class SegmentLog:
             self.next_lsn = int(manifest["next_lsn"])
             self.user_bytes_written = int(manifest.get("user_bytes", 0))
             self.rewrite_bytes_written = int(manifest.get("rewrite_bytes", 0))
+            self.reencoded_records = int(manifest.get("reencoded", 0))
+            self.reencode_bytes_saved = int(
+                manifest.get("reencode_saved", 0))
         torn = 0
         n_records = 0
         for sid in seg_ids:
@@ -194,20 +217,27 @@ class SegmentLog:
             "torn_tail_bytes": torn,
         }
 
+    @staticmethod
+    def _parse_payload(kind: int, payload: bytes):
+        """(size, value, rung) of one record payload, shared by recovery
+        replay and the live append path."""
+        if kind == SIZE:
+            size, rung = unpack_size_rung(payload)
+            return size, size, rung
+        if kind == BLOB:
+            return float(len(payload)), None, _blob_payload_rung(payload)
+        if kind == RSTATE:
+            return 0.0, json.loads(payload.decode()), 0
+        if kind == RUNG:
+            return 0.0, unpack_rung_payload(payload), 0
+        return 0.0, None, 0                      # TOMB / RDEL
+
     def _apply_record(self, sid: int, r: Record) -> None:
         if r.lsn >= self.next_lsn:
             self.next_lsn = r.lsn + 1
-        if r.kind == SIZE:
-            size, value = unpack_size_payload(r.payload), \
-                unpack_size_payload(r.payload)
-        elif r.kind == BLOB:
-            size, value = float(len(r.payload)), None
-        elif r.kind == RSTATE:
-            size, value = 0.0, json.loads(r.payload.decode())
-        else:                                    # TOMB / RDEL
-            size, value = 0.0, None
+        size, value, rung = self._parse_payload(r.kind, r.payload)
         slot = Slot(r.lsn, r.kind, sid, r.offset, len(r.payload), size,
-                    value)
+                    value, rung)
         self._apply_slot((_NS_OF[r.kind], r.oid), slot)
 
     def _apply_slot(self, key: Tuple[int, int], slot: Slot) -> None:
@@ -223,6 +253,13 @@ class SegmentLog:
         self.slots[key] = slot
         self._seg_live[slot.seg] = \
             self._seg_live.get(slot.seg, 0) + slot.nbytes
+
+    def _drop_slot(self, key: Tuple[int, int]) -> None:
+        """Retire a slot whose record is being compacted away (stale
+        ladder intent): remove it from the index and its live count."""
+        s = self.slots.pop(key, None)
+        if s is not None:
+            self._seg_live[s.seg] = self._seg_live.get(s.seg, 0) - s.nbytes
 
     # -- append path ----------------------------------------------------------
 
@@ -248,13 +285,18 @@ class SegmentLog:
         self._active_id = None
 
     def append(self, kind: int, oid: int, payload: bytes,
-               lsn: Optional[int] = None) -> Slot:
+               lsn: Optional[int] = None,
+               rewrite: Optional[bool] = None) -> Slot:
         """Append one record and update the index.  ``lsn=None`` assigns
         the next sequence number (user write); compaction passes the
-        record's original lsn so replay order is preserved."""
+        record's original lsn so replay order is preserved.  ``rewrite``
+        overrides the write-amplification attribution: a ladder re-encode
+        takes a *new* lsn (it is a different logical record) but is still
+        charged to compaction's rewrite budget, not to the user."""
         if self.closed:
             raise ValueError("log is closed")
-        rewrite = lsn is not None
+        if rewrite is None:
+            rewrite = lsn is not None
         if lsn is None:
             lsn = self.next_lsn
         self.next_lsn = max(self.next_lsn, lsn + 1)
@@ -272,16 +314,8 @@ class SegmentLog:
             self.rewrite_bytes_written += len(rec)
         else:
             self.user_bytes_written += len(rec)
-        if kind == SIZE:
-            size, value = unpack_size_payload(payload), \
-                unpack_size_payload(payload)
-        elif kind == BLOB:
-            size, value = float(len(payload)), None
-        elif kind == RSTATE:
-            size, value = 0.0, json.loads(payload.decode())
-        else:
-            size, value = 0.0, None
-        slot = Slot(lsn, kind, sid, offset, len(payload), size, value)
+        size, value, rung = self._parse_payload(kind, payload)
+        slot = Slot(lsn, kind, sid, offset, len(payload), size, value, rung)
         self._apply_slot((_NS_OF[kind], oid), slot)
         self._appends_since_ckpt += 1
         if (self.checkpoint_every > 0
@@ -294,8 +328,8 @@ class SegmentLog:
     def put_blob(self, oid: int, blob: bytes) -> Slot:
         return self.append(BLOB, int(oid), bytes(blob))
 
-    def put_size(self, oid: int, nbytes: float) -> Slot:
-        return self.append(SIZE, int(oid), pack_size_payload(nbytes))
+    def put_size(self, oid: int, nbytes: float, rung: int = 0) -> Slot:
+        return self.append(SIZE, int(oid), pack_size_payload(nbytes, rung))
 
     def tombstone(self, oid: int) -> Slot:
         return self.append(TOMB, int(oid), b"")
@@ -325,6 +359,55 @@ class SegmentLog:
         for (ns, oid), s in self.slots.items():
             if ns == NS_OBJECT and s.kind != TOMB:
                 yield oid
+
+    # -- ladder namespace -----------------------------------------------------
+
+    def rung_of(self, oid: int) -> Optional[int]:
+        """Rate-distortion rung the object's durable bytes are encoded at
+        (None if the object has no durable record)."""
+        s = self._obj_slot(oid)
+        return None if s is None else int(s.rung)
+
+    def set_target_rung(self, oid: int, rung: int) -> Slot:
+        """Record a ladder-demotion *intent*: the compactor re-encodes the
+        object's bytes to ``rung`` when it next rewrites their segment —
+        no immediate I/O beyond this one tiny record."""
+        return self.append(RUNG, int(oid), pack_rung_payload(rung))
+
+    def target_rung_of(self, oid: int) -> Optional[int]:
+        """Pending demotion target for ``oid``, or None.  An intent is
+        pending only while it is newer than the object record (a fresh
+        put invalidates it) and targets a strictly colder rung."""
+        intent = self.slots.get((NS_RUNG, int(oid)))
+        if intent is None or intent.kind != RUNG:
+            return None
+        obj = self._obj_slot(oid)
+        if obj is None:
+            return None
+        if intent.lsn <= obj.lsn or int(intent.value) <= int(obj.rung):
+            return None
+        return int(intent.value)
+
+    def pending_rungs(self) -> Dict[int, int]:
+        """oid -> pending target rung, across the whole log."""
+        out = {}
+        for (ns, oid), _ in list(self.slots.items()):
+            if ns != NS_RUNG:
+                continue
+            t = self.target_rung_of(oid)
+            if t is not None:
+                out[oid] = t
+        return out
+
+    def pending_segments(self) -> Dict[int, int]:
+        """sealed seg_id -> bytes of live object records awaiting ladder
+        demotion there (the compactor's re-encode yield estimate)."""
+        out: Dict[int, int] = {}
+        for oid in self.pending_rungs():
+            s = self._obj_slot(oid)
+            if s is not None and s.seg != self._active_id:
+                out[s.seg] = out.get(s.seg, 0) + s.nbytes
+        return out
 
     # -- recipe namespace -----------------------------------------------------
 
@@ -378,6 +461,8 @@ class SegmentLog:
                       for (ns, oid), s in self.slots.items()],
             "user_bytes": self.user_bytes_written,
             "rewrite_bytes": self.rewrite_bytes_written,
+            "reencoded": self.reencoded_records,
+            "reencode_saved": self.reencode_bytes_saved,
         }
         tmp = os.path.join(self.path, MANIFEST + ".tmp")
         with open(tmp, "w") as f:
@@ -428,15 +513,24 @@ class SegmentLog:
                 for sid, ln in self._seg_len.items()
                 if sid != self._active_id}
 
-    def compact_segment(self, sid: int,
-                        crash_hook=None) -> Tuple[int, int]:
+    def compact_segment(self, sid: int, crash_hook=None,
+                        reencode=None) -> Tuple[int, int]:
         """Rewrite ``sid``'s live records into the active head (original
         lsns preserved) and delete the file.  Returns (bytes_rewritten,
         bytes_reclaimed).  Safe order: the copies are appended and flushed
         *before* the victim file is unlinked, so a crash at any point
         leaves either duplicates (deduped by lsn on replay) or the intact
         victim — never a hole.  ``crash_hook`` is a test seam invoked
-        between the durable rewrite and the unlink."""
+        between the durable rewrite and the unlink.
+
+        ``reencode(kind, payload, target_rung) -> payload-or-None`` is the
+        ladder piggyback: when a live BLOB/SIZE record has a pending
+        demotion intent, the compactor transcodes it *during* the rewrite
+        it was going to do anyway.  The demoted record takes a new lsn —
+        so it supersedes the intent and wins any replay — and a crash
+        between copy and unlink leaves the old record intact (the intent
+        simply stays pending).  ``None`` from the hook means "copy
+        verbatim"."""
         if sid == self._active_id:
             raise ValueError("cannot compact the active segment")
         if sid not in self._seg_len:
@@ -449,6 +543,24 @@ class SegmentLog:
             cur = self.slots.get(key)
             if cur is None or cur.seg != sid or cur.lsn != r.lsn:
                 continue                          # dead record: drop
+            if r.kind == RUNG and self.target_rung_of(r.oid) is None:
+                self._drop_slot(key)              # stale intent: retire it
+                continue
+            if r.kind in (BLOB, SIZE) and reencode is not None:
+                target = self.target_rung_of(r.oid)
+                if target is not None:
+                    demoted = reencode(r.kind, r.payload, target)
+                    if demoted is not None:
+                        self.append(r.kind, r.oid, demoted, rewrite=True)
+                        self.reencoded_records += 1
+                        self.reencode_bytes_saved += max(
+                            0, len(r.payload) - len(demoted))
+                        rewritten += record_bytes(len(demoted))
+                        continue
+                    # the hook declined a *pending* record: the intent is
+                    # unsatisfiable (e.g. opaque payload) — retire it so
+                    # it cannot re-elect this data for compaction forever
+                    self._drop_slot((NS_RUNG, r.oid))
             self.append(r.kind, r.oid, r.payload, lsn=r.lsn)
             rewritten += r.nbytes
         self.flush()                              # copies durable first
@@ -483,6 +595,14 @@ class SegmentLog:
                 parts.append(pack_record(
                     rs.lsn, RSTATE, oid,
                     json.dumps(rs.value, sort_keys=True).encode()))
+            # pending ladder intent migrates with the object; it is packed
+            # *after* the object record so the destination's re-stamped
+            # lsns keep it newer (i.e. still pending).  Stale intents stay
+            # behind and die with the source.
+            if s is not None and self.target_rung_of(oid) is not None:
+                rg = self.slots[(NS_RUNG, oid)]
+                parts.append(pack_record(rg.lsn, RUNG, oid,
+                                         pack_rung_payload(int(rg.value))))
         return b"".join(parts)
 
     def export_delta(self, since_lsn: int, oids=None) -> bytes:
@@ -507,7 +627,9 @@ class SegmentLog:
             elif s.kind == RSTATE:
                 payload = json.dumps(s.value, sort_keys=True).encode()
             elif s.kind == SIZE:
-                payload = pack_size_payload(s.size)
+                payload = pack_size_payload(s.size, s.rung)
+            elif s.kind == RUNG:
+                payload = pack_rung_payload(int(s.value))
             else:
                 payload = self._read_slot_payload(s)
                 if payload is None:
@@ -533,9 +655,10 @@ class SegmentLog:
         recipes: Dict[int, Dict[str, Any]] = {}
         removed_objects: List[int] = []
         removed_recipes: List[int] = []
+        rungs: Dict[int, int] = {}
         if not recs:
             return {"objects": [], "recipes": {}, "removed_objects": [],
-                    "removed_recipes": [], "segment": None}
+                    "removed_recipes": [], "rungs": {}, "segment": None}
         self._seal_active()
         sid = self._next_seg
         self._next_seg += 1
@@ -561,13 +684,16 @@ class SegmentLog:
                     removed_objects.append(r.oid)
                 elif r.kind == RDEL:
                     removed_recipes.append(r.oid)
+                elif r.kind == RUNG:
+                    rungs[r.oid] = unpack_rung_payload(r.payload)
             f.flush()
             if self.fsync:
                 os.fsync(f.fileno())
         self.write_manifest()
         return {"objects": applied_objects, "recipes": recipes,
                 "removed_objects": removed_objects,
-                "removed_recipes": removed_recipes, "segment": sid}
+                "removed_recipes": removed_recipes, "rungs": rungs,
+                "segment": sid}
 
     # -- accounting -----------------------------------------------------------
 
@@ -605,5 +731,8 @@ class SegmentLog:
             "user_bytes_written": self.user_bytes_written,
             "rewrite_bytes_written": self.rewrite_bytes_written,
             "write_amplification": self.write_amplification,
+            "reencoded_records": self.reencoded_records,
+            "reencode_bytes_saved": self.reencode_bytes_saved,
+            "pending_rungs": len(self.pending_rungs()),
             "recovery": dict(self.recovery_stats),
         }

@@ -16,15 +16,23 @@ file order, which is what lets compaction rewrite old records into new
 segments (keeping their original lsn) without ever changing the outcome of
 a recovery scan.
 
-Record kinds (one keyspace per ``oid``, two namespaces):
+Record kinds (one keyspace per ``oid``, three namespaces):
 
 * durable-object namespace — ``BLOB`` (compressed latent payload),
   ``SIZE`` (size-only registration, simulator mode; payload is one
-  little-endian float64), ``TOMB`` (delete/demote tombstone; empty
+  little-endian float64 followed by one rung byte — legacy 8-byte
+  payloads decode as rung 0), ``TOMB`` (delete/demote tombstone; empty
   payload);
 * recipe namespace — ``RSTATE`` (full regen-tier state of one object as
   JSON: recipe fields, accounting bytes, latent residency, last access),
-  ``RDEL`` (recipe tombstone).
+  ``RDEL`` (recipe tombstone);
+* ladder namespace — ``RUNG`` (demotion *intent*: payload is one byte,
+  the target rate-distortion rung).  The intent is deliberately a
+  separate record, not a blob rewrite: the compactor transcodes the
+  object's bytes when it next rewrites the segment, so ladder demotion
+  never adds its own I/O pass.  An intent is *pending* only while it is
+  newer than the object record and targets a colder rung — a fresh put
+  (higher lsn) silently invalidates it.
 
 Full-state ``RSTATE`` records (instead of incremental demote/readmit
 deltas) make recovery order-free within the namespace: the highest-lsn
@@ -47,15 +55,20 @@ TOMB = 3            # payload = b'' (delete / demote)
 #: record kinds — recipe namespace
 RSTATE = 4          # payload = JSON regen-tier state
 RDEL = 5            # payload = b''
+#: record kinds — ladder namespace
+RUNG = 6            # payload = struct '<B' target rate-distortion rung
 
 OBJECT_KINDS = (BLOB, SIZE, TOMB)
 RECIPE_KINDS = (RSTATE, RDEL)
+LADDER_KINDS = (RUNG,)
 
 _HEADER = struct.Struct("<4sIQBqI")      # magic, crc, lsn, kind, oid, plen
 HEADER_BYTES = _HEADER.size
 _TAIL = struct.Struct("<QBqI")           # the crc-covered header fields
 
-_SIZE_PAYLOAD = struct.Struct("<d")
+_SIZE_PAYLOAD = struct.Struct("<d")      # legacy (pre-ladder) SIZE payload
+_SIZE_RUNG_PAYLOAD = struct.Struct("<dB")
+_RUNG_PAYLOAD = struct.Struct("<B")
 
 
 def record_bytes(payload_len: int) -> int:
@@ -70,12 +83,28 @@ def pack_record(lsn: int, kind: int, oid: int, payload: bytes) -> bytes:
     return _HEADER.pack(MAGIC, crc, lsn, kind, oid, len(payload)) + payload
 
 
-def pack_size_payload(nbytes: float) -> bytes:
-    return _SIZE_PAYLOAD.pack(float(nbytes))
+def pack_size_payload(nbytes: float, rung: int = 0) -> bytes:
+    return _SIZE_RUNG_PAYLOAD.pack(float(nbytes), int(rung) & 0xFF)
 
 
 def unpack_size_payload(payload: bytes) -> float:
-    return float(_SIZE_PAYLOAD.unpack(payload)[0])
+    return float(_SIZE_PAYLOAD.unpack_from(payload)[0])
+
+
+def unpack_size_rung(payload: bytes) -> Tuple[float, int]:
+    """(nbytes, rung) of a SIZE payload; legacy 8-byte payloads -> rung 0."""
+    if len(payload) >= _SIZE_RUNG_PAYLOAD.size:
+        nbytes, rung = _SIZE_RUNG_PAYLOAD.unpack_from(payload)
+        return float(nbytes), int(rung)
+    return float(_SIZE_PAYLOAD.unpack_from(payload)[0]), 0
+
+
+def pack_rung_payload(rung: int) -> bytes:
+    return _RUNG_PAYLOAD.pack(int(rung) & 0xFF)
+
+
+def unpack_rung_payload(payload: bytes) -> int:
+    return int(_RUNG_PAYLOAD.unpack_from(payload)[0])
 
 
 @dataclasses.dataclass(frozen=True)

@@ -178,9 +178,12 @@ class LatentBox:
     # -- lifecycle -----------------------------------------------------------
     def delete(self, oid: int) -> bool:
         """Remove the object from every tier (pixels, latents, durable,
-        recipe) and forget its metadata."""
+        recipe) and forget its metadata.  The metadata is dropped only
+        after the backend delete returns: a raising backend must not
+        silently lose the object's metadata."""
+        found = self._backend.delete(int(oid))
         self._meta.pop(int(oid), None)
-        return self._backend.delete(int(oid))
+        return found
 
     def stat(self, oid: int) -> Optional[ObjectStat]:
         st = self._backend.stat(int(oid))
@@ -188,10 +191,17 @@ class LatentBox:
             st.meta = self._meta.get(int(oid))
         return st
 
-    def demote(self, oid: int) -> bool:
-        """Durability-class demotion: drop the durable latent, keep the
-        recipe.  The next cold read regenerates (and re-admits) it."""
-        return self._backend.demote(int(oid))
+    def demote(self, oid: int, rung=None) -> bool:
+        """Demote the object down the rate-distortion ladder.
+
+        Default (``rung=None`` / ``"recipe"``): the pre-ladder behavior —
+        drop the durable latent entirely, keep only the recipe; the next
+        cold read regenerates (and re-admits) it.  A lossy rung (index
+        1-3 or name ``"high"``/``"mid"``/``"low"``) instead re-encodes
+        the durable latent at that colder quality: the object keeps its
+        durable class, just cheaper bytes (on a persistent box the
+        transcode piggybacks on the next compaction pass)."""
+        return self._backend.demote(int(oid), rung)
 
     def promote(self, oid: int) -> bool:
         """Undo a demotion ahead of traffic: regenerate the latent into

@@ -46,15 +46,17 @@ import json
 import os
 from typing import Any, Dict, Iterator, Optional, Tuple
 
-from repro.store.durable.log import NS_OBJECT, NS_RECIPE, SegmentLog
-from repro.store.durable.segment import (BLOB, RDEL, RSTATE, SIZE, TOMB,
-                                         pack_record, pack_size_payload,
-                                         scan_records, unpack_size_payload)
+from repro.store.durable.log import (NS_OBJECT, NS_RECIPE, NS_RUNG,
+                                     SegmentLog)
+from repro.store.durable.segment import (BLOB, RDEL, RSTATE, RUNG, SIZE,
+                                         TOMB, pack_record,
+                                         pack_size_payload, scan_records,
+                                         unpack_size_payload)
 
 HWM_FILE = "HWM.json"
 
 _NS_OF = {BLOB: NS_OBJECT, SIZE: NS_OBJECT, TOMB: NS_OBJECT,
-          RSTATE: NS_RECIPE, RDEL: NS_RECIPE}
+          RSTATE: NS_RECIPE, RDEL: NS_RECIPE, RUNG: NS_RUNG}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -93,7 +95,8 @@ def pack_state_records(oid: int, store, regen, lsn: int) -> bytes:
         parts.append(pack_record(lsn, BLOB, oid, store.get(oid)))
     else:
         parts.append(pack_record(lsn, SIZE, oid,
-                                 pack_size_payload(st["nbytes"])))
+                                 pack_size_payload(st["nbytes"],
+                                                   st.get("rung") or 0)))
     state = regen.state_of(oid)
     if state is None:
         parts.append(pack_record(lsn + 1, RDEL, oid, b""))

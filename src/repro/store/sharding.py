@@ -66,8 +66,11 @@ from repro.core.regen_tier import Recipe
 from repro.core.router import ConsistentHashRing, parse_node_index
 from repro.store.api import (REGEN_MISS, GetResult, ObjectStat, PutResult,
                              StoreConfig)
-from repro.store.durable.segment import (BLOB, RDEL, RSTATE, SIZE, TOMB,
-                                         scan_records, unpack_size_payload)
+from repro.compression.ladder import resolve_rung
+from repro.store.durable.segment import (BLOB, RDEL, RSTATE, RUNG, SIZE,
+                                         TOMB, scan_records,
+                                         unpack_rung_payload,
+                                         unpack_size_rung)
 from repro.store.faults import FaultEvent, FaultPlan
 from repro.store.replication import (HedgeConfig, LogReplicaHolder,
                                      MemoryReplica, pack_state_records)
@@ -568,8 +571,13 @@ class ShardedLatentBox:
             if r.kind == BLOB:
                 backend.store.put(r.oid, r.payload)
             elif r.kind == SIZE:
-                backend.store.put_size(r.oid,
-                                       unpack_size_payload(r.payload))
+                nbytes, rung = unpack_size_rung(r.payload)
+                backend.store.put_size(r.oid, nbytes, rung=rung)
+            elif r.kind == RUNG:
+                # memory backends apply ladder intents eagerly; a target
+                # at/above the current rung is already-applied state
+                backend.store.set_target_rung(
+                    r.oid, unpack_rung_payload(r.payload))
             elif r.kind == TOMB:
                 backend.store.delete(r.oid)
             elif r.kind == RSTATE:
@@ -938,9 +946,10 @@ class ShardedLatentBox:
         src.delete(oid)
         if st is not None:
             if blob is not None:
-                dst.store.put(oid, blob)
+                dst.store.put(oid, blob)     # rung travels in the bytes
             else:
-                dst.store.put_size(oid, nbytes)
+                dst.store.put_size(oid, nbytes,
+                                   rung=st.get("rung") or 0)
         if recipe_nbytes is not None:
             dst.regen.put(oid, nbytes, recipe=recipe,
                           recipe_nbytes=recipe_nbytes,
@@ -1137,12 +1146,15 @@ class ShardedLatentBox:
                 self._checkpoint_source(sid)
         return found
 
-    def demote(self, oid: int) -> bool:
+    def demote(self, oid: int, rung=None) -> bool:
         oid = int(oid)
         sid = self.shard_of(oid)
-        found = self._acting_backend(sid).demote(oid)
+        found = self._acting_backend(sid).demote(oid, rung)
         if found and self.replication > 1:
-            self._journal.setdefault(sid, []).append(("x", oid))
+            if resolve_rung(rung).is_recipe:
+                # recipe demotion drops cached copies cluster-wide; a
+                # lossy-rung demotion leaves caches alone by design
+                self._journal.setdefault(sid, []).append(("x", oid))
             self._forward(oid, sid)
             if not self.cfg.write_behind:
                 self._checkpoint_source(sid)

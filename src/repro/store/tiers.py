@@ -4,6 +4,11 @@ A tier is one durability/performance class in the walk
 
     pixel cache -> latent cache -> durable latent store -> recipe store
 
+The durable class is no longer a single codec setting: its latents sit
+on a rate-distortion ladder (lossless -> high -> mid -> low lossy rungs,
+see :mod:`repro.compression.ladder`), and the recipe store is the
+ladder's final rung — zero latent bytes, full regeneration on read.
+
 Each tier answers five questions: does it hold an object (``contains``),
 can it serve a lookup (``load`` — the mutating cascade step: LRU touches,
 promotion counters, regen detection), how does an object enter it
@@ -163,6 +168,13 @@ class DurableTier(Tier):
     ``StoreConfig.data_dir`` — in which case every ``store``/``evict``
     here is an append-only record (blob or tombstone) in the same
     crash-recoverable segment log the recipe tier journals through.
+
+    Durable latents are NOT lossless-only: each object sits at a
+    rate-distortion rung (:mod:`repro.compression.ladder`), descending
+    via :meth:`set_target_rung` as it cools.  On the segment log the
+    re-encode piggybacks on compaction; in memory it applies eagerly.
+    Whatever the rung, the object classifies as the same ``FULL_MISS``
+    durable fetch — only the recipe rung changes the walk.
     """
 
     name = "durable"
@@ -179,11 +191,12 @@ class DurableTier(Tier):
         return TierHit(self.name, FULL_MISS, needs_fetch=True)
 
     def store(self, oid: int, blob: Optional[bytes] = None,
-              nbytes: Optional[float] = None, **_kw) -> None:
+              nbytes: Optional[float] = None, rung: int = 0,
+              **_kw) -> None:
         if blob is not None:
-            self.backing.put(oid, blob)
+            self.backing.put(oid, blob)             # blob carries its rung
         else:
-            self.backing.put_size(oid, float(nbytes))
+            self.backing.put_size(oid, float(nbytes), int(rung))
 
     def evict(self, oid: int) -> bool:
         found = self.backing.delete(oid)
@@ -191,14 +204,26 @@ class DurableTier(Tier):
             self._notify_evict(oid)
         return found
 
+    # -- rate-distortion ladder ----------------------------------------------
+    def rung_of(self, oid: int) -> Optional[int]:
+        return self.backing.rung_of(oid)
+
+    def target_rung_of(self, oid: int) -> Optional[int]:
+        return self.backing.target_rung_of(oid)
+
+    def set_target_rung(self, oid: int, rung: int) -> bool:
+        return self.backing.set_target_rung(oid, rung)
+
     @property
     def resident_bytes(self) -> float:
         return self.backing.total_bytes
 
 
 class RecipeTier(Tier):
-    """The coldest durability class: (prompt, seed, model) recipes that
-    regenerate the latent bit-exactly when every byte-bearing tier misses.
+    """The coldest durability class — the ladder's final rung: (prompt,
+    seed, model) recipes that regenerate the latent bit-exactly when
+    every byte-bearing tier misses.  Near-zero stored bytes, one full
+    generation on read.
 
     On a persistent box the wrapped :class:`RegenTierStore` journals every
     state mutation (put / demote / readmit / delete) as a full-state

@@ -20,6 +20,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Callable, Dict, List, Optional
 
+from repro.compression.ladder import resolve_rung
 from repro.core.dual_cache import IMAGE_HIT, LATENT_HIT, FULL_MISS
 from repro.core.router import Router
 from repro.store.api import REGEN_MISS, StoreConfig
@@ -143,14 +144,32 @@ class TierWalk:
             found |= self.recipes.evict(oid)
         return found
 
-    def demote(self, oid: int) -> bool:
-        """Durability-class demotion: drop the durable latent and every
-        cached copy, keep the recipe.  Refuses when there is no recipe to
-        regenerate from (that would strand the object)."""
+    def demote(self, oid: int, rung=None) -> bool:
+        """Durability-class demotion down the rate-distortion ladder.
+
+        ``rung=None`` (or ``"recipe"``) keeps the pre-ladder meaning —
+        all the way down: drop the durable latent and every cached copy,
+        keep only the recipe.  A lossy rung (index/name) instead asks the
+        durable tier to re-encode the object at that colder quality: the
+        object stays durable (identical ``FULL_MISS`` classification on
+        every backend — the segment log defers the transcode to its next
+        compaction pass, the memory backend applies it eagerly), and
+        cached copies are deliberately left alone: a cached latent is
+        merely stale-at-higher-quality, which natural eviction resolves.
+        Refuses (returns False) for the lossless rung, for unknown
+        objects, and for targets not strictly colder than the current
+        rung."""
+        r = resolve_rung(rung)
+        if not r.is_recipe:
+            if r.index <= 0:
+                return False              # "demote to lossless" is a no-op
+            if not self.durable.contains(oid):
+                return False
+            return self.durable.set_target_rung(oid, r.index)
         if self.recipes is None or self.recipes.recipe_of(oid) is None:
-            return False
+            return False                  # no recipe: would strand the object
         if not self.durable.contains(oid):
-            return False                      # already demoted / unknown
+            return False                  # already demoted / unknown
         self.durable.evict(oid)
         self.recipes.regen.demote(oid)
         for tier in self.caches:

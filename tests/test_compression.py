@@ -1,31 +1,76 @@
-"""Latent codec: bit-exact roundtrip (hypothesis), ratio sanity, PNG proxy,
-lossy codec quality ordering, PSNR/SSIM metric properties."""
+"""Latent codec: bit-exact roundtrip (hypothesis when available, plus
+deterministic fallbacks), lossy-ladder rate/fidelity properties, ratio
+sanity, PNG proxy, lossy pixel codec quality ordering + odd-shape
+padding, PSNR/SSIM metric properties."""
 
 import numpy as np
 import pytest
 
-pytest.importorskip("hypothesis")   # dev-only dep, see requirements-dev.txt
-from hypothesis import given, settings
-from hypothesis import strategies as st
-from hypothesis.extra import numpy as hnp
+try:                                # dev-only dep, see requirements-dev.txt
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    from hypothesis.extra import numpy as hnp
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
 
-from repro.compression.latentcodec import (compress_latent, compression_ratio,
+from repro.compression.ladder import (RECIPE_RUNG, RUNGS, encode_at,
+                                      resolve_rung, transcode_blob)
+from repro.compression.latentcodec import (blob_rung, compress_latent,
+                                           compress_latent_lossy,
+                                           compression_ratio,
                                            decompress_latent)
 from repro.compression.lossy import jpeg_like
 from repro.compression.metrics import psnr, ssim
 from repro.compression.png_proxy import png_like_size
 
+#: The lossy rungs of the ladder, hottest first (indices 1..3).
+LOSSY_RUNGS = [r for r in RUNGS if r.lossy]
 
-@settings(max_examples=60, deadline=None)
-@given(st.sampled_from([np.float16, np.float32, np.int16, np.uint16,
-                        np.int32]).flatmap(
-    lambda dt: hnp.arrays(dtype=dt,
-                          shape=hnp.array_shapes(min_dims=1, max_dims=3,
-                                                 min_side=1, max_side=24))))
-def test_roundtrip_bit_exact(arr):
-    out = decompress_latent(compress_latent(arr))
-    assert out.dtype == arr.dtype and out.shape == arr.shape
-    assert np.array_equal(arr, out, equal_nan=True)
+
+def _smooth_latent(rng, shape=(4, 24, 24), dtype=np.float16):
+    """A latent-like tensor with spatial structure (not pure noise), so
+    quantization error is the dominant, well-ordered distortion."""
+    base = np.cumsum(rng.standard_normal(shape), axis=-1)
+    return (base / max(1.0, float(np.max(np.abs(base))))).astype(dtype)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=60, deadline=None)
+    @given(st.sampled_from([np.float16, np.float32, np.int16, np.uint16,
+                            np.int32]).flatmap(
+        lambda dt: hnp.arrays(dtype=dt,
+                              shape=hnp.array_shapes(min_dims=1, max_dims=3,
+                                                     min_side=1,
+                                                     max_side=24))))
+    def test_roundtrip_bit_exact(arr):
+        out = decompress_latent(compress_latent(arr))
+        assert out.dtype == arr.dtype and out.shape == arr.shape
+        assert np.array_equal(arr, out, equal_nan=True)
+
+    @settings(max_examples=40, deadline=None)
+    @given(st.sampled_from([np.float16, np.float32]).flatmap(
+        lambda dt: hnp.arrays(
+            dtype=dt,
+            shape=hnp.array_shapes(min_dims=1, max_dims=3, min_side=1,
+                                   max_side=16),
+            elements=st.floats(-100, 100, width=16))),
+        st.sampled_from([r.index for r in RUNGS if r.lossy]))
+    def test_lossy_roundtrip_shape_dtype(arr, rung):
+        blob = encode_at(arr, rung)
+        out = decompress_latent(blob)
+        assert out.dtype == arr.dtype and out.shape == arr.shape
+        assert blob_rung(blob) == rung
+
+
+def test_roundtrip_bit_exact_deterministic(rng):
+    """Hypothesis-free floor: the property above on a fixed grid."""
+    for dt in (np.float16, np.float32, np.int16, np.uint16, np.int32):
+        for shape in ((1,), (7,), (5, 3), (3, 17, 2), (16, 8, 8)):
+            arr = (rng.standard_normal(shape) * 50).astype(dt)
+            out = decompress_latent(compress_latent(arr))
+            assert out.dtype == arr.dtype and out.shape == arr.shape
+            assert np.array_equal(arr, out, equal_nan=True)
 
 
 def test_special_values_roundtrip():
@@ -59,6 +104,68 @@ def test_png_proxy_smooth_vs_noise(rng):
     assert png_like_size(smooth) < png_like_size(noise) / 3
 
 
+class TestLossyLatentLadder:
+    """Rate-distortion properties of the quantized byte-plane codec that
+    backs durable rungs 1-3 (``repro.compression.ladder``)."""
+
+    def test_decode_shape_dtype_preserved(self, rng):
+        for dt in (np.float16, np.float32, np.float64):
+            for shape in ((3,), (5, 7), (4, 11, 13)):
+                arr = _smooth_latent(rng, shape, dt)
+                for r in LOSSY_RUNGS:
+                    out = decompress_latent(encode_at(arr, r))
+                    assert out.dtype == arr.dtype
+                    assert out.shape == arr.shape
+
+    def test_bytes_monotone_non_increasing_down_ladder(self, rng):
+        arr = _smooth_latent(rng, (8, 32, 32))
+        sizes = [len(compress_latent(arr))] + \
+            [len(encode_at(arr, r)) for r in LOSSY_RUNGS]
+        for hotter, colder in zip(sizes, sizes[1:]):
+            assert colder <= hotter, sizes
+
+    def test_psnr_monotone_non_increasing_down_ladder(self, rng):
+        arr = _smooth_latent(rng, (8, 32, 32), np.float32)
+        span = float(np.ptp(arr)) or 1.0
+        psnrs = [psnr(arr, decompress_latent(encode_at(arr, r)),
+                      data_range=span) for r in LOSSY_RUNGS]
+        for hotter, colder in zip(psnrs, psnrs[1:]):
+            assert colder <= hotter + 1e-9, psnrs
+
+    def test_rung_tag_travels_in_blob(self, rng):
+        arr = _smooth_latent(rng)
+        assert blob_rung(compress_latent(arr)) == 0
+        for r in LOSSY_RUNGS:
+            assert blob_rung(encode_at(arr, r)) == r.index
+
+    def test_transcode_only_descends(self, rng):
+        arr = _smooth_latent(rng)
+        mid = encode_at(arr, "mid")
+        # colder target: re-encodes (strictly smaller-or-equal, new tag)
+        low = transcode_blob(mid, "low")
+        assert blob_rung(low) == resolve_rung("low").index
+        assert len(low) <= len(mid)
+        # hotter (or equal) target: identity — the ladder never re-inflates
+        assert transcode_blob(mid, "high") is mid
+        assert transcode_blob(mid, "mid") is mid
+
+    def test_degenerate_inputs(self):
+        const = np.full((4, 6), 0.75, np.float32)
+        out = decompress_latent(encode_at(const, "low"))
+        assert np.allclose(out, const, atol=1e-6)
+        weird = np.array([np.nan, np.inf, -np.inf, 0.5], np.float32)
+        out = decompress_latent(encode_at(weird, "mid"))
+        assert out.shape == weird.shape and np.all(np.isfinite(out))
+
+    def test_non_float_rejected(self):
+        with pytest.raises(TypeError):
+            compress_latent_lossy(np.arange(8, dtype=np.int32), 8)
+
+    def test_recipe_rung_stores_no_bytes(self, rng):
+        with pytest.raises(ValueError):
+            encode_at(_smooth_latent(rng), RECIPE_RUNG)
+
+
 class TestLossy:
     def test_quality_ordering(self, rng):
         img = (np.clip(np.cumsum(rng.standard_normal((64, 64, 3)), axis=0)
@@ -68,6 +175,24 @@ class TestLossy:
         assert s50 < s95
         assert psnr(img, r95) > psnr(img, r50)
         assert ssim(img, r95) > ssim(img, r50)
+
+    def test_odd_shapes_pad_and_crop(self, rng):
+        """Regression: jpeg_like used to hard-assert 8-aligned H/W; it
+        now replicate-pads internally and crops the reconstruction."""
+        for shape in ((100, 100, 3), (7, 13, 3), (65, 8, 3), (8, 9, 3)):
+            img = (np.clip(np.cumsum(rng.standard_normal(shape), axis=0)
+                           * 10 + 128, 0, 255)).astype(np.uint8)
+            size, rec = jpeg_like(img, 90)
+            assert rec.shape == img.shape and rec.dtype == np.uint8
+            assert size > 0
+            assert psnr(img, rec) > 25.0
+
+    def test_aligned_shapes_unchanged_by_padding_path(self, rng):
+        img = (np.clip(np.cumsum(rng.standard_normal((64, 64, 3)), axis=0)
+                       * 10 + 128, 0, 255)).astype(np.uint8)
+        s1, r1 = jpeg_like(img, 80)
+        s2, r2 = jpeg_like(img, 80)
+        assert s1 == s2 and np.array_equal(r1, r2)
 
 
 class TestMetrics:

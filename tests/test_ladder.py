@@ -1,0 +1,403 @@
+"""Rate-distortion ladder: quality-tiered durable latents.
+
+Three layers under test:
+
+* **Log mechanics** — ``RUNG`` intent records in the segment log: pending
+  until the compactor rewrites the blob's segment, invalidated by fresh
+  puts, surviving reopen (manifest and full-scan recovery), and dropped
+  when unsatisfiable so ladder victim selection terminates.
+* **Compaction piggyback** — re-encoding rides along with segment
+  rewrites (no standalone re-encode I/O pass): blob payloads transcode
+  down the ladder, size-only registrations rescale, accounting counters
+  move.
+* **Store semantics** — ``LatentBox.demote(oid, rung=...)`` end to end:
+  eager application on memory backends, deferred-to-compaction on
+  persistent boxes, rung-by-rung cooling down to recipe-only regen with
+  every rung meeting its fidelity floor, identical hit classification
+  across the {1,4}-shard x {sim,engine} matrix, and rung state surviving
+  shard migration on both the memory and segment-shipped paths.
+"""
+
+import numpy as np
+import pytest
+
+from conftest import classify, fill_and_demote, make_box
+from repro.compression.ladder import (LOSSLESS_RUNG, RECIPE_RUNG, RUNGS,
+                                      LadderPolicy, encode_at, resolve_rung,
+                                      scaled_nbytes)
+from repro.compression.latentcodec import blob_rung, compress_latent
+from repro.compression.metrics import psnr, ssim
+from repro.core.regen_tier import Recipe
+from repro.store import FULL_MISS, LatentBox, REGEN_MISS, StoreConfig
+from repro.store.durable.compact import Compactor
+from repro.store.durable.log import MANIFEST, SegmentLog
+
+
+def _latent(rng, shape=(8, 8, 4)):
+    base = np.cumsum(rng.standard_normal(shape), axis=0)
+    return (base / max(1.0, float(np.max(np.abs(base))))).astype(np.float16)
+
+
+class TestRungResolution:
+    def test_lookup_forms(self):
+        assert resolve_rung(2).name == "mid"
+        assert resolve_rung("low").index == 3
+        assert resolve_rung(RUNGS[1]) is RUNGS[1]
+        assert resolve_rung(None).is_recipe     # pre-ladder demote() meaning
+
+    def test_invalid(self):
+        with pytest.raises(ValueError):
+            resolve_rung("shiny")
+        with pytest.raises(ValueError):
+            resolve_rung(17)
+
+    def test_ladder_shape(self):
+        assert RUNGS[LOSSLESS_RUNG].bits is None
+        assert RUNGS[RECIPE_RUNG].is_recipe
+        scales = [r.scale for r in RUNGS]
+        assert scales == sorted(scales, reverse=True)
+        bits = [r.bits for r in RUNGS if r.lossy]
+        assert bits == sorted(bits, reverse=True)
+
+    def test_scaled_nbytes(self):
+        assert scaled_nbytes(1000.0, 0, 2) == pytest.approx(500.0)
+        assert scaled_nbytes(500.0, 2, 3) == pytest.approx(380.0)
+        assert scaled_nbytes(0.0, 0, 3) == 0.0
+
+    def test_policy_picks_coldest_crossed_trigger(self):
+        pol = LadderPolicy()
+        assert pol.rung_for_idle(0.5) is None          # nothing crossed
+        assert pol.rung_for_idle(1.5) == 1
+        assert pol.rung_for_idle(7.0) == 3
+        assert pol.rung_for_idle(20.0) == RECIPE_RUNG
+        assert pol.rung_for_idle(7.0, cur=3) is None   # never re-inflate
+        assert LadderPolicy(enabled=False).rung_for_idle(99.0) is None
+
+
+class TestLogLadderMechanics:
+    def _log(self, tmp_path, **kw):
+        kw.setdefault("segment_bytes", 400)
+        return SegmentLog(str(tmp_path / "log"), **kw)
+
+    def test_intent_pending_then_applied_by_compaction(self, tmp_path, rng):
+        log = self._log(tmp_path)
+        z = _latent(rng)
+        blobs = {oid: encode_at(z + oid / 10, 0) for oid in (1, 2, 3)}
+        for oid, b in blobs.items():
+            log.put_blob(oid, b)
+        assert log.rung_of(1) == 0 and log.target_rung_of(1) is None
+        log.set_target_rung(1, 2)
+        assert log.target_rung_of(1) == 2
+        assert log.pending_rungs() == {1: 2}
+        log.put_blob(9, bytes(500))         # roll: seal the pending segment
+        before = len(log.get_blob(1))
+        assert Compactor(log, live_frac_threshold=1.0).compact_all() > 0
+        assert log.target_rung_of(1) is None            # intent consumed
+        assert log.rung_of(1) == 2
+        assert blob_rung(log.get_blob(1)) == 2
+        assert len(log.get_blob(1)) < before
+        assert log.reencoded_records >= 1
+        assert log.reencode_bytes_saved > 0
+        # untouched neighbors stay lossless and bit-identical
+        assert log.get_blob(2) == blobs[2] and log.rung_of(2) == 0
+
+    def test_fresh_put_invalidates_intent(self, tmp_path, rng):
+        log = self._log(tmp_path)
+        log.put_blob(1, encode_at(_latent(rng), 0))
+        log.set_target_rung(1, 3)
+        log.put_blob(1, encode_at(_latent(rng) * 2, 0))  # re-put: hot again
+        assert log.target_rung_of(1) is None
+        log.put_blob(9, bytes(500))
+        Compactor(log, live_frac_threshold=1.0).compact_all()
+        assert log.rung_of(1) == 0                       # never demoted
+
+    def test_size_records_rescale(self, tmp_path):
+        log = self._log(tmp_path)
+        log.put_size(1, 10_000.0)
+        log.set_target_rung(1, 2)
+        log.put_blob(9, bytes(500))          # overflow the active segment...
+        log.put_blob(10, b"x")               # ...and roll it sealed
+        Compactor(log, live_frac_threshold=1.0).compact_all()
+        assert log.rung_of(1) == 2
+        assert log.size_of(1) == pytest.approx(5_000.0)
+
+    @pytest.mark.parametrize("drop_manifest", [False, True])
+    def test_rung_and_intent_survive_reopen(self, tmp_path, rng,
+                                            drop_manifest):
+        log = self._log(tmp_path)
+        log.put_blob(1, encode_at(_latent(rng), 0))
+        log.put_size(2, 8_000.0)
+        log.set_target_rung(1, 1)
+        log.set_target_rung(2, 3)
+        log.put_blob(9, bytes(500))
+        Compactor(log, live_frac_threshold=1.0).compact_all()
+        log.set_target_rung(1, 3)            # fresh, still-pending intent
+        log.close()
+        if drop_manifest:                    # force full-scan recovery
+            (tmp_path / "log" / MANIFEST).unlink()
+        log2 = SegmentLog(str(tmp_path / "log"))
+        assert log2.rung_of(1) == 1 and log2.target_rung_of(1) == 3
+        assert log2.rung_of(2) == 3 and log2.target_rung_of(2) is None
+        assert log2.size_of(2) == pytest.approx(8_000.0 * 0.38)
+
+    def test_unsatisfiable_intent_dropped_and_terminates(self, tmp_path):
+        log = self._log(tmp_path)
+        log.put_blob(1, b"\x00opaque-not-a-codec-payload" * 8)
+        log.set_target_rung(1, 2)
+        log.put_blob(9, bytes(500))
+        log.put_blob(10, b"x")               # roll the pending segment sealed
+        comp = Compactor(log, live_frac_threshold=1.0)
+        comp.compact_all()                   # must terminate
+        assert log.target_rung_of(1) is None  # intent dropped, not retried
+        assert comp.step() == 0              # steady state: no ladder victim
+
+    def test_ladder_victim_earns_rewrite_without_dead_bytes(self, tmp_path,
+                                                           rng):
+        log = self._log(tmp_path, segment_bytes=10_000)
+        for oid in range(4):
+            log.put_blob(oid, encode_at(_latent(rng) + oid, 0))
+        log.set_target_rung(2, 3)
+        log._seal_active()
+        comp = Compactor(log, live_frac_threshold=0.6)
+        assert comp._victim() is None        # 100% live: no dead-byte case
+        assert comp.step() == 1              # pending bytes earn the rewrite
+        assert log.rung_of(2) == 3 and log.target_rung_of(2) is None
+
+    def test_export_ingest_preserves_pending_intent(self, tmp_path, rng):
+        src = SegmentLog(str(tmp_path / "src"), segment_bytes=400)
+        dst = SegmentLog(str(tmp_path / "dst"), segment_bytes=400)
+        src.put_blob(1, encode_at(_latent(rng), 0))
+        src.put_size(2, 6_000.0, rung=1)
+        src.set_target_rung(1, 2)
+        applied = dst.ingest_segment(src.export_records([1, 2]))
+        assert applied["rungs"] == {1: 2}
+        assert dst.target_rung_of(1) == 2    # still pending at the new home
+        assert dst.rung_of(2) == 1           # applied rung travels in SIZE
+        dst.put_blob(9, bytes(500))
+        Compactor(dst, live_frac_threshold=1.0).compact_all()
+        assert dst.rung_of(1) == 2
+
+
+class TestMemoryEagerLadder:
+    """Memory backends have no compactor to piggyback on: demotion
+    applies eagerly and ``target_rung`` never reads as pending."""
+
+    def test_sim_box_rescales_bytes_eagerly(self):
+        box = LatentBox.simulated(StoreConfig(n_nodes=1))
+        box.put(1, nbytes=10_000.0, recipe=Recipe(seed=1, height=16,
+                                                  width=16))
+        assert box.demote(1, "mid")
+        st = box.stat(1)
+        assert st.rung == 2 and st.rung_name == "mid"
+        assert st.target_rung is None
+        assert st.durable_bytes == pytest.approx(5_000.0)
+        assert box.demote(1, 3)
+        assert box.stat(1).durable_bytes == pytest.approx(3_800.0)
+
+    def test_refuses_uphill_and_noop_demotes(self):
+        box = LatentBox.simulated(StoreConfig(n_nodes=1))
+        box.put(1, nbytes=1_000.0, recipe=Recipe(seed=1, height=16,
+                                                 width=16))
+        assert box.demote(1, "low")
+        assert not box.demote(1, "high")     # ladder only descends
+        assert not box.demote(1, "low")      # not strictly colder
+        assert not box.demote(1, 0)          # "demote to lossless" is a no-op
+        assert not box.demote(999, "mid")    # unknown object
+
+    def test_classification_unchanged_by_lossy_rungs(self):
+        box = LatentBox.simulated(StoreConfig(n_nodes=1))
+        box.put(1, nbytes=1_000.0, recipe=Recipe(seed=1, height=16,
+                                                 width=16))
+        box.get(1)
+        assert box.demote(1, "low")
+        # durable fetch before and after: lossy rungs never change the walk
+        box2 = LatentBox.simulated(StoreConfig(n_nodes=1))
+        box2.put(1, nbytes=1_000.0, recipe=Recipe(seed=1, height=16,
+                                                  width=16))
+        box2.get(1)
+        for a, b in zip(box.get_many([1, 1, 1]), box2.get_many([1, 1, 1])):
+            assert a.hit_class == b.hit_class
+        assert box.demote(1)                 # ...only the recipe rung does
+        assert box.get(1).hit_class == REGEN_MISS
+
+
+class TestCoolingTraceEndToEnd:
+    """A persistent engine box cools objects rung-by-rung: every demotion
+    piggybacks on compaction, every rung meets its fidelity floor, the
+    coldest rung serves recipe-only regeneration, and the whole ladder
+    state survives reopen."""
+
+    RES = 16
+
+    def _open(self, path, vae):
+        return LatentBox.open(path, mode="engine", vae=vae,
+                              config=StoreConfig(n_nodes=1,
+                                                 segment_bytes=1_500,
+                                                 compact_live_frac=0.6))
+
+    def _settle(self, box, oid):
+        """Roll the active segment, then compact until the intent applies
+        (bounded: unsatisfied intents would fail the assert below)."""
+        for filler in range(900, 904):
+            box.put(filler, latent=np.zeros((8, 8, 4), np.float16)
+                    + filler / 1e3)
+        for _ in range(12):
+            if box.stat(oid).target_rung is None:
+                break
+            box.backend.store.maybe_compact()
+        assert box.stat(oid).target_rung is None
+
+    def test_descend_ladder_and_regen(self, tmp_path, tiny_vae):
+        path = tmp_path / "box"
+        oid = 42
+        with self._open(path, tiny_vae) as box:
+            box.put(oid, recipe=Recipe(seed=7, height=self.RES,
+                                       width=self.RES))
+            ref = box.get(oid).payload.copy()
+            sizes = [box.stat(oid).durable_bytes]
+        for rung in ("high", "mid", "low"):
+            with self._open(path, tiny_vae) as box:
+                assert box.demote(oid, rung)
+                st = box.stat(oid)
+                assert st.target_rung == resolve_rung(rung).index
+                self._settle(box, oid)
+                st = box.stat(oid)
+                assert st.rung == resolve_rung(rung).index
+                assert st.rung_name == rung
+                sizes.append(st.durable_bytes)
+            # reopen cold: the read decodes the demoted durable bytes
+            with self._open(path, tiny_vae) as box:
+                r = box.get(oid)
+                assert r.hit_class == FULL_MISS
+                floor = resolve_rung(rung)
+                assert psnr(ref, r.payload) >= floor.psnr_floor_db
+                assert ssim(ref, r.payload) >= floor.ssim_floor
+        assert sizes == sorted(sizes, reverse=True), sizes
+        # final rung: recipe-only — near-zero bytes, full regen on read
+        with self._open(path, tiny_vae) as box:
+            assert box.demote(oid)
+            st = box.stat(oid)
+            assert st.demoted and st.durable_bytes == 0.0
+            assert st.rung == RECIPE_RUNG
+        with self._open(path, tiny_vae) as box:
+            r = box.get(oid)
+            assert r.hit_class == REGEN_MISS and r.regenerated
+            np.testing.assert_array_equal(r.payload, ref)
+
+
+TOTAL_NODES = 8
+N_OBJECTS = 24
+
+#: window index -> [(oid, rung), ...] applied before that window is served
+LADDER_PLAN = {2: [(1, "high"), (5, "high")],
+               4: [(1, "mid"), (9, "low")],
+               6: [(5, "low"), (13, "mid")]}
+
+
+def _classify_with_ladder(kind, shards, ids, vae=None, window=8):
+    box = make_box(kind, shards, TOTAL_NODES, vae=vae)
+    fill_and_demote(box, N_OBJECTS)
+    sig, demoted = [], []
+    ids = [int(i) for i in ids]
+    for w, s in enumerate(range(0, len(ids), window)):
+        for oid, rung in LADDER_PLAN.get(w, ()):
+            demoted.append(box.demote(oid, rung))
+        sig += [(r.hit_class, r.node) for r in box.get_many(ids[s:s + window])]
+    assert all(demoted)
+    return sig, box
+
+
+class TestShardConformanceWithLadder:
+    """Interleaved lossy-rung demotes must not perturb the {1,4}-shard x
+    {sim,engine} classification identity."""
+
+    def _ids(self):
+        rng = np.random.default_rng(3)
+        return rng.integers(0, N_OBJECTS, 96)
+
+    def test_sim_1v4_identical(self):
+        ids = self._ids()
+        sig1, _ = _classify_with_ladder("sim", 1, ids)
+        sig4, box4 = _classify_with_ladder("sim", 4, ids)
+        assert sig1 == sig4
+        assert box4.stat(1).rung == resolve_rung("mid").index
+
+    @pytest.mark.slow
+    def test_engine_matches_sim(self, tiny_vae):
+        ids = self._ids()
+        sim_sig, _ = _classify_with_ladder("sim", 1, ids)
+        eng_sig, ebox = _classify_with_ladder("engine", 1, ids,
+                                              vae=tiny_vae)
+        assert sim_sig == eng_sig
+        assert ebox.stat(9).rung == resolve_rung("low").index
+
+
+class TestMigrationCarriesRungs:
+    def test_memory_path_carries_applied_rung(self):
+        box = LatentBox.simulated(StoreConfig(n_nodes=4), shards=2)
+        for oid in range(16):
+            box.put(oid, nbytes=1_000.0,
+                    recipe=Recipe(seed=oid, height=16, width=16))
+            assert box.demote(oid, "mid")
+        rep = box.backend.add_shard()
+        assert rep.n_moved > 0
+        for oid in range(16):
+            st = box.stat(oid)
+            assert st.rung == 2 and st.durable_bytes == pytest.approx(500.0)
+
+    def test_log_path_ships_pending_intents(self, tmp_path):
+        box = LatentBox.open(tmp_path / "cluster", mode="sim",
+                             config=StoreConfig(n_nodes=4,
+                                                segment_bytes=2_000,
+                                                compact_live_frac=0.0),
+                             shards=2)
+        try:
+            for oid in range(16):
+                box.put(oid, nbytes=1_000.0,
+                        recipe=Recipe(seed=oid, height=16, width=16))
+                assert box.demote(oid, "low")   # pending: compaction is off
+            assert all(box.stat(oid).target_rung == 3 for oid in range(16))
+            rep = box.backend.add_shard()
+            assert rep.n_moved > 0
+            # intents survived the segment-shipped migration...
+            assert all(box.stat(oid).target_rung == 3 for oid in range(16))
+            # ...and still apply at the new home when its compactor runs
+            cluster = box.backend
+            for sid in cluster.shard_ids:
+                log = cluster.shards[sid].backend.durable_log
+                log._seal_active()           # stragglers still in the head
+                Compactor(log, live_frac_threshold=1.0).compact_all()
+            for oid in range(16):
+                st = box.stat(oid)
+                assert st.rung == 3 and st.target_rung is None
+                assert st.durable_bytes == pytest.approx(380.0)
+        finally:
+            box.close()
+
+
+class TestDeleteSemantics:
+    """Satellite regression: ``LatentBox.delete`` must not drop metadata
+    before the backend acknowledges the delete."""
+
+    def test_delete_missing_keeps_nothing_and_returns_false(self):
+        box = LatentBox.simulated(StoreConfig(n_nodes=1))
+        assert box.delete(123) is False
+
+    def test_raising_backend_preserves_metadata(self):
+        box = LatentBox.simulated(StoreConfig(n_nodes=1))
+        box.put(1, nbytes=100.0, recipe=Recipe(seed=1, height=16, width=16),
+                meta={"tag": "keep-me"})
+
+        class Boom(Exception):
+            pass
+
+        orig = box.backend.delete
+        def exploding_delete(oid):
+            raise Boom()
+        box.backend.delete = exploding_delete
+        with pytest.raises(Boom):
+            box.delete(1)
+        box.backend.delete = orig
+        assert box.stat(1).meta == {"tag": "keep-me"}   # nothing lost
+        assert box.delete(1) is True
+        assert box.stat(1) is None

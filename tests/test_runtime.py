@@ -102,6 +102,33 @@ class TestCheckpoint:
         with pytest.raises(ValueError):
             mgr.restore({"a": jnp.zeros((3,))})
 
+    def test_clock_injection(self, tmp_path):
+        """Regression: save() used to stamp bare ``time.time()`` into the
+        manifest and commit marker; an injected clock (the
+        ``StoreConfig.clock`` convention) must flow to both."""
+        import json
+        t = [1_234.5]
+        mgr = CheckpointManager(str(tmp_path), clock=lambda: t[0])
+        mgr.save(3, {"a": jnp.zeros((2,))})
+        t[0] = 9_999.0
+        mgr.save(4, {"a": jnp.ones((2,))})
+        for step, want in ((3, 1_234.5), (4, 9_999.0)):
+            d = tmp_path / f"step_{step:09d}"
+            with open(d / "manifest.json") as f:
+                assert json.load(f)["created"] == want
+            assert float((d / "_COMMITTED").read_text()) == want
+
+    def test_default_clock_is_wall_clock(self, tmp_path):
+        import json
+        import time
+        mgr = CheckpointManager(str(tmp_path))
+        before = time.time()
+        mgr.save(1, {"a": jnp.zeros((1,))})
+        after = time.time()
+        with open(tmp_path / "step_000000001" / "manifest.json") as f:
+            created = json.load(f)["created"]
+        assert before <= created <= after
+
 
 class TestData:
     def test_deterministic_across_restarts(self):
