@@ -17,7 +17,11 @@ No GPU here, so three complementary measurements:
     acceptance metric recorded in ``BENCH_decode.json``
     (``python -m benchmarks.run --trajectory``).
 
-``--smoke`` runs (c) at reduced repetitions for CI and writes
+plus (d) the **quantized-decoder A/B**: bf16 vs f32 ``decode_u8`` per
+batch bucket with a freshly tuned kernel cache active, gated at ±1 LSB on
+every bucket (``StoreConfig.weight_dtype`` — :mod:`repro.vae.quantize`).
+
+``--smoke`` runs (c)+(d) at reduced repetitions for CI and writes
 ``BENCH_decode.json`` at the repo root.
 """
 
@@ -174,12 +178,65 @@ def fastpath_rows(rows: Rows, reps: int = 12) -> None:
              derived=fast.stats["decompressions"])
 
 
+def quantized_rows(rows: Rows, smoke: bool = False) -> None:
+    """bf16-vs-f32 ``decode_u8`` A/B per bucket, run with a freshly tuned
+    kernel cache active: per-image ms of both arms from the same run,
+    plus the ±1-LSB gate asserted on every bucket (the admission contract
+    of ``StoreConfig.weight_dtype`` — :mod:`repro.vae.quantize`)."""
+    from repro.kernels import autotune as at
+    from repro.vae import quantize as Q
+    from repro.vae.model import demo_vae
+    latent, buckets = (8, 8, 4), (1, 2, 4, 8)
+    vae = demo_vae(seed=0, weight_dtype="bfloat16")
+    st = Q.decoder_storage(vae._params_for("bfloat16"))
+    rows.add("decode.quantized.bf16_bytes_per_param",
+             derived=round(st["bytes_per_param"], 2))
+    # tune the decode shape set first, so the A/B serves tuned blockings
+    cache = at.TuningCache(None)
+    tuner = at.KernelAutotuner(cache, vae.cfg, weight_dtype="bfloat16",
+                               impl="pallas_interpret", reps=1,
+                               rows_grid=(8, 16), block_cout_grid=(32, 64))
+    for b in buckets:
+        tuner.note_bucket(b, latent)
+    while tuner.pending:
+        tuner.step(8)
+    rows.add("decode.quantized.tuned_keys", derived=len(cache))
+    reps = 3 if smoke else 8
+    with at.active_cache(cache):
+        vae.refresh_kernels()               # retrace under the tuned cache
+        lsb = Q.gate_max_lsb(vae, buckets, latent)
+        for b in buckets:
+            assert lsb[b] <= 1, f"bucket {b} breaches the gate: {lsb[b]} LSB"
+            z = Q.probe_latents(latent, b, seed=5)
+            for prec in ("float32", None):  # warm both arms
+                vae.decode_u8(jnp.asarray(z), precision=prec
+                              ).block_until_ready()
+            tf, tq = [], []
+            for _ in range(reps):           # interleave the arms
+                t0 = time.perf_counter()
+                vae.decode_u8(jnp.asarray(z),
+                              precision="float32").block_until_ready()
+                tf.append(time.perf_counter() - t0)
+                t0 = time.perf_counter()
+                vae.decode_u8(jnp.asarray(z)).block_until_ready()
+                tq.append(time.perf_counter() - t0)
+            mf = float(np.median(tf)) * 1e3
+            mq = float(np.median(tq)) * 1e3
+            rows.add(f"decode.quantized.b{b}.f32_ms", derived=round(mf, 3))
+            rows.add(f"decode.quantized.b{b}.bf16_ms", derived=round(mq, 3))
+            rows.add(f"decode.quantized.b{b}.speedup",
+                     derived=round(mf / max(mq, 1e-9), 2))
+            rows.add(f"decode.quantized.b{b}.max_lsb", derived=lsb[b])
+    vae.refresh_kernels()                   # drop cache-bound compilations
+
+
 def run(smoke: bool = False) -> Rows:
     rows = Rows()
     roofline_rows(rows)
     if not smoke:
         cpu_crosscheck_rows(rows)
     fastpath_rows(rows, reps=4 if smoke else 12)
+    quantized_rows(rows, smoke=smoke)
     return rows
 
 

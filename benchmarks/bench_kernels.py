@@ -1,6 +1,8 @@
 """Kernel-layer microbenchmark: Pallas (interpret) vs jnp oracle
 correctness at bench shapes + the analytic HBM-traffic win of each fusion
-on the decode hot path.  Rows persist as JSON under artifacts/ (local,
+on the decode hot path, plus the quantized-weight (bf16 / int8 in-kernel
+dequant) error sweep and the autotuner's tuned-vs-default A/B
+(:mod:`repro.kernels.autotune`).  Rows persist as JSON under artifacts/ (local,
 untracked); ``--smoke`` additionally writes ``BENCH_kernels.json`` at the
 repo root (the perf-trajectory artifact CI uploads)."""
 
@@ -143,7 +145,69 @@ def run() -> Rows:
     gqa_reread = hq // hkv
     rows.add("kernel.decode_attn.kv_reads_xla", derived=gqa_reread)
     rows.add("kernel.decode_attn.kv_reads_kernel", derived=1)
+
+    quantized_rows(rows)
+    tuned_rows(rows)
     return rows
+
+
+def quantized_rows(rows: Rows) -> None:
+    """weight_dtype sweep per kernel x bucket: in-kernel dequant (bf16 /
+    per-channel int8, :mod:`repro.vae.quantize`) vs the f32 oracle at the
+    demo decoder's dispatch shapes — us/call and max output error."""
+    from repro.kernels import autotune as at
+    from repro.vae.model import DEMO_VAE
+    for bucket in (1, 2):
+        specs = {}
+        for s in at.decode_shapes(DEMO_VAE, (8, 8, 4), bucket):
+            specs.setdefault(s["kernel"], s)     # one shape per kernel
+        for kernel, spec in specs.items():
+            oracle = None
+            for wd in ("float32", "bfloat16", "int8"):
+                thunk = at._make_thunk(spec, wd, "pallas_interpret",
+                                       at.DEFAULTS[kernel])
+                with Timer() as t:
+                    out = np.asarray(jax.block_until_ready(thunk()))
+                if wd == "float32":
+                    oracle = out
+                    continue
+                if out.dtype == np.uint8:        # epilogue compares in LSB
+                    err = int(np.abs(out.astype(np.int16)
+                                     - oracle.astype(np.int16)).max())
+                else:
+                    err = f"{float(np.abs(out - oracle).max()):.1e}"
+                rows.add(f"kernel.quantized.{kernel}.b{bucket}.{wd}.max_err",
+                         t.us, err)
+
+
+def tuned_rows(rows: Rows) -> None:
+    """In-bench autotune A/B over the demo decode shapes: the persisted
+    winner's us vs the measured default's, from the same sweep.  A winner
+    slower than the default can never be recorded silently — candidate 0
+    is always the default and ties keep it, and this bench asserts the
+    invariant on every entry it emits."""
+    from benchmarks.common import ART
+    from repro.kernels import autotune as at
+    from repro.vae.model import DEMO_VAE
+    path = os.path.join(ART, at.CACHE_FILENAME)
+    cache = at.TuningCache.load(path)
+    if len(cache) == 0:                          # cold: defaults serve
+        rows.add("tuning.fallback",
+                 derived="cold cache: hand-picked defaults until tuned")
+    tuner = at.KernelAutotuner(cache, DEMO_VAE, impl="pallas_interpret",
+                               reps=2, rows_grid=(8, 16, 32),
+                               block_cout_grid=(32, 64, 128))
+    for b in (1, 2):
+        tuner.note_bucket(b, (8, 8, 4))
+    while tuner.pending:
+        tuner.step(4)
+    for key, e in sorted(cache.entries.items()):
+        assert e["us"] <= e["default_us"], \
+            f"tuned {key} regressed vs its own default measurement"
+        rows.add(f"kernel.tuned.{key}.us", e["us"],
+                 round(e["default_us"] / max(e["us"], 1e-9), 2))
+        rows.add(f"kernel.tuned.{key}.default_us", e["default_us"])
+    rows.add("kernel.tuned.keys", derived=len(cache))
 
 
 def trajectory(out_dir: str = REPO_ROOT) -> Rows:

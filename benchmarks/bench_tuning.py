@@ -1,5 +1,14 @@
-"""Paper Fig. 9 (adaptive vs oracle static alpha + trajectory) and
-Fig. 11 (sensitivity to Delta, W, tau, h)."""
+"""Cache-split tuning: paper Fig. 9 (the MARGINAL-HIT tuner's adaptive
+alpha vs the oracle-picked static split, plus its trajectory) and Fig. 11
+(sensitivity to Delta, W, tau, h).
+
+This benches ``repro.core.tuner.MarginalHitTuner`` — the *cache policy*
+tuner that moves the image/latent capacity split alpha online.  It is a
+different animal from the *kernel* autotuner
+(:mod:`repro.kernels.autotune`), which sweeps Pallas block/band shapes
+per decode shape and persists winners to a tuning cache; that one is
+benched by ``bench_kernels.tuned_rows`` / ``bench_decode.quantized_rows``
+(see README "Performance")."""
 
 from __future__ import annotations
 

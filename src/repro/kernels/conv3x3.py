@@ -51,7 +51,10 @@ def materialize_bands(x: jax.Array, rows: int) -> jax.Array:
     return bands.reshape(n * nb, rows + 2, width + 2, cin)
 
 
-def _conv_kernel(x_ref, w_ref, b_ref, o_ref, *, rows: int, width: int):
+def _conv_kernel(x_ref, w_ref, *refs, rows: int, width: int):
+    # refs is (b_ref, o_ref) for fp weights, (s_ref, b_ref, o_ref) when a
+    # per-output-channel dequant scale rides along (int8 storage)
+    s_ref, b_ref, o_ref = refs if len(refs) == 3 else (None, *refs)
     x = x_ref[0]                                     # [rows+2, W+2, Cin]
     acc = jnp.zeros_like(o_ref[0], dtype=jnp.float32)  # [rows, W, tc]
     for dy in range(3):
@@ -62,14 +65,23 @@ def _conv_kernel(x_ref, w_ref, b_ref, o_ref, *, rows: int, width: int):
                 patch.reshape(rows * width, -1), tap,
                 (((1,), (0,)), ((), ())),
                 preferred_element_type=jnp.float32).reshape(rows, width, -1)
+    if s_ref is not None:
+        # scale is per output channel, so one fp32 multiply of the summed
+        # accumulator dequantizes all nine taps exactly
+        acc = acc * s_ref[...].astype(jnp.float32)
     o_ref[0] = (acc + b_ref[...].astype(jnp.float32)).astype(o_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("rows", "block_cout", "interpret"))
 def conv3x3(x: jax.Array, w: jax.Array, b: Optional[jax.Array] = None,
             rows: int = 32, block_cout: int = 128,
-            interpret: bool = False) -> jax.Array:
-    """x [N, H, W, Cin], w [3, 3, Cin, Cout] -> [N, H, W, Cout] (SAME)."""
+            interpret: bool = False,
+            w_scale: Optional[jax.Array] = None) -> jax.Array:
+    """x [N, H, W, Cin], w [3, 3, Cin, Cout] -> [N, H, W, Cout] (SAME).
+
+    ``w`` may be stored float32/bfloat16 (cast to fp32 per tap tile) or
+    int8 with ``w_scale`` [Cout] — the per-channel dequant then happens on
+    the accumulator in VMEM, never as an fp32 weight copy in HBM."""
     n, h, width, cin = x.shape
     cout = w.shape[-1]
     if b is None:
@@ -81,18 +93,25 @@ def conv3x3(x: jax.Array, w: jax.Array, b: Optional[jax.Array] = None,
         tc //= 2
     nb = h // rows
 
+    in_specs = [
+        pl.BlockSpec((1, rows + 2, width + 2, cin),
+                     lambda i, c: (i, 0, 0, 0)),
+        pl.BlockSpec((3, 3, cin, tc), lambda i, c: (0, 0, 0, c)),
+    ]
+    operands = [materialize_bands(x, rows), w]
+    if w_scale is not None:
+        in_specs.append(pl.BlockSpec((tc,), lambda i, c: (c,)))
+        operands.append(w_scale)
+    in_specs.append(pl.BlockSpec((tc,), lambda i, c: (c,)))
+    operands.append(b)
+
     out = pl.pallas_call(
         functools.partial(_conv_kernel, rows=rows, width=width),
         grid=(n * nb, cout // tc),
-        in_specs=[
-            pl.BlockSpec((1, rows + 2, width + 2, cin),
-                         lambda i, c: (i, 0, 0, 0)),
-            pl.BlockSpec((3, 3, cin, tc), lambda i, c: (0, 0, 0, c)),
-            pl.BlockSpec((tc,), lambda i, c: (c,)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, rows, width, tc),
                                lambda i, c: (i, 0, 0, c)),
         out_shape=jax.ShapeDtypeStruct((n * nb, rows, width, cout), x.dtype),
         interpret=interpret,
-    )(materialize_bands(x, rows), w, b)
+    )(*operands)
     return out.reshape(n, h, width, cout)

@@ -36,9 +36,12 @@ from repro.kernels.conv3x3 import band_rows, materialize_bands
 from repro.kernels.gn_silu import _stats_kernel
 
 
-def _fused_kernel(x_ref, sum_ref, sq_ref, scale_ref, bias_ref, w_ref, b_ref,
-                  o_ref, *, rows: int, width: int, groups: int, eps: float,
+def _fused_kernel(x_ref, sum_ref, sq_ref, scale_ref, bias_ref, w_ref, *refs,
+                  rows: int, width: int, groups: int, eps: float,
                   count: float, nb: int):
+    # refs is (b_ref, o_ref), or (s_ref, b_ref, o_ref) with a per-output-
+    # channel dequant scale (int8 weight storage)
+    s_ref, b_ref, o_ref = refs if len(refs) == 3 else (None, *refs)
     band = pl.program_id(0) % nb
     x = x_ref[0].astype(jnp.float32)                 # [rows+2, W+2, Cin]
     cin = x.shape[-1]
@@ -70,6 +73,8 @@ def _fused_kernel(x_ref, sum_ref, sq_ref, scale_ref, bias_ref, w_ref, b_ref,
                 patch.reshape(rows * width, -1), tap,
                 (((1,), (0,)), ((), ())),
                 preferred_element_type=jnp.float32).reshape(rows, width, -1)
+    if s_ref is not None:
+        acc = acc * s_ref[...].astype(jnp.float32)
     o_ref[0] = (acc + b_ref[...].astype(jnp.float32)).astype(o_ref.dtype)
 
 
@@ -80,7 +85,8 @@ def gn_silu_conv3x3(x: jax.Array, scale: jax.Array, bias: jax.Array,
                     w: jax.Array, b: Optional[jax.Array] = None,
                     groups: int = 32, eps: float = 1e-6, rows: int = 32,
                     block_cout: int = 128, stats_tile: int = 512,
-                    interpret: bool = False) -> jax.Array:
+                    interpret: bool = False,
+                    w_scale: Optional[jax.Array] = None) -> jax.Array:
     """``conv3x3(silu(group_norm(x)))`` fused.  x [N, H, W, Cin] NHWC,
     scale/bias [Cin], w [3, 3, Cin, Cout], b [Cout] -> [N, H, W, Cout]."""
     n, h, width, cin = x.shape
@@ -113,24 +119,31 @@ def gn_silu_conv3x3(x: jax.Array, scale: jax.Array, bias: jax.Array,
         tc //= 2
     nb = h // rows
 
+    in_specs = [
+        pl.BlockSpec((1, rows + 2, width + 2, cin),
+                     lambda i, c: (i, 0, 0, 0)),
+        pl.BlockSpec((1, groups), lambda i, c: (i // nb, 0)),
+        pl.BlockSpec((1, groups), lambda i, c: (i // nb, 0)),
+        pl.BlockSpec((cin,), lambda i, c: (0,)),
+        pl.BlockSpec((cin,), lambda i, c: (0,)),
+        pl.BlockSpec((3, 3, cin, tc), lambda i, c: (0, 0, 0, c)),
+    ]
+    operands = [materialize_bands(x, rows), sums, sqs, scale, bias, w]
+    if w_scale is not None:
+        in_specs.append(pl.BlockSpec((tc,), lambda i, c: (c,)))
+        operands.append(w_scale)
+    in_specs.append(pl.BlockSpec((tc,), lambda i, c: (c,)))
+    operands.append(b)
+
     out = pl.pallas_call(
         functools.partial(_fused_kernel, rows=rows, width=width,
                           groups=groups, eps=eps,
                           count=float(hw * (cin // groups)), nb=nb),
         grid=(n * nb, cout // tc),
-        in_specs=[
-            pl.BlockSpec((1, rows + 2, width + 2, cin),
-                         lambda i, c: (i, 0, 0, 0)),
-            pl.BlockSpec((1, groups), lambda i, c: (i // nb, 0)),
-            pl.BlockSpec((1, groups), lambda i, c: (i // nb, 0)),
-            pl.BlockSpec((cin,), lambda i, c: (0,)),
-            pl.BlockSpec((cin,), lambda i, c: (0,)),
-            pl.BlockSpec((3, 3, cin, tc), lambda i, c: (0, 0, 0, c)),
-            pl.BlockSpec((tc,), lambda i, c: (c,)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, rows, width, tc),
                                lambda i, c: (i, 0, 0, c)),
         out_shape=jax.ShapeDtypeStruct((n * nb, rows, width, cout), x.dtype),
         interpret=interpret,
-    )(materialize_bands(x, rows), sums, sqs, scale, bias, w, b)
+    )(*operands)
     return out.reshape(n, h, width, cout)

@@ -63,11 +63,14 @@ def phase_weights(w: jax.Array) -> jax.Array:
     return jnp.stack(rows)
 
 
-def _upsample_conv_kernel(x_ref, w_ref, b_ref, o_ref, *, rows: int,
-                          width: int):
+def _upsample_conv_kernel(x_ref, w_ref, *refs, rows: int, width: int):
+    # refs is (b_ref, o_ref), or (s_ref, b_ref, o_ref) with a per-output-
+    # channel dequant scale (int8 weight storage)
+    s_ref, b_ref, o_ref = refs if len(refs) == 3 else (None, *refs)
     x = x_ref[0]                                     # [rows+2, W+2, Cin]
     tc = o_ref.shape[-1]
     bias = b_ref[...].astype(jnp.float32)
+    w_scale = None if s_ref is None else s_ref[...].astype(jnp.float32)
     row_phases = []
     for pi in range(2):
         col_phases = []
@@ -83,6 +86,8 @@ def _upsample_conv_kernel(x_ref, w_ref, b_ref, o_ref, *, rows: int,
                         (((1,), (0,)), ((), ())),
                         preferred_element_type=jnp.float32,
                     ).reshape(rows, width, -1)
+            if w_scale is not None:
+                acc = acc * w_scale
             col_phases.append(acc + bias)
         # column interleave: out[.., 2j+pj] = col_phases[pj][.., j]
         row_phases.append(jnp.stack(col_phases, axis=2)
@@ -97,9 +102,15 @@ def _upsample_conv_kernel(x_ref, w_ref, b_ref, o_ref, *, rows: int,
 def upsample_conv3x3(x: jax.Array, w: jax.Array,
                      b: Optional[jax.Array] = None, rows: int = 16,
                      block_cout: int = 128,
-                     interpret: bool = False) -> jax.Array:
+                     interpret: bool = False,
+                     w_scale: Optional[jax.Array] = None) -> jax.Array:
     """``conv3x3(nearest_upsample_2x(x))`` fused.  x [N, H, W, Cin] NHWC,
-    w [3, 3, Cin, Cout], b [Cout] -> [N, 2H, 2W, Cout] (SAME)."""
+    w [3, 3, Cin, Cout], b [Cout] -> [N, 2H, 2W, Cout] (SAME).
+
+    int8 ``w`` (with ``w_scale`` [Cout]) is phase-collapsed in int16 — a
+    collapsed tap sums at most 4 int8 values, which int16 holds exactly,
+    and the shared per-channel scale distributes over the sum — then
+    dequantized on the phase accumulators in VMEM."""
     n, h, width, cin = x.shape
     cout = w.shape[-1]
     if b is None:
@@ -112,22 +123,32 @@ def upsample_conv3x3(x: jax.Array, w: jax.Array,
         tc //= 2
     rows = band_rows(h, width, cin + 4 * tc, x.dtype.itemsize, rows)
     nb = h // rows
-    wc = phase_weights(w)                            # [2, 2, 2, 2, Cin, Cout]
+    if w.dtype == jnp.int8:
+        wc = phase_weights(w.astype(jnp.int16))      # exact: |sum| <= 4*127
+    else:
+        wc = phase_weights(w)                        # [2, 2, 2, 2, Cin, Cout]
+
+    in_specs = [
+        pl.BlockSpec((1, rows + 2, width + 2, cin),
+                     lambda i, c: (i, 0, 0, 0)),
+        pl.BlockSpec((2, 2, 2, 2, cin, tc),
+                     lambda i, c: (0, 0, 0, 0, 0, c)),
+    ]
+    operands = [materialize_bands(x, rows), wc]
+    if w_scale is not None:
+        in_specs.append(pl.BlockSpec((tc,), lambda i, c: (c,)))
+        operands.append(w_scale)
+    in_specs.append(pl.BlockSpec((tc,), lambda i, c: (c,)))
+    operands.append(b)
 
     out = pl.pallas_call(
         functools.partial(_upsample_conv_kernel, rows=rows, width=width),
         grid=(n * nb, cout // tc),
-        in_specs=[
-            pl.BlockSpec((1, rows + 2, width + 2, cin),
-                         lambda i, c: (i, 0, 0, 0)),
-            pl.BlockSpec((2, 2, 2, 2, cin, tc),
-                         lambda i, c: (0, 0, 0, 0, 0, c)),
-            pl.BlockSpec((tc,), lambda i, c: (c,)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, 2 * rows, 2 * width, tc),
                                lambda i, c: (i, 0, 0, c)),
         out_shape=jax.ShapeDtypeStruct((n * nb, 2 * rows, 2 * width, cout),
                                        x.dtype),
         interpret=interpret,
-    )(materialize_bands(x, rows), wc, b)
+    )(*operands)
     return out.reshape(n, 2 * h, 2 * width, cout)

@@ -34,6 +34,7 @@ bit-identical pixels to a batch-1 decode of the same latent.
 from __future__ import annotations
 
 import dataclasses
+import os
 import time
 from collections import OrderedDict
 from typing import Any, Dict, List, Optional, Sequence, Tuple
@@ -68,6 +69,13 @@ class EngineConfig:
     #: epilogue (1/4 the transfer + pixel-cache charge); 'float32' keeps
     #: the legacy [-1, 1] float pixels.
     pixel_format: str = "uint8"
+    #: Decoder weight storage precision for the uint8 fast path
+    #: ('float32' | 'bfloat16' | 'int8'), applied behind the ±1-LSB
+    #: open-time gate — see :class:`repro.store.api.StoreConfig`.
+    weight_dtype: str = "float32"
+    #: Persistent Pallas kernel autotuning (tune-on-first-miss; cache
+    #: under ``data_dir``) — see :class:`repro.store.api.StoreConfig`.
+    autotune: bool = False
     adaptive: bool = True               # run the marginal-hit tuner
     tuner: TunerConfig = dataclasses.field(
         default_factory=lambda: TunerConfig(window=500, step=0.02))
@@ -97,7 +105,9 @@ class EngineConfig:
             image_bytes=image_bytes, latent_bytes=latent_bytes,
             adaptive=self.adaptive, tuner=self.tuner,
             decode_buckets=self.decode_buckets,
-            pixel_format=self.pixel_format, clock=self.clock)
+            pixel_format=self.pixel_format,
+            weight_dtype=self.weight_dtype, autotune=self.autotune,
+            clock=self.clock)
 
 
 class _Node:
@@ -170,6 +180,10 @@ class DecodeBatcher:
         self._zmemo: "OrderedDict[int, Tuple[bytes, np.ndarray]]" = \
             OrderedDict()
         self._warm: set = set()       # buckets whose decode shape is compiled
+        # (bucket, latent shape) pairs this batcher has decoded, in first-
+        # seen order — the kernel autotuner's tune-on-first-miss feed
+        self._shape_log: List[Tuple[int, Tuple[int, ...]]] = []
+        self._shapes_seen: set = set()
         self.stats = {"decodes": 0, "batches": 0, "coalesced": 0,
                       "padded_slots": 0, "decompressions": 0, "memo_hits": 0}
         self.last_per_image_ms: Dict[int, float] = {}
@@ -217,12 +231,36 @@ class DecodeBatcher:
     def prewarm(self, latent_hwc: Tuple[int, int, int]) -> None:
         """Compile every bucket's decode shape up front so no serving
         window ever pays jit time (first-flush warmup otherwise compiles
-        lazily, bucket by bucket)."""
+        lazily, bucket by bucket).  With a tuning cache active, the trace
+        consults it — so prewarming compiles the *tuned* kernel shapes."""
         for b in self.buckets:
+            self._note_shape(b, latent_hwc)
             if b not in self._warm:
                 z = jnp.zeros((b,) + tuple(latent_hwc), jnp.float32)
                 np.asarray(self._decode_fn(z))
                 self._warm.add(b)
+
+    def _note_shape(self, bucket: int, latent_hwc) -> None:
+        key = (int(bucket), tuple(int(v) for v in latent_hwc))
+        if key not in self._shapes_seen:
+            self._shapes_seen.add(key)
+            self._shape_log.append(key)
+
+    def drain_shapes(self) -> List[Tuple[int, Tuple[int, ...]]]:
+        """(bucket, latent shape) pairs first seen since the last drain —
+        the engine forwards them to the kernel autotuner."""
+        out, self._shape_log = self._shape_log, []
+        return out
+
+    def rewarm(self) -> None:
+        """Drop compiled decodes so the next warmup re-traces the kernel
+        dispatch (picking up freshly tuned block shapes); called by the
+        engine after a tuning step so recompiles land in warmup, never in
+        a timed serving region."""
+        self._warm.clear()
+        refresh = getattr(self.vae, "refresh_kernels", None)
+        if refresh is not None:
+            refresh()
 
     def _latent_of(self, oid: int, blob: bytes) -> np.ndarray:
         """Memoized host decompression (fixed decode dtype: determinism
@@ -249,6 +287,7 @@ class DecodeBatcher:
         zs = [self._latent_of(oid, blob) for oid, (blob, _) in chunk]
         zs.extend([zs[-1]] * (bucket - n_real))       # pad with the last real z
         zb = jnp.stack(zs)
+        self._note_shape(bucket, zb.shape[1:])
         if bucket not in self._warm:
             # compile this bucket's shape outside the timed region so jit
             # compile time never poisons the tuner's decode EWMA.  Warm on
@@ -368,6 +407,32 @@ class ServingEngine:
                                      pixel_format=self.cfg.pixel_format)
         self.stats = self.walk.counts           # shared hit/spill accounting
         self._inflight: List[_Ticket] = []      # open microbatch (admit/dispatch)
+        # -- quantized decoder (gated) + persistent kernel autotuner ---------
+        self.gate_lsb: Optional[Dict[int, int]] = None
+        if self.cfg.weight_dtype != "float32":
+            if self.cfg.pixel_format != "uint8":
+                raise ValueError(
+                    "weight_dtype quantization serves the uint8 fast path "
+                    "only; the float32 pixel format stays on f32 weights")
+            from repro.vae.quantize import check_u8_gate
+            vae.set_weight_dtype(self.cfg.weight_dtype)
+            # the ±1-LSB open-time gate: quantized vs f32-oracle uint8
+            # pixels on probe latents, every decode bucket — raises
+            # QuantizationGateError (config rejected) on breach
+            self.gate_lsb = check_u8_gate(
+                vae, self.cfg.decode_buckets,
+                (8, 8, vae.cfg.latent_channels))
+        self.autotuner = None
+        self.tuning_cache = None
+        if self.cfg.autotune:
+            from repro.kernels import autotune as _at
+            path = (os.path.join(self.cfg.data_dir, _at.CACHE_FILENAME)
+                    if self.cfg.data_dir else None)
+            self.tuning_cache = _at.TuningCache.load(path)
+            _at.set_active_cache(self.tuning_cache)
+            self.autotuner = _at.KernelAutotuner(
+                self.tuning_cache, vae.cfg,
+                weight_dtype=self.cfg.weight_dtype)
 
     def prewarm_decode(self, latent_hwc: Tuple[int, int, int]) -> None:
         """Compile every decode bucket for the given latent shape up
@@ -615,12 +680,20 @@ class ServingEngine:
 
     def _durable_maintenance(self) -> None:
         """End-of-batch durability work, threaded into the request loop:
-        flush write-behind appends (acknowledging them) and run at most
-        one online-compaction step — bounded work per dispatched batch,
-        so serving latency never absorbs a stop-the-world sweep.  Both
-        are no-ops on the in-memory backend."""
+        flush write-behind appends (acknowledging them), run at most one
+        online-compaction step, and — with autotuning on — tune at most
+        one missing kernel-shape key (tune-on-first-miss).  Bounded work
+        per dispatched batch, so serving latency never absorbs a
+        stop-the-world sweep; the first two are no-ops on the in-memory
+        backend."""
         self.store.flush()
         self.store.maybe_compact()
+        if self.autotuner is not None:
+            for bucket, hwc in self.batcher.drain_shapes():
+                self.autotuner.note_bucket(bucket, hwc)
+            if self.autotuner.step(1):
+                # new winners: recompile in warmup, not in a timed region
+                self.batcher.rewarm()
 
     def _flush(self) -> Dict[int, np.ndarray]:
         try:
@@ -646,4 +719,10 @@ class ServingEngine:
         out["decompressions"] = self.batcher.stats["decompressions"]
         out["decompress_memo_hits"] = self.batcher.stats["memo_hits"]
         out["pixel_format"] = self.cfg.pixel_format
+        out["weight_dtype"] = self.cfg.weight_dtype
+        if self.gate_lsb is not None:
+            out["quantize_gate_lsb"] = dict(self.gate_lsb)
+        if self.tuning_cache is not None:
+            out["tuned_kernel_keys"] = len(self.tuning_cache)
+            out["tuning_pending"] = self.autotuner.pending
         return out

@@ -72,6 +72,21 @@ class StoreConfig:
     #: format (the engine corrects its charges to each array's real
     #: nbytes, and conformance tests rely on the two agreeing).
     pixel_format: str = "uint8"
+    #: Storage precision of the decoder weights the uint8 fast path
+    #: serves from: 'float32' (identity), 'bfloat16' (default-safe
+    #: half-storage), or 'int8' (opt-in per-channel quantization).  The
+    #: ENGINE applies it to its VAE at open time behind a ±1-LSB uint8
+    #: output gate per decode bucket (:mod:`repro.vae.quantize`): a
+    #: config whose quantized pixels drift further than ±1 LSB from the
+    #: f32 oracle is rejected.  The simulator has no weights — ignored.
+    weight_dtype: str = "float32"
+    #: Enable the persistent Pallas kernel autotuner
+    #: (:mod:`repro.kernels.autotune`): the engine loads
+    #: ``data_dir/tuning_cache.json`` at open (tuned block shapes are
+    #: compiled by ``prewarm_decode``) and tunes missing (kernel, shape,
+    #: bucket, weight_dtype) keys with bounded work per dispatched batch
+    #: (tune-on-first-miss).  Engine-only; no-op for the simulator.
+    autotune: bool = False
     adaptive: bool = True               # run the marginal-hit tuner
     tuner: TunerConfig = dataclasses.field(
         default_factory=lambda: TunerConfig(window=500, step=0.02))
@@ -115,6 +130,9 @@ class StoreConfig:
         if self.pixel_format not in ("uint8", "float32"):
             raise ValueError(f"pixel_format must be 'uint8' or 'float32': "
                              f"{self.pixel_format!r}")
+        if self.weight_dtype not in ("float32", "bfloat16", "int8"):
+            raise ValueError(f"weight_dtype must be 'float32', 'bfloat16' "
+                             f"or 'int8': {self.weight_dtype!r}")
         if self.node_names is not None:
             self.node_names = tuple(self.node_names)
             if len(set(self.node_names)) != len(self.node_names):

@@ -50,10 +50,8 @@ class LatentBox:
         cluster (see :class:`~repro.store.sharding.ShardedLatentBox`)."""
         from repro.store.backends import EngineBackend
         if vae is None:
-            from repro.vae.model import VAE, VAEConfig
-            vae = VAE(VAEConfig(name="demo", latent_channels=4,
-                                block_out_channels=(16, 32),
-                                layers_per_block=1, groups=4), seed=seed)
+            from repro.vae.model import demo_vae
+            vae = demo_vae(seed=seed)
         if shards > 1 or (replication or 1) > 1 or fault_plan is not None:
             from repro.store.sharding import ShardedLatentBox
             return cls(ShardedLatentBox.engine(

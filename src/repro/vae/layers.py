@@ -49,11 +49,16 @@ def conv2d(x: jax.Array, p: Params, stride: int = 1,
     :func:`repro.kernels.ops.conv3x3` so the Pallas implicit-GEMM kernel
     is live on the read path (the XLA impl is the identical lax conv).
     """
-    if p["w"].shape[:2] == (3, 3) and stride == 1 and padding == "SAME":
-        from repro.kernels import ops                 # late import (no cycle)
-        return ops.conv3x3(x, p["w"], p["b"], impl=impl)
+    from repro.kernels import ops                     # late import (no cycle)
+    w = p["w"]
+    if w.shape[:2] == (3, 3) and stride == 1 and padding == "SAME":
+        return ops.conv3x3(x, w, p["b"], impl=impl)
+    if isinstance(w, ops.QuantizedWeight):
+        # non-3x3 convs (the 1x1 shortcut) have no Pallas path: dequant
+        # transiently for the lax conv (tiny weights, folded by XLA)
+        w = w.dequant(x.dtype)
     y = jax.lax.conv_general_dilated(
-        x, p["w"].astype(x.dtype), window_strides=(stride, stride),
+        x, w.astype(x.dtype), window_strides=(stride, stride),
         padding=padding, dimension_numbers=("NHWC", "HWIO", "NHWC"))
     return y + p["b"].astype(x.dtype)
 

@@ -45,6 +45,25 @@ FLUX_VAE = VAEConfig(name="flux_vae", latent_channels=16,
                      scaling_factor=0.3611, shift_factor=0.1159)
 SD15_VAE = VAEConfig(name="sd15_vae", latent_channels=4,
                      scaling_factor=0.18215, shift_factor=0.0)
+#: The facade/bench demo stack: tiny but architecturally complete.
+DEMO_VAE = VAEConfig(name="demo", latent_channels=4,
+                     block_out_channels=(16, 32), layers_per_block=1,
+                     groups=4)
+
+
+def demo_vae(seed: int = 0, impl: Optional[str] = None,
+             weight_dtype: str = "float32") -> "VAE":
+    """The demo :class:`VAE` with its output range calibrated into the
+    display domain (random-init decoders saturate the [-1, 1] clamp,
+    which no trained decoder does — and which would make quantization
+    gates and fidelity metrics unrepresentative).  Deterministic per
+    seed, so every open of the same stack decodes bit-identically."""
+    from repro.vae.quantize import calibrate_output_range
+    vae = VAE(DEMO_VAE, seed=seed, impl=impl)
+    calibrate_output_range(vae)
+    if weight_dtype != "float32":
+        vae.set_weight_dtype(weight_dtype)
+    return vae
 
 
 # ---------------------------------------------------------------------------
@@ -185,16 +204,27 @@ def param_count(params) -> int:
 
 
 class VAE:
-    """Convenience wrapper bundling config + params + jitted entry points."""
+    """Convenience wrapper bundling config + params + jitted entry points.
+
+    ``weight_dtype`` selects the *storage* precision of the decoder
+    weights the uint8 fast path serves from ('float32' | 'bfloat16' |
+    'int8', see :mod:`repro.vae.quantize`); the fp32 tree is always kept
+    as the oracle — :meth:`decode` and ``decode_u8(z,
+    precision='float32')`` run it, which is what the engine's ±1-LSB
+    open-time gate compares against.
+    """
 
     def __init__(self, cfg: VAEConfig = SD35_VAE, seed: int = 0,
-                 with_encoder: bool = True, impl: Optional[str] = None):
+                 with_encoder: bool = True, impl: Optional[str] = None,
+                 weight_dtype: str = "float32"):
         self.cfg = cfg
         self.impl = impl          # None -> process default (ops.set_default_impl)
         key = jax.random.PRNGKey(seed)
         kd, ke = jax.random.split(key)
         self.decoder = init_decoder(kd, cfg)
         self.encoder = init_encoder(ke, cfg) if with_encoder else None
+        self.weight_dtype = "float32"
+        self._qparams: Dict[str, Any] = {}
         self._decode = jax.jit(lambda p, z: decode(p, z, cfg, impl))
         # the uint8 fast path donates the latent batch: the batcher stacks
         # a fresh buffer per flush, so the compiled decode can reuse it
@@ -204,13 +234,53 @@ class VAE:
         self._decode_u8 = jax.jit(lambda p, z: decode_u8(p, z, cfg, impl),
                                   donate_argnums=donate)
         self._encode = jax.jit(lambda p, x: encode(p, x, cfg, impl))
+        if weight_dtype != "float32":
+            self.set_weight_dtype(weight_dtype)
+
+    def set_weight_dtype(self, weight_dtype: str) -> None:
+        """(Re-)derive the serving-weight tree at ``weight_dtype`` from
+        the current fp32 decoder.  Unconditional: callers that mutated
+        ``self.decoder`` (calibration, tests) get fresh quantized params."""
+        from repro.vae import quantize as Q       # late import (no cycle)
+        self._qparams = {"float32": self.decoder}
+        if weight_dtype != "float32":
+            self._qparams[weight_dtype] = Q.quantize_decoder(self.decoder,
+                                                             weight_dtype)
+        self.weight_dtype = weight_dtype
+
+    def _params_for(self, precision: Optional[str]):
+        precision = precision or self.weight_dtype
+        if not self._qparams:
+            self._qparams = {"float32": self.decoder}
+        if precision not in self._qparams:
+            from repro.vae import quantize as Q
+            self._qparams[precision] = Q.quantize_decoder(self.decoder,
+                                                          precision)
+        return self._qparams[precision]
 
     def decode(self, z: jax.Array) -> jax.Array:
+        """Float pixels off the fp32 oracle weights (quantization only
+        ever applies to the uint8 serving path)."""
         return self._decode(self.decoder, z)
 
-    def decode_u8(self, z: jax.Array) -> jax.Array:
-        """Donated end-to-end fast path: latents -> uint8 HWC pixels."""
-        return self._decode_u8(self.decoder, z)
+    def decode_u8(self, z: jax.Array,
+                  precision: Optional[str] = None) -> jax.Array:
+        """Donated end-to-end fast path: latents -> uint8 HWC pixels.
+
+        ``precision`` overrides the configured ``weight_dtype`` for this
+        call ('float32' forces the oracle weights — the gate's reference
+        arm); default serves the configured storage precision."""
+        return self._decode_u8(self._params_for(precision), z)
+
+    def refresh_kernels(self) -> None:
+        """Drop compiled decode/encode executables so the next call
+        re-traces the kernel dispatch — required for an updated tuning
+        cache (:mod:`repro.kernels.autotune`) to take effect, since tuned
+        block shapes are baked in at trace time."""
+        for name in ("_decode", "_decode_u8", "_encode"):
+            clear = getattr(getattr(self, name), "clear_cache", None)
+            if clear is not None:
+                clear()
 
     def encode_mean(self, x: jax.Array) -> jax.Array:
         return self._encode(self.encoder, x)[0]

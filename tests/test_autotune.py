@@ -1,0 +1,268 @@
+"""Persistent Pallas kernel autotuner: cache roundtrip + versioned
+invalidation, deterministic winner selection under an injected timer,
+dispatch-side tuned-shape lookup (numerically invariant), the bounded
+tune-on-first-miss driver, and a reopened engine honoring the cache."""
+
+import json
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.kernels import autotune as at
+from repro.kernels import ops
+from repro.store import LatentBox, StoreConfig
+from repro.vae.model import DEMO_VAE
+
+LATENT_HWC = (8, 8, 4)
+
+
+def entry(rows=16, block_cout=64, **kw):
+    e = {"rows": rows, "block_cout": block_cout, "us": 10.0,
+         "default_us": 20.0, "candidates": 3, "impl": "pallas_interpret",
+         "weight_dtype": "float32"}
+    e.update(kw)
+    return e
+
+
+class ScriptedTimer:
+    """Replays a fixed sequence of clock readings (2 per timed rep)."""
+
+    def __init__(self, durations, reps=1):
+        self.reads = []
+        for d in durations:
+            for _ in range(reps):
+                self.reads += [0.0, d]
+        self.i = 0
+
+    def __call__(self):
+        v = self.reads[self.i]
+        self.i += 1
+        return v
+
+
+# ---------------------------------------------------------------------------
+# the persistent cache
+# ---------------------------------------------------------------------------
+
+class TestTuningCache:
+    def test_roundtrip(self, tmp_path):
+        path = str(tmp_path / "tuning_cache.json")
+        cache = at.TuningCache(path)
+        key = at.cache_key("conv3x3", 2, 8, 8, 4, 32, "float32")
+        cache.put(key, entry())
+        cache.save()
+        loaded = at.TuningCache.load(path)
+        assert len(loaded) == 1 and key in loaded
+        assert loaded.get(key) == entry()
+        assert not (tmp_path / "tuning_cache.json.tmp").exists()
+
+    def test_missing_file_is_empty(self, tmp_path):
+        cache = at.TuningCache.load(str(tmp_path / "nope.json"))
+        assert len(cache) == 0
+
+    def test_pathless_cache_never_writes(self):
+        cache = at.TuningCache(None)
+        cache.put("k", entry())
+        cache.save()                      # no-op, must not raise
+        assert "k" in cache
+
+    def test_schema_version_bump_invalidates(self, tmp_path):
+        path = str(tmp_path / "tuning_cache.json")
+        with open(path, "w") as f:
+            json.dump({"schema_version": at.SCHEMA_VERSION + 1,
+                       "entries": {"k": entry()}}, f)
+        assert len(at.TuningCache.load(path)) == 0
+
+    @pytest.mark.parametrize("blob", [b"{not json", b"", b"[1, 2, 3]",
+                                      b'{"entries": "nope"}'])
+    def test_corrupt_file_falls_back_clean(self, tmp_path, blob):
+        path = str(tmp_path / "tuning_cache.json")
+        with open(path, "wb") as f:
+            f.write(blob)
+        assert len(at.TuningCache.load(path)) == 0
+
+
+# ---------------------------------------------------------------------------
+# dispatch-side lookup
+# ---------------------------------------------------------------------------
+
+class TestTunedParams:
+    def test_no_active_cache_means_defaults(self):
+        assert at.get_active_cache() is None
+        assert at.tuned_params("conv3x3", (1, 8, 8, 4), 32, "float32") == {}
+
+    def test_hit_and_miss(self):
+        cache = at.TuningCache(None)
+        cache.put(at.cache_key("conv3x3", 1, 8, 8, 4, 32, "float32"),
+                  entry(rows=8, block_cout=32))
+        with at.active_cache(cache):
+            assert at.tuned_params("conv3x3", (1, 8, 8, 4), 32,
+                                   "float32") == {"rows": 8, "block_cout": 32}
+            assert at.tuned_params("conv3x3", (2, 8, 8, 4), 32,
+                                   "float32") == {}          # other bucket
+            assert at.tuned_params("conv3x3", (1, 8, 8, 4), 32,
+                                   "bfloat16") == {}         # other dtype
+        assert at.get_active_cache() is None                 # scope restored
+
+    @pytest.mark.parametrize("bad", [{"rows": 8}, {"rows": 8.5,
+                                                   "block_cout": 32},
+                                     {"rows": 0, "block_cout": 32}, {}])
+    def test_malformed_entry_means_defaults(self, bad):
+        cache = at.TuningCache(None)
+        cache.put(at.cache_key("conv3x3", 1, 8, 8, 4, 32, "float32"), bad)
+        with at.active_cache(cache):
+            assert at.tuned_params("conv3x3", (1, 8, 8, 4), 32,
+                                   "float32") == {}
+
+    def test_dispatch_numerically_invariant(self, rng):
+        """A tuned blocking must change only the schedule, not the math."""
+        x = jnp.asarray(rng.standard_normal((1, 8, 8, 8)), jnp.float32)
+        w = jnp.asarray(rng.standard_normal((3, 3, 8, 16)) / 8, jnp.float32)
+        b = jnp.asarray(rng.standard_normal((16,)) * 0.01, jnp.float32)
+        base = np.asarray(ops.conv3x3(x, w, b, impl="pallas_interpret"))
+        cache = at.TuningCache(None)
+        cache.put(at.cache_key("conv3x3", 1, 8, 8, 8, 16, "float32"),
+                  entry(rows=4, block_cout=8))
+        with at.active_cache(cache):
+            tuned = np.asarray(ops.conv3x3(x, w, b, impl="pallas_interpret"))
+        np.testing.assert_allclose(tuned, base, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# shape derivation + candidate grids
+# ---------------------------------------------------------------------------
+
+class TestDecodeShapes:
+    def test_demo_decoder_shape_set(self):
+        shapes = at.decode_shapes(DEMO_VAE, LATENT_HWC, bucket=2)
+        sigs = {(s["kernel"], s["h"], s["w"], s["cin"], s["cout"])
+                for s in shapes}
+        assert sigs == {
+            ("conv3x3", 8, 8, 4, 32),            # conv_in
+            ("gn_silu_conv3x3", 8, 8, 32, 32),   # mid + top level
+            ("upsample_conv3x3", 8, 8, 32, 32),
+            ("gn_silu_conv3x3", 16, 16, 32, 16),
+            ("gn_silu_conv3x3", 16, 16, 16, 16),
+            ("output_epilogue", 16, 16, 16, 3),  # fused epilogue @ 2x
+        }
+        assert all(s["n"] == 2 and s["groups"] == 4 for s in shapes)
+
+    def test_candidates_default_first_and_deduped(self):
+        spec = {"kernel": "conv3x3", "n": 1, "h": 32, "w": 32,
+                "cin": 64, "cout": 64, "groups": 4}
+        cands = at.candidates("conv3x3", spec)
+        assert cands[0] == at.DEFAULTS["conv3x3"]
+        effs = [at._effective("conv3x3", spec, c["rows"], c["block_cout"])
+                for c in cands]
+        assert len(set(effs)) == len(effs)       # no duplicate blockings
+        assert len(cands) > 1                    # this shape has real choices
+
+
+# ---------------------------------------------------------------------------
+# the timed sweep (injected timer => fully deterministic)
+# ---------------------------------------------------------------------------
+
+SWEEP_SPEC = {"kernel": "conv3x3", "n": 1, "h": 32, "w": 32,
+              "cin": 64, "cout": 64, "groups": 4}
+SWEEP_GRIDS = dict(rows_grid=(8, 32), block_cout_grid=(32, 64))
+
+
+class TestTuneDeterminism:
+    def test_injected_timer_picks_scripted_winner(self):
+        cands = at.candidates("conv3x3", SWEEP_SPEC, **SWEEP_GRIDS)
+        assert len(cands) >= 3
+        durations = [10.0] * len(cands)
+        durations[2] = 1.0                       # candidate 2 is fastest
+        e = at.tune(SWEEP_SPEC, reps=1, timer=ScriptedTimer(durations),
+                    **SWEEP_GRIDS)
+        assert {"rows": e["rows"], "block_cout": e["block_cout"]} == cands[2]
+        assert e["us"] == pytest.approx(1e6)     # 1.0 s -> us
+        assert e["default_us"] == pytest.approx(10e6)
+        assert e["candidates"] == len(cands)
+
+    def test_tie_keeps_the_default(self):
+        cands = at.candidates("conv3x3", SWEEP_SPEC, **SWEEP_GRIDS)
+        e = at.tune(SWEEP_SPEC, reps=1,
+                    timer=ScriptedTimer([5.0] * len(cands)), **SWEEP_GRIDS)
+        assert {"rows": e["rows"],
+                "block_cout": e["block_cout"]} == at.DEFAULTS["conv3x3"]
+        assert e["us"] == e["default_us"]
+
+    def test_winner_never_worse_than_default(self):
+        cands = at.candidates("conv3x3", SWEEP_SPEC, **SWEEP_GRIDS)
+        rng = np.random.default_rng(0)
+        for _ in range(3):
+            durations = list(rng.uniform(1.0, 10.0, len(cands)))
+            e = at.tune(SWEEP_SPEC, reps=1, timer=ScriptedTimer(durations),
+                        **SWEEP_GRIDS)
+            assert e["us"] <= e["default_us"]
+
+
+# ---------------------------------------------------------------------------
+# tune-on-first-miss driver
+# ---------------------------------------------------------------------------
+
+class TestKernelAutotuner:
+    def make_tuner(self, tmp_path):
+        cache = at.TuningCache(str(tmp_path / at.CACHE_FILENAME))
+        return at.KernelAutotuner(
+            cache, DEMO_VAE, impl="pallas_interpret", reps=1,
+            timer=ScriptedTimer([1.0] * 4096),
+            rows_grid=(8,), block_cout_grid=(32,))
+
+    def test_note_bucket_queues_only_missing(self, tmp_path):
+        tuner = self.make_tuner(tmp_path)
+        n = tuner.note_bucket(1, LATENT_HWC)
+        assert n == tuner.pending == 6           # the demo shape set
+        assert tuner.note_bucket(1, LATENT_HWC) == 0     # already queued
+        assert tuner.note_bucket(2, LATENT_HWC) == 6     # new bucket = new keys
+
+    def test_step_is_bounded_and_persists(self, tmp_path):
+        tuner = self.make_tuner(tmp_path)
+        tuner.note_bucket(1, LATENT_HWC)
+        keys = tuner.step(2)
+        assert len(keys) == 2 and tuner.pending == 4
+        assert all(k in tuner.cache for k in keys)
+        # each step persists: a fresh load already sees the first wins
+        assert set(at.TuningCache.load(tuner.cache.path).entries) == set(keys)
+        while tuner.pending:
+            tuner.step(4)
+        assert len(tuner.cache) == 6
+        assert tuner.step(1) == []               # drained queue is a no-op
+        # tuned keys are exactly what dispatch will look up
+        assert at.tuned_params("conv3x3", (1,) + LATENT_HWC, 32,
+                               "float32") == {}  # no active cache yet
+        with at.active_cache(tuner.cache):
+            got = at.tuned_params("conv3x3", (1,) + LATENT_HWC, 32,
+                                  "float32")
+            assert set(got) == {"rows", "block_cout"}
+
+    def test_engine_restart_honors_cache(self, tmp_path, rng):
+        cfg = StoreConfig(n_nodes=1, cache_bytes_per_node=1e5,
+                          adaptive=False, autotune=True,
+                          decode_buckets=(1, 2))
+        with LatentBox.open(tmp_path / "box", config=cfg) as box:
+            eng = box.backend.engine
+            assert at.get_active_cache() is eng.tuning_cache
+            for oid in range(4):
+                box.put(oid, latent=rng.standard_normal(LATENT_HWC)
+                        .astype(np.float16))
+            for _ in range(30):                  # maintenance drains the queue
+                box.get_many([0, 1, 2, 3])
+                if eng.autotuner.pending == 0 and len(eng.tuning_cache):
+                    break
+            assert len(eng.tuning_cache) > 0
+            tuned_before = dict(eng.tuning_cache.entries)
+            pixels = [np.asarray(r.payload).copy()
+                      for r in box.get_many([0, 1])]
+        with LatentBox.open(tmp_path / "box", config=cfg) as box:
+            eng = box.backend.engine
+            assert eng.tuning_cache.entries == tuned_before   # survived
+            assert at.get_active_cache() is eng.tuning_cache  # and honored
+            s = box.summary()
+            assert s["tuned_kernel_keys"] == len(tuned_before)
+            again = [np.asarray(r.payload) for r in box.get_many([0, 1])]
+            for a, b in zip(pixels, again):
+                np.testing.assert_array_equal(a, b)
