@@ -1,14 +1,77 @@
-"""Paper Fig. 8 + §6.4 — long-term cost projection to 2050, normalized so
-ImgStore at trace end (2026.25) = 1.  Four setups x two price scenarios."""
+"""Cost benchmarks — the long-term projection AND the live serving bill.
+
+Two sections:
+
+1. ``fig8_rows()`` — paper Fig. 8 + §6.4: long-term cost projection to
+   2050, normalized so ImgStore at trace end (2026.25) = 1.  Four setups
+   x two price scenarios.  Pure closed-form model, no replay.
+
+2. ``trace_rows()`` — the elastic-autoscaler headline: replay ``diurnal``
+   and ``zipf_drift`` open-loop arrival streams through the simulator
+   backend under three plants —
+
+     * ``static_small``  1 decode GPU/node (cheap; overloads at peak),
+     * ``static_peak``   2 decode GPUs/node (provisioned for the peak,
+                         idle in the trough),
+     * ``autoscaled``    starts at 1 GPU/node with the cost-model-driven
+                         :class:`~repro.core.autoscale.AutoscaleController`
+                         trading decode GPUs against cache bytes live —
+
+   and report $-per-million-requests (provisioned-resource integrals
+   priced by :func:`~repro.core.cost_model.dollars_per_million_requests`)
+   at a fixed 250 ms latency SLO.  The certified operating point
+   (``diurnal`` at ``load_factor=1.0``) asserts the headline: the
+   autoscaled plant is strictly cheaper than static-peak at equal SLO
+   attainment, with nonzero hysteresis-bounded scale-up AND scale-down
+   event counts.
+
+Promotion is disabled in the replay config so the plant stays
+decode-bound (same idiom as ``bench_runtime``): a warmed pixel cache
+would turn the sweep into a no-queue image-hit run and measure nothing.
+
+``--smoke`` (the CI step) runs 2 load factors and versions the result as
+``BENCH_cost.json`` at the repo root via ``trajectory()``; the nightly
+job runs the full load ladder (``REPRO_BENCH_SCALE=full``).
+"""
 
 from __future__ import annotations
 
-from benchmarks.common import Rows
+import argparse
+import os
+
+import numpy as np
+
+from benchmarks.common import Rows, scale
+from repro.core.autoscale import AutoscaleConfig
 from repro.core.cost_model import (CostParams, CostScenario,
-                                   normalized_horizons, project)
+                                   dollars_per_million_requests,
+                                   normalized_horizons, params_for_store,
+                                   project)
+from repro.core.regen_tier import Recipe
+from repro.core.tuner import TunerConfig
+from repro.store import LatentBox, StoreConfig
+from repro.trace.synth import TraceConfig, make_trace
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+#: Base arrival rate (req/s) the trace span is normalized to at
+#: ``load_factor=1.0`` — sized so the mean load (~2.5 GPUs of decode
+#: demand at 31 ms/decode) fits the static-small plant's 4 GPUs, while
+#: the diurnal peak (amplitude 0.8, ~1.8x the mean, ~4.5 GPUs) overloads
+#: it; static-peak's 8 GPUs ride the peak out but idle in the trough —
+#: the dilemma the autoscaler resolves.
+BASE_RATE_RPS = 80.0
+
+#: The fixed latency SLO the $-per-million-requests comparison holds
+#: constant: a request attains it iff end-to-end latency <= this.
+SLO_MS = 250.0
 
 
-def run() -> Rows:
+# ---------------------------------------------------------------------------
+# section 1 — paper Fig. 8 long-term projection
+# ---------------------------------------------------------------------------
+
+def fig8_rows() -> Rows:
     rows = Rows()
     for tag, sc in (("const", CostScenario()),
                     ("decline", CostScenario(gpu_price_decline_yr=0.20,
@@ -31,7 +94,157 @@ def run() -> Rows:
     return rows
 
 
+# ---------------------------------------------------------------------------
+# section 2 — trace-driven $-per-million-requests at a fixed SLO
+# ---------------------------------------------------------------------------
+
+def _cfg(gpus_per_node: int, autoscale: bool = False) -> StoreConfig:
+    """Decode-bound replay plant (the ``bench_runtime`` idiom: promotion
+    and the marginal-hit tuner disabled so every request decodes)."""
+    return StoreConfig(
+        n_nodes=4, cache_bytes_per_node=2e4, image_bytes=768.0,
+        latent_bytes=6e2, promote_threshold=10**6,
+        tuner=TunerConfig(window=10**9),
+        gpus_per_node=gpus_per_node, autoscale=autoscale,
+        # window ~0.5 s of trace time and a 1-window cooldown: react to a
+        # diurnal ramp within a couple of seconds.  util_high=0.70 buys
+        # scale-up headroom before the queue builds; cache_gain=0.05
+        # because this plant is decode-bound by construction (promotion
+        # off), so the marginal cache benefit really is ~0.
+        autoscale_cfg=AutoscaleConfig(window=48, cooldown_windows=1,
+                                      util_high=0.70, cache_gain=0.05,
+                                      max_gpus_per_node=4)
+        if autoscale else None)
+
+
+#: The three plants of the A-B-C: name -> (gpus_per_node, autoscale).
+PLANTS = (("static_small", 1, False),
+          ("static_peak", 2, False),
+          ("autoscaled", 1, True))
+
+
+def _replay(cfg: StoreConfig, scenario: str, n_objects: int,
+            n_requests: int, load_factor: float) -> dict:
+    """Put ``n_objects``, replay the open-loop stream in request windows
+    of 8, and return summary + attainment + $-per-million-requests."""
+    span_days = n_requests / (BASE_RATE_RPS * 86_400.0)
+    knobs = {}
+    if scenario == "diurnal":
+        # one full sinusoid over the span: a ramp to peak, a trough —
+        # exactly the shape that makes static provisioning a dilemma
+        knobs["period_days"] = span_days
+    # Low Zipf skew: with the paper's alpha one hot object pins ~20 % of
+    # all traffic on a single node's queue, and the benchmark would
+    # measure consistent-hash placement skew, not provisioning.  The
+    # cost A-B-C wants aggregate capacity to be the binding constraint.
+    tcfg = TraceConfig(n_objects=n_objects, n_requests=n_requests,
+                       span_days=span_days, zipf_alpha=0.3, seed=11)
+    tr = make_trace(scenario, config=tcfg, load_factor=load_factor, **knobs)
+    box = LatentBox.simulated(cfg)
+    for oid in range(n_objects):
+        box.put(oid, recipe=Recipe(seed=1000 + oid, height=16, width=16),
+                nbytes=600.0)
+    ts_ms = tr.timestamps * 1e3
+    ids = tr.object_ids
+    n_results = 0
+    for s in range(0, len(ids), 8):
+        n_results += len(box.get_many(ids[s:s + 8],
+                                      timestamps_ms=ts_ms[s:s + 8]))
+    assert n_results == n_requests, "request lost in replay"
+    summ = box.summary()
+    lat = np.asarray(box.backend.log.latency_ms, dtype=np.float64)
+    assert len(lat) == n_requests, "request missing from the log"
+    return {
+        "summary": summ,
+        "attainment": float(np.mean(lat <= SLO_MS)),
+        "p99_ms": float(np.percentile(lat, 99)),
+        "dpm": dollars_per_million_requests(
+            summ, n_requests, params=params_for_store(cfg)),
+    }
+
+
+def trace_rows(smoke: bool = False) -> Rows:
+    rows = Rows()
+    # 64 objects x 600 B stay fully latent-resident (~16 x 600 B per
+    # node against the 2e4 cache): after the first pass every request is
+    # a latent hit, so latency is queue + decode and the SLO measures
+    # provisioning, not durable-fetch tails.
+    n_objects = 64
+    n_requests = 4_800 if smoke else int(scale(4_800, 9_600))
+    load_factors = (0.7, 1.0) if smoke else \
+        tuple(scale((0.7, 1.0), (0.5, 0.7, 1.0, 1.5, 2.0)))
+
+    for scenario in ("diurnal", "zipf_drift"):
+        for lf in load_factors:
+            tag = f"dpm.{scenario}.lf{lf}"
+            res = {}
+            for name, gpus, auto in PLANTS:
+                r = _replay(_cfg(gpus, auto), scenario, n_objects,
+                            n_requests, lf)
+                res[name] = r
+                s = r["summary"]
+                rows.add(f"{tag}.{name}.dollars_per_mreq",
+                         derived=round(r["dpm"], 4))
+                rows.add(f"{tag}.{name}.slo_attainment",
+                         derived=round(r["attainment"], 4))
+                rows.add(f"{tag}.{name}.p99_ms",
+                         derived=round(r["p99_ms"], 1))
+                rows.add(f"{tag}.{name}.decode_gpus_end",
+                         derived=int(s["decode_gpus"]))
+                if auto:
+                    rows.add(f"{tag}.{name}.scale_up_events",
+                             derived=int(s["scale_up_events"]))
+                    rows.add(f"{tag}.{name}.scale_down_events",
+                             derived=int(s["scale_down_events"]))
+
+            auto, peak = res["autoscaled"], res["static_peak"]
+            rows.add(f"{tag}.autoscaled_vs_peak_saving_pct",
+                     derived=round(100 * (1 - auto["dpm"] / peak["dpm"]), 1))
+
+            if scenario == "diurnal" and lf == 1.0:
+                # the certified operating point (acceptance criteria):
+                # autoscaled strictly cheaper than static-peak at equal
+                # SLO attainment, with hysteresis-bounded event counts
+                # in BOTH directions (it scaled up for the peak and back
+                # down for the trough — not a one-way ratchet)
+                assert auto["dpm"] < peak["dpm"], \
+                    f"{tag}: autoscaled not cheaper than static-peak"
+                assert auto["attainment"] >= peak["attainment"] - 0.02, \
+                    f"{tag}: autoscaled gave up SLO attainment"
+                ups = int(auto["summary"]["scale_up_events"])
+                downs = int(auto["summary"]["scale_down_events"])
+                assert 1 <= ups <= 12, f"{tag}: scale-ups {ups}"
+                assert 1 <= downs <= 12, f"{tag}: scale-downs {downs}"
+    return rows
+
+
+def run(smoke: bool = False) -> Rows:
+    rows = fig8_rows()
+    rows.extend(trace_rows(smoke=smoke))
+    return rows
+
+
+def trajectory(out_dir: str = REPO_ROOT, smoke: bool = False) -> Rows:
+    """The cost-trajectory artifact: ``<out_dir>/BENCH_cost.json`` —
+    Fig. 8 projections plus the trace-driven $-per-million-requests
+    A-B-C (static-small / static-peak / autoscaled) at a fixed 250 ms
+    SLO, versioned at the repo root so later checkouts regress against
+    it."""
+    rows = run(smoke=smoke)
+    path = rows.save_json("BENCH_cost", out_dir=out_dir)
+    print(f"# saved {path}")
+    return rows
+
+
 def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run; writes BENCH_cost.json at the "
+                         "repo root")
+    args = ap.parse_args()
+    if args.smoke:
+        trajectory(smoke=True).print()
+        return
     run().print()
 
 

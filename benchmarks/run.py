@@ -44,16 +44,21 @@ def trajectory() -> None:
     (``BENCH_runtime.json``) the serving runtime's per-class tails and
     SLO attainment at three load factors with QoS on/off, and
     (``BENCH_fidelity.json``) the rate-distortion ladder's per-rung
-    storage savings vs PSNR/SSIM, floor-gated — so later checkouts have
-    a trend to regress against."""
-    from benchmarks import (bench_decode, bench_fidelity, bench_kernels,
-                            bench_resilience, bench_runtime, bench_storage)
+    storage savings vs PSNR/SSIM, floor-gated, and
+    (``BENCH_cost.json``) Fig. 8 cost projections plus the trace-driven
+    $-per-million-requests A-B-C (static-small / static-peak /
+    autoscaled) at a fixed 250 ms SLO — so later checkouts have a trend
+    to regress against."""
+    from benchmarks import (bench_cost, bench_decode, bench_fidelity,
+                            bench_kernels, bench_resilience, bench_runtime,
+                            bench_storage)
     bench_decode.trajectory().print()
     bench_kernels.trajectory().print()
     bench_storage.trajectory().print()
     bench_resilience.trajectory().print()
     bench_runtime.trajectory(smoke=True).print()
     bench_fidelity.trajectory(smoke=True).print()
+    bench_cost.trajectory(smoke=True).print()
 
 
 def main() -> None:

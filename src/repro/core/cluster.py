@@ -101,6 +101,14 @@ class GpuQueue:
             raise ValueError("need at least one GPU per node")
         self.free_at = [0.0] * n_gpus
         self._done: List[List[float]] = [[] for _ in range(n_gpus)]
+        #: Cumulative decode occupancy (ms) across the fleet — the
+        #: autoscaler's utilization signal (window deltas of this /
+        #: span * n_gpus).
+        self.busy_ms = 0.0
+
+    @property
+    def n_gpus(self) -> int:
+        return len(self.free_at)
 
     @property
     def outstanding(self) -> List[int]:
@@ -119,6 +127,7 @@ class GpuQueue:
         start = max(t, self.free_at[g])
         self.free_at[g] = start + duration
         self._done[g].append(start + duration)
+        self.busy_ms += duration
         return g, start
 
     def finish(self, gpu: int) -> None:
@@ -131,6 +140,31 @@ class GpuQueue:
         for d in self._done:
             while d and d[0] <= now:
                 d.pop(0)
+
+    def resize(self, n_gpus: int) -> None:
+        """Elastically grow or shrink the fleet (the autoscaler's GPU
+        knob).  Growth adds idle GPUs.  Shrink folds the removed GPUs'
+        in-flight decodes onto the least-loaded survivors so no scheduled
+        completion event is ever dropped — work already started finishes,
+        only future capacity changes."""
+        n_gpus = int(n_gpus)
+        if n_gpus <= 0:
+            raise ValueError("need at least one GPU per node")
+        cur = len(self.free_at)
+        if n_gpus > cur:
+            self.free_at.extend([0.0] * (n_gpus - cur))
+            self._done.extend([[] for _ in range(n_gpus - cur)])
+            return
+        if n_gpus == cur:
+            return
+        removed_free = self.free_at[n_gpus:]
+        removed_done = self._done[n_gpus:]
+        self.free_at = self.free_at[:n_gpus]
+        self._done = self._done[:n_gpus]
+        for free, done in zip(removed_free, removed_done):
+            g = int(np.argmin([len(d) for d in self._done]))
+            self._done[g] = sorted(self._done[g] + done)
+            self.free_at[g] = max(self.free_at[g], free)
 
 
 class _Node:

@@ -20,13 +20,45 @@ from typing import Dict, List, Optional
 import numpy as np
 
 
+#: Bytes per pixel-cache element by stored dtype.  ``uint8`` is the fused
+#: decode epilogue's displayable fast path; ``float32`` is what the
+#: pre-fusion engine pinned (4x the bytes).
+PIXEL_FORMAT_BYTES: Dict[str, int] = {"uint8": 1, "float32": 4}
+
+
+def pixel_cache_entry_mb(pixel_format: str = "uint8", height: int = 1024,
+                         width: int = 1024, channels: int = 3) -> float:
+    """Pixel-cache entry size in (decimal, Table-5-convention) MB, derived
+    from the stored format instead of hard-coded: H*W*C * bytes/elem.
+    1024x1024x3 uint8 -> 3.145728 MB; float32 -> 12.582912 MB."""
+    try:
+        bpe = PIXEL_FORMAT_BYTES[pixel_format]
+    except KeyError:
+        raise ValueError(
+            f"unknown pixel_format {pixel_format!r}; "
+            f"expected one of {sorted(PIXEL_FORMAT_BYTES)}") from None
+    return height * width * channels * bpe / 1e6
+
+
+def params_for_store(store_cfg, base: Optional["CostParams"] = None
+                     ) -> "CostParams":
+    """Price a :class:`~repro.store.api.StoreConfig`'s actual cache
+    charges: the pixel-cache entry term follows the config's
+    ``pixel_format`` (duck-typed — any object with that attribute works),
+    so controller cost estimates match what the cache really pins."""
+    base = base or CostParams()
+    fmt = getattr(store_cfg, "pixel_format", "uint8")
+    return dataclasses.replace(base, s_px_cache_mb=pixel_cache_entry_mb(fmt))
+
+
 @dataclasses.dataclass(frozen=True)
 class CostParams:
     s_px_mb: float = 1.5               # average PNG, 1024x1024
     #: A pixel-cache entry: raw decoded 1024x1024x3 uint8 HWC (the fused
     #: decode epilogue stores displayable bytes — 4x below the 12.6 MB
-    #: float32 arrays the pre-fusion engine pinned).
-    s_px_cache_mb: float = 3.15
+    #: float32 arrays the pre-fusion engine pinned).  Derived:
+    #: ``pixel_cache_entry_mb("uint8")`` = 1024*1024*3/1e6.
+    s_px_cache_mb: float = 3.145728
     s_lat_mb: float = 0.29             # compressed latent, SD 3.5
     p_s3_gb_mo: float = 0.023          # S3 Standard
     p_glacier_gb_mo: float = 0.004     # Glacier IR storage
@@ -133,6 +165,40 @@ def project(params: Optional[CostParams] = None,
         monthly = lb_storage * sto_mult + gpu_hours_mo * price * gpu_mult
         out[f"lb_{tag}"] = np.cumsum(monthly) * months_step
     return out
+
+
+HOURS_PER_MONTH = 730.0
+
+
+def dollars_per_million_requests(summary: Dict, n_requests: int,
+                                 params: Optional[CostParams] = None,
+                                 gpu_price_hr: Optional[float] = None
+                                 ) -> float:
+    """Price one serving run as $-per-million-requests from a LatentBox
+    ``summary()`` carrying the provisioned-resource time integrals:
+
+      * ``provisioned_gpu_ms``        — sum over time of (GPUs held * dt),
+        priced at the decode-GPU $/hr whether busy or idle (you pay for
+        what you provision, which is exactly what the autoscaler trades);
+      * ``provisioned_cache_byte_ms`` — sum over time of (cache bytes
+        held * dt), priced at the storage $/GB-month rate;
+      * ``durable_bytes``             — durable footprint, charged for the
+        run's span (inferred from the GPU integral / GPU count when
+        available; a second-order term at these spans either way).
+    """
+    p = params or CostParams()
+    price = p.p_gpu_hr_h100 if gpu_price_hr is None else float(gpu_price_hr)
+    if n_requests <= 0:
+        return 0.0
+    gpu_ms = float(summary.get("provisioned_gpu_ms", 0.0))
+    dollars = (gpu_ms / 3.6e6) * price
+    byte_ms = float(summary.get("provisioned_cache_byte_ms", 0.0))
+    n_gpus = float(summary.get("decode_gpus", 0.0))
+    span_ms = gpu_ms / n_gpus if n_gpus > 0 else 0.0
+    byte_ms += float(summary.get("durable_bytes", 0.0)) * span_ms
+    gb_hr = byte_ms / 1e9 / 3.6e6
+    dollars += gb_hr * p.p_s3_gb_mo / HOURS_PER_MONTH
+    return dollars * 1e6 / n_requests
 
 
 def normalized_horizons(curves: Dict[str, np.ndarray],

@@ -276,6 +276,18 @@ class DualFormatCache:
         self.image_tier.set_capacity(self.capacity * alpha)
         self.latent_tier.set_capacity(self.capacity * (1.0 - alpha))
 
+    def set_capacity(self, capacity_bytes: float) -> None:
+        """External capacity handoff (the autoscaler's cache knob):
+        re-split both tiers under the new total while *preserving* the
+        current alpha — the marginal-hit tuner keeps sole ownership of
+        the split and simply continues from its converged point.
+        Shrinking evicts through the normal tail path, so ``on_evict``
+        hooks (payload drops, promotion-counter cleanup) fire as usual."""
+        if capacity_bytes < 0:
+            raise ValueError("capacity must be >= 0")
+        self.capacity = float(capacity_bytes)
+        self.set_alpha(self.alpha)
+
     # -- lookup path ----------------------------------------------------------
     def lookup(self, oid: int) -> LookupResult:
         """Cascading lookup: image tier -> latent tier -> full miss.

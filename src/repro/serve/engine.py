@@ -187,6 +187,9 @@ class DecodeBatcher:
         self.stats = {"decodes": 0, "batches": 0, "coalesced": 0,
                       "padded_slots": 0, "decompressions": 0, "memo_hits": 0}
         self.last_per_image_ms: Dict[int, float] = {}
+        #: Cumulative decode wall occupancy (ms) — the engine-side analog
+        #: of ``GpuQueue.busy_ms``, window deltas feed the autoscaler.
+        self.busy_ms = 0.0
 
     def __len__(self) -> int:
         return len(self._pending)
@@ -303,6 +306,7 @@ class DecodeBatcher:
         self.stats["batches"] += 1
         self.stats["decodes"] += n_real
         self.stats["padded_slots"] += bucket - n_real
+        self.busy_ms += per_image_ms * n_real
         out = {}
         for i, (oid, (_, node)) in enumerate(chunk):
             if node.tuner is not None:
@@ -422,6 +426,29 @@ class ServingEngine:
             self.gate_lsb = check_u8_gate(
                 vae, self.cfg.decode_buckets,
                 (8, 8, vae.cfg.latent_channels))
+        # -- elastic autoscaling (off by default: no controller at all) ------
+        # the engine's decode fleet is one shared device, so the GPU knob
+        # moves a VIRTUAL fleet width (provisioned-cost accounting + the
+        # utilization denominator); the cache knob is fully real via the
+        # walk's capacity handoff
+        self.gpus_per_node = int(getattr(self.cfg, "gpus_per_node", 1))
+        self._opened_s = self.cfg.now_s()
+        self._gpu_ms = 0.0
+        self._cache_byte_ms = 0.0
+        self._acct_mark_s = self._opened_s
+        self._cache_bytes_per_node = float(self.cfg.cache_bytes_per_node)
+        self.autoscaler = None
+        if getattr(self.cfg, "autoscale", False):
+            from repro.core.autoscale import (AutoscaleConfig,
+                                              AutoscaleController, PlantState)
+            from repro.core.cost_model import params_for_store
+            acfg = self.cfg.autoscale_cfg or dataclasses.replace(
+                AutoscaleConfig(), params=params_for_store(self.cfg))
+            self.autoscaler = AutoscaleController(
+                PlantState(self.gpus_per_node, len(self.walk.caches),
+                           self._cache_bytes_per_node), acfg)
+            self._as_mark = {"reqs": 0, "now_s": self._opened_s,
+                             "busy": 0.0, "image_hits": 0}
         self.autotuner = None
         self.tuning_cache = None
         if self.cfg.autotune:
@@ -688,12 +715,61 @@ class ServingEngine:
         backend."""
         self.store.flush()
         self.store.maybe_compact()
+        if self.autoscaler is not None:
+            self._autoscale_step()
         if self.autotuner is not None:
             for bucket, hwc in self.batcher.drain_shapes():
                 self.autotuner.note_bucket(bucket, hwc)
             if self.autotuner.step(1):
                 # new winners: recompile in warmup, not in a timed region
                 self.batcher.rewarm()
+
+    # -- elastic autoscaling --------------------------------------------------
+    def _account_provisioned(self) -> None:
+        """Advance the provisioned GPU/cache time integrals to the
+        (injectable) wall clock — held capacity, busy or idle."""
+        now_s = self.cfg.now_s()
+        dt_ms = (now_s - self._acct_mark_s) * 1e3
+        if dt_ms <= 0.0:
+            return
+        self._gpu_ms += dt_ms * len(self.nodes) * self.gpus_per_node
+        self._cache_byte_ms += (dt_ms * len(self.nodes)
+                                * self._cache_bytes_per_node)
+        self._acct_mark_s = now_s
+
+    def _autoscale_step(self) -> None:
+        """Engine-side control step, run inside the bounded end-of-batch
+        maintenance slice.  Observations come from the engine's own
+        signals: walk hit counts (arrival volume + decode fraction) and
+        the batcher's measured decode occupancy.  The engine has no plant
+        queue, so it scales on utilization alone (queue_p99 = 0)."""
+        from repro.core.autoscale import WindowObs
+        from repro.store.api import HIT_CLASSES
+        mark = self._as_mark
+        reqs = sum(self.walk.counts[k] for k in HIT_CLASSES)
+        if reqs - mark["reqs"] < self.autoscaler.cfg.window:
+            return
+        now_s = self.cfg.now_s()
+        span_ms = (now_s - mark["now_s"]) * 1e3
+        n = reqs - mark["reqs"]
+        hits = self.walk.counts[IMAGE_HIT] - mark["image_hits"]
+        obs = WindowObs(
+            requests=n, span_ms=span_ms,
+            busy_ms=max(0.0, self.batcher.busy_ms - mark["busy"]),
+            decode_frac=1.0 - hits / n if n else 1.0)
+        self._as_mark = {"reqs": reqs, "now_s": now_s,
+                         "busy": self.batcher.busy_ms,
+                         "image_hits": self.walk.counts[IMAGE_HIT]}
+        ev = self.autoscaler.step(obs)
+        if ev is not None:
+            self._apply_scale(ev.state)
+
+    def _apply_scale(self, state) -> None:
+        self._account_provisioned()
+        self.gpus_per_node = int(state.gpus_per_node)
+        if state.cache_bytes_per_node != self._cache_bytes_per_node:
+            self._cache_bytes_per_node = float(state.cache_bytes_per_node)
+            self.walk.set_cache_capacity(self._cache_bytes_per_node)
 
     def _flush(self) -> Dict[int, np.ndarray]:
         try:
@@ -713,6 +789,16 @@ class ServingEngine:
 
     def summary(self) -> Dict[str, Any]:
         out = self.walk.summary()
+        # decode-fleet observability, mirroring the simulator backend's keys
+        self._account_provisioned()
+        out["gpu_seconds"] = self.batcher.busy_ms / 1e3
+        out["decode_gpus"] = len(self.nodes) * self.gpus_per_node
+        out["decode_util"] = (min(1.0, self.batcher.busy_ms / self._gpu_ms)
+                              if self._gpu_ms > 0 else 0.0)
+        out["provisioned_gpu_ms"] = self._gpu_ms
+        out["provisioned_cache_byte_ms"] = self._cache_byte_ms
+        if self.autoscaler is not None:
+            out.update(self.autoscaler.summary())
         out["decode_batches"] = self.batcher.stats["batches"]
         out["decodes"] = self.batcher.stats["decodes"]
         out["coalesced_decodes"] = self.batcher.stats["coalesced"]

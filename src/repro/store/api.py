@@ -13,6 +13,7 @@ from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro.core.autoscale import AutoscaleConfig
 from repro.core.dual_cache import FULL_MISS, IMAGE_HIT, LATENT_HIT
 from repro.core.latent_store import (DEFAULT_OBJECT_BYTES,
                                      StoreLatencyModel)
@@ -125,6 +126,15 @@ class StoreConfig:
     store_latency: StoreLatencyModel = dataclasses.field(
         default_factory=StoreLatencyModel)
     seed: int = 0
+    # -- elastic autoscaling (off by default: provably a no-op) --------------
+    #: Run the cost-model-driven :class:`~repro.core.autoscale.
+    #: AutoscaleController`: every control window the backend trades
+    #: decode-GPU count against cache bytes (and, on a sharded cluster,
+    #: shard count) for the cheapest SLO-feasible plant.  ``False`` builds
+    #: no controller at all — the default path is untouched.
+    autoscale: bool = False
+    #: Control-loop knobs; ``None`` = :class:`AutoscaleConfig` defaults.
+    autoscale_cfg: Optional[AutoscaleConfig] = None
 
     def __post_init__(self) -> None:
         if self.pixel_format not in ("uint8", "float32"):

@@ -235,6 +235,29 @@ class SimBackend:
         self.clock_ms = 0.0
         self._seq = 0
         self.log = RequestLog()
+        # live plant dimensions — never mutate self.cfg (it may be shared
+        # across backends/shards); the autoscaler moves these instead
+        self.gpus_per_node = int(self.cfg.gpus_per_node)
+        self.cache_bytes_per_node = float(self.cfg.cache_bytes_per_node)
+        # provisioned-resource time integrals (the $-per-M-req inputs);
+        # accumulated lazily against the replay clock, always on
+        self._gpu_ms = 0.0
+        self._cache_byte_ms = 0.0
+        self._acct_mark_ms = 0.0
+        self.autoscaler = None
+        if self.cfg.autoscale:
+            from repro.core.autoscale import (AutoscaleConfig,
+                                              AutoscaleController, PlantState)
+            from repro.core.cost_model import params_for_store
+            acfg = self.cfg.autoscale_cfg or AutoscaleConfig()
+            if self.cfg.autoscale_cfg is None:
+                import dataclasses as _dc
+                acfg = _dc.replace(acfg, params=params_for_store(self.cfg))
+            self.autoscaler = AutoscaleController(
+                PlantState(self.gpus_per_node, len(self.walk.caches),
+                           self.cache_bytes_per_node), acfg)
+            # per-window observation marks
+            self._as_mark = {"reqs": 0, "clock": 0.0, "busy": 0.0}
 
     # -- object lifecycle ---------------------------------------------------
     def put(self, oid: int, image=None, latent=None,
@@ -351,7 +374,58 @@ class SimBackend:
         # compaction step (both no-ops without a segment log)
         self.store.flush()
         self.store.maybe_compact()
+        self._account_provisioned()
+        if self.autoscaler is not None:
+            self._autoscale_step()
         return out
+
+    # -- elastic autoscaling --------------------------------------------------
+    def _account_provisioned(self) -> None:
+        """Advance the provisioned-resource integrals to the current
+        replay clock (GPU-ms and cache-byte-ms actually *held*, busy or
+        not — what a bill charges and what the autoscaler trades)."""
+        dt = self.clock_ms - self._acct_mark_ms
+        if dt <= 0.0:
+            return
+        self._gpu_ms += dt * sum(q.n_gpus for q in self.gpus)
+        self._cache_byte_ms += dt * self.cache_bytes_per_node * len(self.gpus)
+        self._acct_mark_ms = self.clock_ms
+
+    def _autoscale_step(self) -> None:
+        from repro.core.autoscale import WindowObs
+        mark = self._as_mark
+        n = len(self.log.latency_ms)
+        if n - mark["reqs"] < self.autoscaler.cfg.window:
+            return
+        span = self.clock_ms - mark["clock"]
+        busy = sum(q.busy_ms for q in self.gpus)
+        outcomes = np.asarray(self.log.outcome[mark["reqs"]:n])
+        queue = np.asarray(self.log.queue_ms[mark["reqs"]:n])
+        obs = WindowObs(
+            requests=n - mark["reqs"], span_ms=span,
+            busy_ms=max(0.0, busy - mark["busy"]),
+            decode_frac=float(np.mean(outcomes != 0)) if n > mark["reqs"]
+            else 1.0,
+            queue_p99_ms=float(np.percentile(queue, 99)) if queue.size
+            else 0.0)
+        self._as_mark = {"reqs": n, "clock": self.clock_ms, "busy": busy}
+        ev = self.autoscaler.step(obs)
+        if ev is not None:
+            self._apply_scale(ev.state)
+
+    def _apply_scale(self, state) -> None:
+        """Actuate a controller decision: integrals are settled at the old
+        plant first, then GPU queues resize (in-flight decodes preserved)
+        and the tier walk re-splits cache capacity under the tuner's
+        current alpha."""
+        self._account_provisioned()
+        if state.gpus_per_node != self.gpus_per_node:
+            self.gpus_per_node = int(state.gpus_per_node)
+            for q in self.gpus:
+                q.resize(self.gpus_per_node)
+        if state.cache_bytes_per_node != self.cache_bytes_per_node:
+            self.cache_bytes_per_node = float(state.cache_bytes_per_node)
+            self.walk.set_cache_capacity(self.cache_bytes_per_node)
 
     def serve_stream(self, requests, runtime_cfg=None):
         """Open-loop stream replay through the event-loop serving runtime:
@@ -403,6 +477,16 @@ class SimBackend:
         for key in ("mean_ms", "p50_ms", "p95_ms", "p99_ms"):
             if key in s:
                 out[key] = s[key]
+        # decode-fleet observability (the autoscaler's feedback signal)
+        self._account_provisioned()
+        busy = float(sum(q.busy_ms for q in self.gpus))
+        out["gpu_seconds"] = busy / 1e3
+        out["decode_gpus"] = int(sum(q.n_gpus for q in self.gpus))
+        out["decode_util"] = busy / self._gpu_ms if self._gpu_ms > 0 else 0.0
+        out["provisioned_gpu_ms"] = self._gpu_ms
+        out["provisioned_cache_byte_ms"] = self._cache_byte_ms
+        if self.autoscaler is not None:
+            out.update(self.autoscaler.summary())
         if self.durable_log is not None:
             out.update(_durable_summary(self.store))
         return out

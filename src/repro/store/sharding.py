@@ -211,6 +211,31 @@ class ShardedLatentBox:
             raise ValueError("replication must be >= 1")
         self._mode = next(iter(self.shards.values())).backend.name
         self._decode_ewma = float(self.cfg.decode_ms)
+        # -- elastic shard autoscaling (off by default) -----------------------
+        # composition: each shard backend already runs its own gpu/cache
+        # controller (same cfg.autoscale flag); the CLUSTER runs a second
+        # controller owning ONLY the shard knob, so the two never fight
+        # over a dimension.  Scale-down safety is the guard hook: never
+        # mid-reshard, never while a shard is dead, never below
+        # replication R.
+        self._resharding = False
+        self.autoscaler = None
+        if self.cfg.autoscale:
+            from repro.core.autoscale import (AutoscaleConfig,
+                                              AutoscaleController, PlantState)
+            from repro.core.cost_model import params_for_store
+            base = self.cfg.autoscale_cfg or dataclasses.replace(
+                AutoscaleConfig(), params=params_for_store(self.cfg))
+            acfg = dataclasses.replace(
+                base, shard_knob=True, gpu_knob=False, cache_knob=False,
+                min_shards=max(base.min_shards, self.replication))
+            self.autoscaler = AutoscaleController(
+                PlantState(self.cfg.gpus_per_node, self._nodes_per_shard,
+                           self.cfg.cache_bytes_per_node,
+                           n_shards=self.n_shards),
+                acfg, shard_guard=self._scale_down_safe)
+            self._as_mark: Dict[str, Any] = {"reqs": 0, "clock": 0.0,
+                                             "busy": 0.0, "logs": {}}
 
     # -- persistent-topology plumbing ----------------------------------------
     def _meta_path(self) -> Optional[str]:
@@ -844,10 +869,14 @@ class ShardedLatentBox:
         """Grow the cluster by one shard (K fresh global nodes); migrates
         exactly the keys whose ring owner moved onto the new nodes."""
         self._check_reshardable()
-        shard = self._spawn_shard()
-        moved = self._migrate_remapped()
-        self._write_meta()
-        self._sync_replicas()
+        self._resharding = True
+        try:
+            shard = self._spawn_shard()
+            moved = self._migrate_remapped()
+            self._write_meta()
+            self._sync_replicas()
+        finally:
+            self._resharding = False
         return ReshardReport(n_keys=len(self._keys), n_moved=moved,
                              n_shards=self.n_shards, shard_id=shard.shard_id)
 
@@ -862,27 +891,31 @@ class ShardedLatentBox:
         if self.n_shards == 1:
             raise ValueError("cannot remove the last shard")
         self._check_reshardable()
-        victim = self.shards[shard_id]
-        for n in victim.node_names:
-            self.ring.remove_node(n)
-            del self._shard_of_node[n]
-        moved = self._migrate_remapped()
-        del self.shards[shard_id]
-        # holders hosted on the victim close before its directory goes
-        for key in [k for k in self._holders if k[0] == shard_id]:
-            self._holders.pop(key).close()
-            self._designated.pop(key, None)
-        close = getattr(victim.backend, "close", None)
-        if close is not None:
-            close()
-        vlog = getattr(victim.backend, "durable_log", None)
-        if vlog is not None:
-            shutil.rmtree(vlog.path, ignore_errors=True)
-        self._stalled.pop(shard_id, None)
-        self._journal.pop(shard_id, None)
-        self._lat_window.pop(shard_id, None)
-        self._write_meta()
-        self._sync_replicas()         # drops holders FOR the victim too
+        self._resharding = True
+        try:
+            victim = self.shards[shard_id]
+            for n in victim.node_names:
+                self.ring.remove_node(n)
+                del self._shard_of_node[n]
+            moved = self._migrate_remapped()
+            del self.shards[shard_id]
+            # holders hosted on the victim close before its directory goes
+            for key in [k for k in self._holders if k[0] == shard_id]:
+                self._holders.pop(key).close()
+                self._designated.pop(key, None)
+            close = getattr(victim.backend, "close", None)
+            if close is not None:
+                close()
+            vlog = getattr(victim.backend, "durable_log", None)
+            if vlog is not None:
+                shutil.rmtree(vlog.path, ignore_errors=True)
+            self._stalled.pop(shard_id, None)
+            self._journal.pop(shard_id, None)
+            self._lat_window.pop(shard_id, None)
+            self._write_meta()
+            self._sync_replicas()     # drops holders FOR the victim too
+        finally:
+            self._resharding = False
         return ReshardReport(n_keys=len(self._keys), n_moved=moved,
                              n_shards=self.n_shards, shard_id=shard_id)
 
@@ -1000,7 +1033,82 @@ class ShardedLatentBox:
                 out[i + k] = r
             i += n
             self._req_index += n
+        if self.autoscaler is not None:
+            self._autoscale_step()
         return out  # type: ignore[return-value]
+
+    # -- cluster-level elastic autoscaling (the shard knob) ------------------
+    def _scale_down_safe(self) -> bool:
+        """Scale-down safety hook handed to the controller: a shard may
+        only be removed from a fully live, quiescent cluster with live
+        shards to spare beyond the replication factor."""
+        return (not self._dead and not self._resharding
+                and self.n_shards > 1
+                and len(self.live_shard_ids) > self.replication)
+
+    def _cluster_busy_ms(self) -> float:
+        busy = 0.0
+        for sid in self.live_shard_ids:
+            b = self.shards[sid].backend
+            if hasattr(b, "gpus"):                       # sim backend
+                busy += sum(q.busy_ms for q in b.gpus)
+            else:                                        # engine backend
+                busy += b.engine.batcher.busy_ms
+        return busy
+
+    def _cluster_clock_ms(self) -> float:
+        clocks = [b.clock_ms for sid in self.live_shard_ids
+                  if hasattr(b := self.shards[sid].backend, "clock_ms")]
+        if clocks:
+            return max(clocks)
+        return self.cfg.now_s() * 1e3                    # engine: wall clock
+
+    def _autoscale_step(self) -> None:
+        from repro.core.autoscale import WindowObs
+        mark = self._as_mark
+        if self._req_index - mark["reqs"] < self.autoscaler.cfg.window:
+            return
+        if self._dead or self._resharding:
+            return                     # observe only a quiescent cluster
+        clock = self._cluster_clock_ms()
+        busy = self._cluster_busy_ms()
+        # queue-delay tail over the window: per-shard log tails since each
+        # shard's last mark (engine shards have no plant log -> no signal)
+        samples: List[float] = []
+        log_marks: Dict[int, int] = {}
+        for sid in self.live_shard_ids:
+            log = getattr(self.shards[sid].backend, "log", None)
+            if log is None:
+                continue
+            n = len(log.queue_ms)
+            samples.extend(log.queue_ms[mark["logs"].get(sid, 0):n])
+            log_marks[sid] = n
+        obs = WindowObs(
+            requests=self._req_index - mark["reqs"],
+            span_ms=max(0.0, clock - mark["clock"]),
+            # busy can regress when a shard (and its counters) was removed
+            busy_ms=max(0.0, busy - mark["busy"]),
+            decode_frac=1.0,
+            queue_p99_ms=(float(np.percentile(np.asarray(samples), 99))
+                          if samples else 0.0))
+        self._as_mark = {"reqs": self._req_index, "clock": clock,
+                         "busy": busy, "logs": log_marks}
+        ev = self.autoscaler.step(obs)
+        if ev is None:
+            return
+        if ev.action == "shard_up":
+            self.add_shard()
+        elif ev.action == "shard_down":
+            self.remove_shard(max(self.live_shard_ids))
+        # topology changed under the marks: restart the window cleanly
+        self._as_mark = {"reqs": self._req_index,
+                         "clock": self._cluster_clock_ms(),
+                         "busy": self._cluster_busy_ms(), "logs": {}}
+        # keep the controller's plant in lockstep with reality (an action
+        # other than the shard knob cannot happen here, but be exact)
+        if self.autoscaler.state.n_shards != self.n_shards:
+            self.autoscaler.state = dataclasses.replace(
+                self.autoscaler.state, n_shards=self.n_shards)
 
     def _serve_segment(self, oids: List[int],
                        timestamps_ms) -> List[GetResult]:
@@ -1258,7 +1366,12 @@ class ShardedLatentBox:
                "pixel_cached_bytes",
                # persistent clusters: on-disk truth sums across shard logs
                "durable_disk_bytes", "durable_live_bytes",
-               "durable_segments", "segments_compacted")
+               "durable_segments", "segments_compacted",
+               # decode-fleet observability + provisioned-cost integrals
+               "gpu_seconds", "decode_gpus", "provisioned_gpu_ms",
+               "provisioned_cache_byte_ms",
+               # per-shard gpu/cache controllers' event counts
+               "scale_up_events", "scale_down_events")
 
     def summary(self) -> Dict[str, Any]:
         """Cluster-level stats: additive counters sum across shards, alpha
@@ -1299,6 +1412,22 @@ class ShardedLatentBox:
             rewrite = sum(lg.rewrite_bytes_written for lg in logs)
             out["write_amplification"] = ((user + rewrite) / user
                                           if user else 1.0)
+        # cluster decode utilization recomputes from the summed integrals
+        # (time-weighted across resizes; a mean of per-shard utilizations
+        # would weight idle shards wrong)
+        if out.get("provisioned_gpu_ms"):
+            out["decode_util"] = (out.get("gpu_seconds", 0.0) * 1e3
+                                  / out["provisioned_gpu_ms"])
+        if self.autoscaler is not None:
+            # merge the cluster (shard-knob) controller's events into the
+            # summed per-shard counters; topology keys come from reality
+            cs = self.autoscaler.summary()
+            out["scale_up_events"] = (out.get("scale_up_events", 0)
+                                      + cs["scale_up_events"])
+            out["scale_down_events"] = (out.get("scale_down_events", 0)
+                                        + cs["scale_down_events"])
+            out["autoscale_shards"] = self.n_shards
+            out["autoscale_windows"] = cs["autoscale_windows"]
         out["replication"] = self.replication
         if self.replication > 1 or self._dead or self.fault_plan.fired:
             out["failovers"] = self.failovers

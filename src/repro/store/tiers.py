@@ -153,6 +153,12 @@ class DualCacheTier(Tier):
             self._notify_evict(oid)
         return found
 
+    def set_capacity(self, capacity_bytes: float) -> None:
+        """Autoscaler capacity handoff: resize the node's total cache
+        bytes, preserving the tuner's alpha split (evictions fire the
+        registered tier listeners via the ``on_evict`` hooks)."""
+        self.cache.set_capacity(capacity_bytes)
+
     @property
     def resident_bytes(self) -> float:
         return self.cache.resident_bytes

@@ -133,6 +133,13 @@ class TierWalk:
         cache.store(oid, format="latent")
         return oid in cache.cache.latent_tier
 
+    def set_cache_capacity(self, bytes_per_node: float) -> None:
+        """Autoscaler capacity handoff: resize every node's total cache
+        bytes.  Alpha (the pixel/latent split) is preserved per node —
+        the marginal-hit tuner keeps owning the split."""
+        for tier in self.caches:
+            tier.set_capacity(bytes_per_node)
+
     # -- lifecycle -----------------------------------------------------------
     def delete(self, oid: int) -> bool:
         """Remove an object from every tier (caches, durable, recipes)."""

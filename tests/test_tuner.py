@@ -123,6 +123,81 @@ class TestZipfDriftReconvergence:
         assert ad.mean_ms <= worst * 1.05
 
 
+class TestExternalCapacityResize:
+    """The autoscaler's capacity-handoff contract (``set_capacity``): the
+    controller owns the cache's TOTAL bytes, the marginal-hit tuner keeps
+    sole ownership of the alpha split — so an external resize must
+    preserve alpha, evict through the normal tail path, and leave the
+    tuner's gradient walk fully functional."""
+
+    IMG, LAT = 100.0, 20.0
+
+    def make(self, capacity=4000.0, alpha=0.5):
+        return DualFormatCache(capacity, alpha=alpha, tau=0.1,
+                               promote_threshold=3,
+                               image_size_fn=lambda _: self.IMG,
+                               latent_size_fn=lambda _: self.LAT)
+
+    def test_alpha_preserved_and_split_rescaled(self):
+        c = self.make(alpha=0.7)
+        c.set_capacity(1000.0)
+        assert c.alpha == pytest.approx(0.7)
+        assert c.image_tier.capacity == pytest.approx(700.0)
+        assert c.latent_tier.capacity == pytest.approx(300.0)
+
+    def test_shrink_evicts_with_invariants(self):
+        c = self.make()
+        for i in range(100):
+            c.admit_latent(i)
+        c.set_capacity(400.0)
+        assert c.latent_tier.resident_bytes <= c.latent_tier.capacity
+        assert c.image_tier.resident_bytes <= c.image_tier.capacity
+        c.check_invariants()
+
+    def test_tuner_keeps_stepping_after_resize(self):
+        c = self.make(alpha=0.5)
+        tuner = MarginalHitTuner(c, TunerConfig(window=10, step=0.05))
+        c.stats = stats(img_tail=100, lat_tail=0)
+        tuner.end_window()
+        assert c.alpha == pytest.approx(0.55)
+        c.set_capacity(1000.0)                    # external shrink
+        assert c.alpha == pytest.approx(0.55)     # alpha untouched
+        c.stats = stats(img_tail=100, lat_tail=0)
+        rec = tuner.end_window()
+        # the gradient walk continues from the preserved operating point
+        assert rec.gradient < 0 and c.alpha == pytest.approx(0.60)
+        assert c.image_tier.capacity == pytest.approx(600.0)
+        c.check_invariants()
+
+    def test_alpha_stays_clamped_after_resize(self):
+        c = self.make(alpha=0.98)
+        tuner = MarginalHitTuner(c, TunerConfig(window=10, step=0.05,
+                                                alpha_max=1.0))
+        c.set_capacity(500.0)
+        c.stats = stats(img_tail=100, lat_tail=0)
+        tuner.end_window()
+        assert 0.0 <= c.alpha <= 1.0
+
+    def test_reconverges_after_capacity_step(self):
+        """A mid-run halving of total bytes must not strand alpha: under
+        an unchanged latent-favoring signal the tuner walks back to the
+        same clamp-free equilibrium side it held before the resize."""
+        c = self.make(alpha=0.5)
+        tuner = MarginalHitTuner(c, TunerConfig(window=10, step=0.05,
+                                                alpha_min=0.1))
+        for _ in range(6):
+            c.stats = stats(img_tail=0, lat_tail=200)
+            tuner.end_window()
+        pre = c.alpha
+        c.set_capacity(2000.0)
+        for _ in range(6):
+            c.stats = stats(img_tail=0, lat_tail=200)
+            tuner.end_window()
+        assert c.alpha <= pre                     # kept moving latent-ward
+        assert c.alpha >= 0.1 - 1e-9              # ... inside the clamp
+        c.check_invariants()
+
+
 class TestEndToEndAdaptation:
     def test_adaptive_beats_or_matches_worst_static(self):
         rng = np.random.default_rng(0)
